@@ -1,0 +1,33 @@
+"""Paper Figure 8: accuracy / perplexity as a function of alpha.
+
+Reproduced claims: performance is flat-good for alpha <= ~0.55 and collapses as
+alpha -> 1 (per-token limit); the optimum sits at small alpha. Left panel: W8A8
+accuracy (paper: OPT-6.7B Lambada); right: W4A8 perplexity (paper: LLaMA2-13B).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common as C
+from benchmarks.regimes import REGIMES
+from repro.core import qlinear as ql
+
+
+def run(quick: bool = False):
+    cfg, params = C.get_bench_model()
+    planted = C.plant_outliers(params, cfg, **REGIMES["opt_xl"])
+    nb = 2 if quick else 4
+    alphas = [0.15, 0.55, 0.95] if quick else \
+        [0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.65, 0.75, 0.85, 0.95, 1.0]
+    lines = ["fig8,alpha,acc_w8a8,ppl_w4a8"]
+    for alpha in alphas:
+        qc8 = dataclasses.replace(ql.W8A8_CROSSQUANT, alpha=alpha)
+        qc4 = dataclasses.replace(ql.W4A8_G128, alpha=alpha)
+        acc = C.eval_acc(cfg, planted, qc8, n_batches=nb)
+        ppl = C.eval_ppl(cfg, planted, qc4, n_batches=nb)
+        lines.append(f"fig8,{alpha},{acc:.4f},{ppl:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

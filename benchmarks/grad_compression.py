@@ -1,0 +1,56 @@
+"""Beyond-paper benchmark: CrossQuant geometry applied to gradient compression
+(DESIGN.md §3.5).
+
+Measures (a) the quantization-kernel fraction of real training gradients under
+per-tensor vs CrossQuant int8 scaling, and (b) end-to-end training-loss impact of
+int8 gradient compression with/without error feedback. The claim transplanted from
+the paper: row^alpha x col^(1-alpha) scaling shrinks the gradient quantization
+kernel by an order of magnitude, making int8 DP all-reduce payloads nearly lossless.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.training import compression as comp_lib
+from repro.training import optimizer as opt_lib, trainer
+from repro.models import model as M
+
+
+def run(quick: bool = False):
+    cfg = C.BENCH_CFG
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    steps = 15 if quick else 40
+    lines = ["gradcomp,scheme,error_feedback,final_loss,grad_kernel_frac"]
+
+    # kernel fraction of an actual early-training gradient
+    batch = C.train_batches(0)
+    (_, _), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, batch, cfg, remat=False), has_aux=True)(params)
+    g = grads["blocks"][0]["attn"]["wq"]["w"]          # (L, d, hd) stacked
+    g2 = g.reshape(-1, g.shape[-1])
+    fr = comp_lib.gradient_kernel_fractions(g2)
+
+    for scheme, ef in [("none", False), ("per_tensor", False), ("per_tensor", True),
+                       ("crossquant", False), ("crossquant", True)]:
+        ccfg = comp_lib.CompressionConfig(scheme=scheme, error_feedback=ef)
+        opt_cfg = opt_lib.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=steps)
+        step_fn = jax.jit(trainer.make_train_step(cfg, opt_cfg, compression=ccfg))
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        opt = opt_lib.init(p)
+        err = comp_lib.init_error_state(p)
+        loss = float("nan")
+        for s in range(steps):
+            p, opt, err, m = step_fn(p, opt, err, C.train_batches(s))
+            loss = float(m["loss"])
+        kf = (0.0 if scheme == "none"
+              else float(fr[scheme] if scheme in fr else 0.0))
+        lines.append(f"gradcomp,{scheme},{ef},{loss:.4f},{kf:.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,17 @@
+"""Outlier regimes for the benchmark model (tuned so the *per-token* quantization
+kernel reproduces the paper's Fig. 4 bands).
+
+  llama_like : mild outliers  -> per-token kernel ~10-15%% (paper: ~11%% for LLaMA)
+  opt_like   : strong         -> per-token kernel ~45-50%% (paper: 40-55%% for OPT)
+  opt_xl     : extreme        -> per-token kernel ~65%%    (the Fig. 1 regime where
+               per-token A8 accuracy collapses to chance while CrossQuant holds)
+
+CrossQuant's kernel stays ~4%% in all regimes (paper: ~16%% OPT / <0.1%% LLaMA; the
+ordering and the collapse threshold are the reproduced phenomena — DESIGN.md §5.2).
+"""
+REGIMES = {
+    "none": None,
+    "llama_like": dict(frac=0.03, magnitude=40.0),
+    "opt_like": dict(frac=0.08, magnitude=150.0),
+    "opt_xl": dict(frac=0.12, magnitude=300.0),
+}

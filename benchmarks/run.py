@@ -1,0 +1,57 @@
+"""Benchmark runner: one module per paper table/figure (+ beyond-paper benches).
+
+    PYTHONPATH=src python -m benchmarks.run            # full pass
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-speed subset
+
+Each module runs in its own subprocess: a single long-lived process accumulates
+XLA-CPU JIT dylibs across hundreds of compiled graphs and eventually fails with
+"Failed to materialize symbols"; process isolation resets the JIT per module.
+
+Prints CSV sections; each line is ``<bench>,<key...>,<value...>``. The mapping to
+the paper's tables/figures is in DESIGN.md §7; EXPERIMENTS.md quotes these outputs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+MODULES = [
+    "table1_alpha", "table2_ppl", "table3_tasks", "fig4_kernels",
+    "fig67_threshold", "fig8_alpha_sweep", "grad_compression", "qgemm_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    t_all = time.time()
+    failures = []
+    env = {**os.environ, "PYTHONPATH": os.environ.get("PYTHONPATH", "src")}
+    for name in mods:
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        code = (f"from benchmarks.{name} import run\n"
+                f"print('\\n'.join(run(quick={args.quick!r})))")
+        r = subprocess.run([sys.executable, "-c", code], env=env, text=True,
+                           capture_output=True, timeout=3600)
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            failures.append((name, r.stderr.strip().splitlines()[-1][:200]
+                             if r.stderr.strip() else "unknown"))
+            print(f"{name},ERROR,see stderr", flush=True)
+            sys.stderr.write(r.stderr[-2000:])
+        print(f"# {name} took {time.time() - t0:.0f}s", flush=True)
+    print(f"# total {time.time() - t_all:.0f}s")
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 2: perplexity under W8A8 / W4A8-g128 / W4A4 across methods
+(per-token, SmoothQuant, CrossQuant; weight side per-channel or g128 groups), on the
+llama-like and opt-like outlier regimes.
+
+Reproduced claims: (1) CrossQuant >= SmoothQuant >= per-token at W8A8; (2) per-token
+collapses at W4A4 while CrossQuant degrades gracefully; (3) group-wise W4 with
+CrossQuant activations tracks the fp baseline.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from benchmarks.regimes import REGIMES
+from repro.core import qlinear as ql
+
+GROUPS = [
+    ("fp16", None),
+    ("per_token_w8a8", ql.W8A8_PER_TOKEN),
+    ("smoothquant_w8a8", ql.W8A8_SMOOTHQUANT),
+    ("crossquant_w8a8", ql.W8A8_CROSSQUANT),
+    ("per_token_w4a8_g128", ql.W4A8_G128_PER_TOKEN),
+    ("awq_w4a8_g128", ql.W4A8_G128_AWQ),
+    ("crossquant_w4a8_g128", ql.W4A8_G128),
+    ("crossquant+awq_w4a8_g128", ql.W4A8_G128_CQ_AWQ),
+    ("per_token_w4a4", ql.W4A4_PER_TOKEN),
+    ("crossquant_w4a4", ql.W4A4),
+    ("crossquant_w+a_w4a4", ql.W4A4_CQW),
+]
+
+
+def run(quick: bool = False):
+    cfg, params = C.get_bench_model()
+    nb = 2 if quick else 6
+    lines = ["table2,regime,method,ppl"]
+    regimes = ["llama_like", "opt_like"] if not quick else ["opt_like"]
+    for regime in regimes:
+        planted = (params if REGIMES[regime] is None
+                   else C.plant_outliers(params, cfg, **REGIMES[regime]))
+        for name, qc in GROUPS:
+            ppl = C.eval_ppl(cfg, planted, qc, n_batches=nb)
+            lines.append(f"table2,{regime},{name},{ppl:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

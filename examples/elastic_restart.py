@@ -1,0 +1,109 @@
+"""Elastic restart: lose a host mid-training, continue on a smaller mesh.
+
+Simulates an 8-device cluster (XLA host-device override — set BEFORE importing
+jax). Training starts on a (4, 2) mesh; at the injected failure the supervisor
+restores the last checkpoint and the rebuild hook re-lays-out the state on a (2, 2)
+mesh (data parallelism absorbs the loss, TP degree is pinned by the weight layout —
+runtime/elastic.py). Loss continues from where it left off.
+
+    PYTHONPATH=src:. python examples/elastic_restart.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get
+from repro.data import make_train_batches
+from repro.models import model as M
+from repro.runtime import FailureInjector, Supervisor
+from repro.runtime.elastic import make_elastic_mesh
+from repro.sharding import hints, planner
+from repro.training import optimizer as opt_lib, trainer
+
+import dataclasses
+
+STEPS = 40
+GLOBAL_BATCH = 8
+SEQ = 64
+TP = 2
+
+
+def main() -> None:
+    cfg = get("starcoder2-7b", smoke=True)
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=SEQ,
+                                global_batch=GLOBAL_BATCH)
+    opt_cfg = opt_lib.AdamWConfig(lr=3e-3, warmup_steps=4, total_steps=STEPS)
+    batch_fn = make_train_batches(cfg.vocab, SEQ, GLOBAL_BATCH, seed=0)
+    raw_step = trainer.make_train_step(cfg, opt_cfg)
+
+    world = {"devices": list(jax.devices())}          # 8 "hosts"
+
+    def build_mesh():
+        return make_elastic_mesh(world["devices"], TP, global_batch=GLOBAL_BATCH)
+
+    def shardings_for(mesh, state):
+        plan = planner.make_plan(cfg, shape, mesh)
+        return {
+            "params": planner.param_shardings(state["params"], cfg, plan, mesh),
+            "opt": opt_lib.OptState(
+                planner.replicated(state["opt"].step, mesh),
+                planner.param_shardings(state["opt"].m, cfg, plan, mesh),
+                planner.param_shardings(state["opt"].v, cfg, plan, mesh)),
+        }
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": opt_lib.init(params)}
+    mesh_box = {"mesh": build_mesh()}
+    print(f"starting on mesh {dict(mesh_box['mesh'].shape)}")
+
+    def place(state, mesh):
+        sh = shardings_for(mesh, state)
+        return {
+            "params": jax.tree_util.tree_map(jax.device_put, state["params"],
+                                             sh["params"]),
+            "opt": jax.tree_util.tree_map(jax.device_put, state["opt"], sh["opt"]),
+        }
+
+    state = place(state, mesh_box["mesh"])
+    jit_step = jax.jit(raw_step)
+
+    def step_fn(state, step):
+        if step == STEPS // 2 and len(world["devices"]) == 8:
+            # Out-of-band failure signal: 2 devices (one "host") die.
+            raise_failure = True
+        else:
+            raise_failure = False
+        if raise_failure:
+            from repro.runtime import WorkerFailure
+            world["devices"] = world["devices"][:6]
+            raise WorkerFailure("host 3 lost (2 devices)")
+        batch = {k: jnp.asarray(v) for k, v in batch_fn(step).items()}
+        with mesh_box["mesh"]:
+            p, o, metrics = jit_step(state["params"], state["opt"], batch)
+        if step % 8 == 0:
+            print(f"  step {step:3d} loss={float(metrics['loss']):.3f} "
+                  f"mesh={dict(mesh_box['mesh'].shape)}")
+        return {"params": p, "opt": o}, {"loss": float(metrics["loss"])}
+
+    def rebuild(state):
+        mesh_box["mesh"] = build_mesh()
+        print(f"  !! elastic rebuild -> mesh {dict(mesh_box['mesh'].shape)} "
+              f"({len(world['devices'])} devices survive)")
+        return place(state, mesh_box["mesh"])
+
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="repro_elastic_"), keep_n=3)
+    sup = Supervisor(ckpt, ckpt_every=8)
+    result = sup.run(state, step_fn, STEPS, rebuild=rebuild)
+    print(f"done: step={result.step} restarts={result.restarts} "
+          f"final loss={result.metrics_history[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpoint substrate: async sharded checkpoints with atomic manifests and
+elastic (mesh-changing) restore."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

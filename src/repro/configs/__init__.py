@@ -1,0 +1,5 @@
+"""Arch registry: repro.configs.get(name) / all_archs() / SHAPES."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, get, all_archs, register, cell_supported,
+    with_quant, with_padded_heads,
+)

@@ -1,0 +1,225 @@
+"""Config system: model + shape + run configuration, with an arch registry.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module under
+``repro/configs`` and registers itself (full config + reduced smoke config).
+Shapes are global (the LM-family shape set of the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.core.qlinear import QuantConfig, FP
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    act: str = "silu_glu"             # silu_glu | gelu_glu | gelu | relu2
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None      # sliding window for local layers
+    layer_pattern: str = "global"     # global | local_global (gemma2 alternation)
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    embed_scale: bool = False         # gemma: x *= sqrt(d_model)
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+
+    # hybrid (zamba2): one shared attention+MLP block applied every `attn_every` layers
+    attn_every: int = 0
+
+    # modality frontend stubs
+    frontend: str = "none"            # none | vision_stub | audio_stub
+    frontend_dim: int = 0
+    n_patches: int = 0
+
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    quant: QuantConfig = FP
+
+    # -- derived ----------------------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/lm-head rows padded to a multiple of 256 so the vocab dimension
+        divides every production TP degree (16/32/64); logits shard over the model
+        axis instead of replicating (a 16× memory cliff on 50k-vocab models —
+        EXPERIMENTS.md §Perf). Padded ids are masked to -1e9 in the lm head."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: no full-attention layer whose cost is O(S^2) over the
+        whole 500k context at prefill, and decode state is O(1) or O(T) linear."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D model FLOPs and memory estimates)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        n = V * d                                     # embedding
+        if not self.tie_embeddings:
+            n += V * d
+        per_layer = 0
+        if self.family in ("ssm", "hybrid"):
+            di, N, G = self.d_inner, self.ssm_state, self.ssm_groups
+            conv_ch = di + 2 * G * N
+            per_layer = d * (2 * di + 2 * G * N + self.ssm_heads)   # in_proj
+            per_layer += conv_ch * self.ssm_conv                     # conv
+            per_layer += di * d                                      # out_proj
+            per_layer += 3 * self.ssm_heads                          # A, D, dt_bias
+            n += per_layer * L
+            if self.family == "hybrid" and self.attn_every:
+                hd = self.n_heads * self.head_dim
+                kv = self.n_kv_heads * self.head_dim
+                n += d * (hd + 2 * kv) + hd * d + 2 * d * self.d_ff  # one shared block
+            return n
+        hd = self.n_heads * self.head_dim
+        kv = self.n_kv_heads * self.head_dim
+        attn = d * (hd + 2 * kv) + hd * d
+        if self.n_experts:
+            dff = self.d_ff_expert or self.d_ff
+            gate_mult = 3 if self.act.endswith("_glu") else 2
+            mlp = d * self.n_experts * dff * gate_mult / (1 if True else 1)
+            mlp = self.n_experts * (gate_mult * d * dff)
+            mlp += d * self.n_experts                                # router
+            mlp += self.n_shared_experts * (gate_mult * d * self.d_ff)
+        else:
+            gate_mult = 3 if self.act.endswith("_glu") else 2
+            mlp = gate_mult * d * self.d_ff
+        n += L * (attn + mlp)
+        return n
+
+    def active_param_count(self) -> int:
+        """MoE: parameters touched per token (for 6·N_active·D)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        hd = self.n_heads * self.head_dim
+        kv = self.n_kv_heads * self.head_dim
+        attn = d * (hd + 2 * kv) + hd * d
+        gate_mult = 3 if self.act.endswith("_glu") else 2
+        dff = self.d_ff_expert or self.d_ff
+        mlp = self.top_k * gate_mult * d * dff + d * self.n_experts
+        mlp += self.n_shared_experts * (gate_mult * d * self.d_ff)
+        n = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return n + L * (attn + mlp)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_MODULES = [
+    "mamba2_130m", "llama4_scout_17b_a16e", "granite_moe_3b_a800m", "nemotron_4_15b",
+    "deepseek_coder_33b", "gemma2_9b", "starcoder2_7b", "zamba2_1_2b", "pixtral_12b",
+    "hubert_xlarge",
+]
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig, smoke: ModelConfig) -> None:
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+
+
+def _load_all() -> None:
+    for mod in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str, smoke: bool = False) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    reg = _SMOKE if smoke else _REGISTRY
+    key = name.replace("-", "_")
+    for k, v in reg.items():
+        if k.replace("-", "_") == key:
+            return v
+    raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+
+
+def all_archs() -> Tuple[str, ...]:
+    if not _REGISTRY:
+        _load_all()
+    return tuple(sorted(_REGISTRY))
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch × shape) cell runs or is a documented skip."""
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k requires sub-quadratic attention (DESIGN.md §6)"
+    return True, ""
+
+
+def with_quant(cfg: ModelConfig, quant: QuantConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, quant=quant)
+
+
+def with_padded_heads(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad query heads up to a multiple of the TP degree (56 → 64 at tp=16, etc.).
+
+    The padded model is *functionally identical* when the padded ``wo`` rows are zero
+    (padded heads contribute exactly nothing — property-tested in tests/test_sharding);
+    what changes is that attention projections become TP-shardable instead of
+    replicated, the fix that makes 33B-class serving fit HBM (EXPERIMENTS.md §Perf).
+    KV heads are left unpadded (padding them would inflate the KV cache); the GQA
+    grouping stays integral because head counts and tp are powers-of-two-friendly.
+    """
+    if cfg.family in ("ssm",) or cfg.n_heads % tp == 0:
+        return cfg
+    nh = -(-cfg.n_heads // tp) * tp
+    if nh % max(cfg.n_kv_heads, 1) != 0:
+        return cfg          # padded grouping would not be integral — keep as-is
+    return dataclasses.replace(cfg, n_heads=nh)

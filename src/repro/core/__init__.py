@@ -1,0 +1,13 @@
+"""Core quantization science: the paper's contribution as composable JAX modules."""
+from repro.core.quantizers import (  # noqa: F401
+    QuantResult, qmax, per_token_quant, per_channel_quant, group_quant, crossquant,
+    per_token_scale, per_channel_scale, crossquant_scale, group_dequant,
+    fake_per_token, fake_crossquant, fake_per_channel, fake_group,
+)
+from repro.core.kernel_analysis import (  # noqa: F401
+    zero_bound, kernel_mask, kernel_fraction, remove_kernel, remove_kernel_fraction,
+    table1_stats, KernelStats,
+)
+from repro.core.qlinear import (  # noqa: F401
+    QuantConfig, FP, W8A8_CROSSQUANT, W8A8_PER_TOKEN, W4A8_G128, W4A4, W8A8_INT8,
+)

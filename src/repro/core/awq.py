@@ -1,0 +1,63 @@
+"""AWQ baseline (Lin et al., 2024) — the paper's weight-only W4 baseline.
+
+AWQ protects *salient* weight channels (those multiplying large activations) by
+scaling them up before group quantization and dividing back after:
+
+    W' = deq(quant_g128(W · s)) / s          s_j = cmax_j^alpha
+
+which is exact w.r.t. the matmul when paired with X/s on the activation side — AWQ
+folds the division into the previous op and serves FP16 activations, so here the
+activation side stays untouched (weight-only). The per-layer exponent ``alpha`` is
+grid-searched to minimize activation-weighted reconstruction error
+
+    || diag(cmax) · (W - W') ||_F
+
+with cmax (per-input-channel activation absmax) as the data surrogate, exactly
+AWQ's search objective collapsed onto its official scale parameterization.
+
+The paper combines CrossQuant activations with AWQ weights (Table 2,
+"CrossQuant+AWQ") — reproduced in benchmarks/table2_ppl.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+
+ALPHA_GRID = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def _fake_group_cols(w: jax.Array, bits: int, group: int) -> jax.Array:
+    """Group quantization along the input axis (rows), per output column —
+    the g128 layout of W4A8-g128 (matches qlinear.prepare_int4)."""
+    d_in, d_out = w.shape[-2], w.shape[-1]
+    g = min(group, d_in)
+    if d_in % g:
+        return Q.fake_group(w, bits, group)        # fallback: flat grouping
+    lead = w.shape[:-2]
+    grouped = w.reshape(*lead, d_in // g, g, d_out)
+    scale = jnp.maximum(jnp.abs(grouped).max(axis=-2, keepdims=True), Q.EPS) / Q.qmax(bits)
+    q = jnp.clip(jnp.round(grouped / scale), -Q.qmax(bits), Q.qmax(bits))
+    return (q * scale).reshape(w.shape)
+
+
+def awq_weight(w: jax.Array, cmax: jax.Array, *, bits: int = 4,
+               group: int = 128, alphas=ALPHA_GRID) -> jax.Array:
+    """Return the AWQ fake-quantized weight (best-alpha scale-protect-quantize).
+
+    w: (..., d_in, d_out); cmax: (d_in,) activation column absmax."""
+    cm = jnp.maximum(cmax.astype(jnp.float32), Q.EPS)
+    cm = cm / jnp.exp(jnp.mean(jnp.log(cm)))        # normalize (AWQ convention)
+    best_w, best_err = None, None
+    for alpha in alphas:
+        s = cm ** alpha
+        wq = _fake_group_cols(w * s[..., :, None], bits, group) / s[..., :, None]
+        err = jnp.sum((cm[..., :, None] * (w - wq)) ** 2)
+        if best_err is None:
+            best_w, best_err = wq, err
+        else:
+            take = err < best_err
+            best_w = jnp.where(take, wq, best_w)
+            best_err = jnp.minimum(err, best_err)
+    return best_w.astype(w.dtype)

@@ -1,0 +1,117 @@
+"""Calibration pass for static-c CrossQuant and SmoothQuant.
+
+CrossQuant's column statistic ``c_j = max|X_:,j|`` is dynamic in the paper (computed per
+batch). The int8 MXU path (DESIGN.md §3.1) freezes it from a calibration set, exactly as
+SmoothQuant freezes its smoothing factors. The calibrator records running column absmax
+per named linear layer during eager forward passes over calibration batches.
+
+Observers are host-side (eager-mode only): calibration runs once, offline, on a handful
+of batches — it is not a jit-path concern.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Observer:
+    """Running per-channel absmax (and optional quantile) per linear-layer name."""
+
+    def __init__(self, momentum: Optional[float] = None):
+        # momentum=None -> hard max over all batches (paper-style absolute max).
+        # momentum in (0,1) -> EMA of per-batch max (robust to single-batch spikes).
+        self.momentum = momentum
+        self.col_max: Dict[str, np.ndarray] = {}
+        self.n_obs: Dict[str, int] = {}
+
+    def observe(self, name: str, x: jax.Array) -> None:
+        flat = np.asarray(jnp.abs(x).reshape(-1, x.shape[-1]).max(axis=0), dtype=np.float32)
+        if name not in self.col_max:
+            self.col_max[name] = flat
+            self.n_obs[name] = 1
+            return
+        if self.momentum is None:
+            self.col_max[name] = np.maximum(self.col_max[name], flat)
+        else:
+            m = self.momentum
+            self.col_max[name] = m * self.col_max[name] + (1 - m) * flat
+        self.n_obs[name] += 1
+
+    def tables(self) -> Dict[str, np.ndarray]:
+        return dict(self.col_max)
+
+
+def calibrate(apply_fn, params, batches, observer: Optional[Observer] = None) -> Observer:
+    """Run ``apply_fn(params, batch, observer=obs)`` eagerly over calibration batches.
+
+    ``apply_fn`` must thread the observer down to its quantized linears (the model zoo
+    does this through QuantContext). Returns the filled observer.
+    """
+    obs = observer or Observer()
+    for batch in batches:
+        apply_fn(params, batch, obs)
+    return obs
+
+
+def stack_tables(tables: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Convert observer names to parameter-tree paths.
+
+    Observer names from the unroll path look like ``/L{b}/S{i}/attn/wq`` (layer b,
+    sublayer i); the matching parameter lives at ``blocks/{i}/attn/wq`` as a
+    *stacked* (n_blocks, ...) array — so per-layer tables are stacked along a new
+    leading axis. Tail layers ``/T{i}/...`` map to ``tail/{i}/...``; the hybrid
+    shared block keeps a single merged table (weight sharing)."""
+    import re
+    out: Dict[str, np.ndarray] = {}
+    grouped: Dict[tuple, Dict[int, np.ndarray]] = {}
+    for name, v in tables.items():
+        m = re.match(r"^/L(\d+)/S(\d+)/(.*)$", name)
+        if m:
+            b, i, rest = int(m.group(1)), int(m.group(2)), m.group(3)
+            grouped.setdefault((i, rest), {})[b] = v
+            continue
+        m = re.match(r"^/T(\d+)/(.*)$", name)
+        if m:
+            out[f"tail/{m.group(1)}/{m.group(2)}"] = v
+            continue
+        if name.startswith("/shared_attn/"):
+            out["shared_attn/attn/" + name[len("/shared_attn/"):]] = v
+            continue
+        if name.startswith("/shared_mlp/"):
+            out["shared_attn/mlp/" + name[len("/shared_mlp/"):]] = v
+            continue
+        out[name.lstrip("/")] = v
+    for (i, rest), per_layer in grouped.items():
+        n = max(per_layer) + 1
+        if len(per_layer) == n:
+            out[f"blocks/{i}/{rest}"] = np.stack([per_layer[b] for b in range(n)])
+    return out
+
+
+def attach_calibration(params, tables: Dict[str, np.ndarray]):
+    """Insert ``cmax`` leaves into a params pytree of named linears.
+
+    Params layout convention (see models/): every quantized linear owns a dict
+    ``{"w": ...}`` reachable at path ``a/b/c``; the observer key is that joined path.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    # Build a mutable nested copy.
+    import copy
+    out = copy.deepcopy(jax.tree_util.tree_map(lambda x: x, params))
+
+    def set_path(root, path_parts, key, value):
+        node = root
+        for p in path_parts:
+            node = node[p]
+        node[key] = value
+
+    for name, cmax in tables.items():
+        parts = name.split("/")
+        try:
+            set_path(out, parts, "cmax", jnp.asarray(cmax))
+        except (KeyError, TypeError):
+            continue
+    return out

@@ -1,0 +1,132 @@
+"""Quantization-kernel analysis (paper §4.1, Definition 1).
+
+The *quantization kernel* of a quantization function Q over activation matrix X is
+
+    K(Q) = { X_ij ∈ X : Q(X_ij) = 0 }
+         = { X_ij : |X_ij| < B_ij },      B_ij = 0.5 · Δ_ij   (zero bound, eq. 4)
+
+These utilities measure kernel mass, build zero-bound tensors for any scale
+construction, implement the paper's "Remove Kernel" ablation (Fig. 1/6/7/9: zero only
+the kernel elements, quantize nothing else), and reproduce the Table 1 statistics
+(proportion of ``c_j >= t_i`` and of ``B̃ < B``).
+
+Counting convention: the paper's kernel is about *small but non-zero* elements being
+destroyed; exact zeros carry no information, and including them only shifts every method
+by the same constant. ``count_exact_zeros=False`` (default) excludes them; both modes are
+exposed because Fig. 4 proportions are computed over all elements.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+
+
+def zero_bound(scale: jax.Array) -> jax.Array:
+    """B = 0.5 · Δ (eq. 4). ``scale`` is the broadcastable Δ tensor."""
+    return 0.5 * scale
+
+
+def kernel_mask(x: jax.Array, scale: jax.Array, *, count_exact_zeros: bool = False) -> jax.Array:
+    """Boolean mask of elements in K(Q) under scale Δ: |x| < 0.5·Δ."""
+    in_kernel = jnp.abs(x) < zero_bound(scale)
+    if not count_exact_zeros:
+        in_kernel = jnp.logical_and(in_kernel, x != 0)
+    return in_kernel
+
+
+def kernel_fraction(x: jax.Array, scale: jax.Array, *, count_exact_zeros: bool = True) -> jax.Array:
+    """|K(Q)| / |X| — the quantity plotted in Fig. 4."""
+    mask = kernel_mask(x, scale, count_exact_zeros=count_exact_zeros)
+    return jnp.mean(mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def per_token_kernel_fraction(x: jax.Array, bits: int = 8) -> jax.Array:
+    return kernel_fraction(x, Q.per_token_scale(x, bits))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha"))
+def crossquant_kernel_fraction(x: jax.Array, bits: int = 8, alpha: float = 0.15) -> jax.Array:
+    return kernel_fraction(x, Q.crossquant_scale(x, bits, alpha))
+
+
+def remove_kernel(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """The paper's "Remove Kernel" ablation: zero the kernel, keep the rest *unquantized*.
+
+    Fig. 1/9 show this alone reproduces essentially the whole A8 accuracy drop — the
+    central empirical claim that the kernel (not the outliers directly) is the cause.
+    """
+    return jnp.where(kernel_mask(x, scale, count_exact_zeros=True), 0.0, x).astype(x.dtype)
+
+
+def remove_kernel_fraction(x: jax.Array, fraction: float) -> jax.Array:
+    """Zero the smallest-|x| ``fraction`` of elements (Fig. 6/7 threshold sweeps).
+
+    Uses a global magnitude quantile as the zero bound so the removed proportion is
+    controlled directly, matching "setting different proportion of quantization kernels
+    to zero".
+    """
+    flat = jnp.abs(x).reshape(-1)
+    thresh = jnp.quantile(flat, fraction)
+    return jnp.where(jnp.abs(x) <= thresh, 0.0, x).astype(x.dtype)
+
+
+# ======================================================================================
+# Table 1 statistics
+# ======================================================================================
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha"))
+def table1_stats(x: jax.Array, bits: int = 8, alpha: float = 0.15) -> dict:
+    """Reproduces the three row-statistics of Table 1 for one activation matrix:
+
+    * proportion of positions with ``c_j >= t_i``   (case II of the §4.2 proof),
+    * proportion with ``B̃_ij < B_ij``               (kernel-shrinking positions),
+    * kernel fraction of CrossQuant and of per-token quantization.
+    """
+    t = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), Q.EPS)   # (..., T, 1)
+    reduce_axes = tuple(range(x.ndim - 1))
+    c = jnp.maximum(jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True), Q.EPS)
+
+    c_ge_t = jnp.mean((c >= t).astype(jnp.float32) * jnp.ones_like(x))
+    b_pt = zero_bound(t / Q.qmax(bits))
+    b_cq = zero_bound((t ** alpha) * (c ** (1 - alpha)) / Q.qmax(bits))
+    b_shrunk = jnp.mean((b_cq < b_pt).astype(jnp.float32) * jnp.ones_like(x))
+
+    return {
+        "c_ge_t": c_ge_t,
+        "bcq_lt_bpt": b_shrunk,
+        "kernel_crossquant": kernel_fraction(x, Q.crossquant_scale(x, bits, alpha)),
+        "kernel_per_token": kernel_fraction(x, Q.per_token_scale(x, bits)),
+    }
+
+
+# ======================================================================================
+# Activation capture: measure kernel fractions inside a running model
+# ======================================================================================
+
+class KernelStats:
+    """Accumulates kernel fractions over many activation matrices (host side)."""
+
+    def __init__(self, bits: int = 8, alpha: float = 0.15):
+        self.bits = bits
+        self.alpha = alpha
+        self.per_token: list[float] = []
+        self.crossquant: list[float] = []
+
+    def observe(self, x: jax.Array) -> None:
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        self.per_token.append(float(per_token_kernel_fraction(x2, self.bits)))
+        self.crossquant.append(float(crossquant_kernel_fraction(x2, self.bits, self.alpha)))
+
+    def summary(self) -> dict:
+        import numpy as np
+        return {
+            "per_token_mean": float(np.mean(self.per_token)) if self.per_token else 0.0,
+            "crossquant_mean": float(np.mean(self.crossquant)) if self.crossquant else 0.0,
+            "n": len(self.per_token),
+        }

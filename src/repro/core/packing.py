@@ -1,0 +1,26 @@
+"""INT4 nibble packing: two signed 4-bit codes per int8 byte.
+
+Layout: element 2k goes to the low nibble, element 2k+1 to the high nibble, packed
+along the *last* axis (the axis contiguous in HBM), halving weight bytes for the
+W4A8-g128 and W4A4 configurations. The Pallas qgemm_w4 kernel unpacks in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int8-held int4 codes (range [-8, 7]) pairwise along the last axis."""
+    assert codes.shape[-1] % 2 == 0, "pack axis must be even"
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return ((hi.astype(jnp.int8) << 4) | (lo.astype(jnp.int8) & 0x0F)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extends both nibbles)."""
+    lo = (packed << 4).astype(jnp.int8) >> 4          # sign-extend low nibble
+    hi = packed >> 4                                   # arithmetic shift: high nibble
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

@@ -1,0 +1,336 @@
+"""Quantized linear layer — the integration point between the paper's numerics and the
+model zoo. Functional style: params are plain dicts (pytrees), behaviour is selected by
+a static, hashable :class:`QuantConfig`.
+
+Execution modes (DESIGN.md §3.1):
+
+* ``fp``    — bf16/fp32 GEMM (the FP16 baseline of every paper table).
+* ``fake``  — paper-faithful fake quantization: dynamic activation scales
+              (per-token or CrossQuant eq. 5), per-channel / group weight scales,
+              quantize→dequantize→fp GEMM. This is exactly the evaluation path of the
+              paper's App. B.1 reference code.
+* ``int8``  — TPU-native integer path: static-c CrossQuant. Column stats frozen from
+              calibration, ``c^(1-α)`` folded into the offline weight quantization so the
+              GEMM is a true int8×int8→int32 contraction with separable output-side
+              dequant. Backed by the Pallas ``qgemm`` kernel on TPU; the jnp reference is
+              used under jit on CPU (and for the dry-run lowering).
+
+Weight layouts: ``w (d_in, d_out)`` or stacked experts ``(E, d_in, d_out)``.
+Prepared (pre-quantized) parameter dicts replace ``{"w"}`` with
+``{"qw", "sw", "bcol", ...}`` — produced by :func:`prepare_int8` / :func:`prepare_int4`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core import quantizers as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization behaviour for every quantized linear in a model."""
+
+    mode: str = "fp"                 # fp | fake | int8
+    a_bits: int = 8
+    w_bits: int = 8
+    alpha: float = 0.15              # CrossQuant activation exponent
+    act_quant: str = "crossquant"    # per_token | crossquant | none
+    w_quant: str = "per_channel"     # per_channel | group | crossquant_w
+    w_group: int = 128               # group size for w_quant="group" (g128)
+    alpha_w: float = 0.55            # CrossQuant-on-weights exponent (App. B.1)
+    static_c: bool = False           # use calibrated cmax when present (fake mode)
+    w_prequantized: bool = False     # weights already fake-quantized offline (PTQ):
+                                     # skip in-graph weight quantization entirely
+    remove_frac: float = 0.0         # act_quant="remove_kernel": fraction zeroed
+
+    def tag(self) -> str:
+        if self.mode == "fp":
+            return "fp16"
+        g = f"-g{self.w_group}" if self.w_quant == "group" else ""
+        return f"W{self.w_bits}A{self.a_bits}{g}[{self.act_quant},a={self.alpha}]"
+
+
+FP = QuantConfig(mode="fp")
+W8A8_CROSSQUANT = QuantConfig(mode="fake", a_bits=8, w_bits=8)
+W8A8_PER_TOKEN = QuantConfig(mode="fake", a_bits=8, w_bits=8, act_quant="per_token")
+W8A8_SMOOTHQUANT = QuantConfig(mode="fake", a_bits=8, w_bits=8,
+                               act_quant="smoothquant")
+W4A8_G128 = QuantConfig(mode="fake", a_bits=8, w_bits=4, w_quant="group")
+W4A8_G128_PER_TOKEN = QuantConfig(mode="fake", a_bits=8, w_bits=4, w_quant="group",
+                                  act_quant="per_token")
+# AWQ weight-only baseline (paper Table 2): per-token activations; and the paper's
+# CrossQuant+AWQ combination.
+W4A8_G128_AWQ = QuantConfig(mode="fake", a_bits=8, w_bits=4, w_quant="awq",
+                            act_quant="per_token")
+W4A8_G128_CQ_AWQ = QuantConfig(mode="fake", a_bits=8, w_bits=4, w_quant="awq")
+# App. B.1 rescue: CrossQuant applied to the weights themselves at W4A4.
+W4A4_CQW = QuantConfig(mode="fake", a_bits=4, w_bits=4, w_quant="crossquant_w")
+W4A4 = QuantConfig(mode="fake", a_bits=4, w_bits=4)
+W4A4_PER_TOKEN = QuantConfig(mode="fake", a_bits=4, w_bits=4, act_quant="per_token")
+W8A8_INT8 = QuantConfig(mode="int8", a_bits=8, w_bits=8)
+
+
+def remove_kernel_cfg(frac: float, w_bits: int = 8) -> QuantConfig:
+    """'W8-Remove Kernel' of Fig. 6/7: quantize weights, zero the smallest ``frac``
+    of activation entries, quantize nothing else."""
+    return QuantConfig(mode="fake", w_bits=w_bits, act_quant="remove_kernel",
+                       remove_frac=frac)
+
+
+REMOVE_TRUE_KERNEL = QuantConfig(mode="fake", w_bits=8,
+                                 act_quant="remove_true_kernel")
+
+
+# ======================================================================================
+# Init
+# ======================================================================================
+
+def init(key, d_in: int, d_out: int, *, n_stack: Optional[int] = None,
+         dtype=jnp.float32, scale: Optional[float] = None) -> dict:
+    shape = (d_in, d_out) if n_stack is None else (n_stack, d_in, d_out)
+    s = scale if scale is not None else d_in ** -0.5
+    return {"w": (jax.random.normal(key, shape) * s).astype(dtype)}
+
+
+# ======================================================================================
+# Fake-quant application (paper-faithful path)
+# ======================================================================================
+
+def _fake_act(x, cfg: QuantConfig, cmax):
+    if cfg.act_quant == "none":
+        return x
+    if cfg.act_quant == "per_token":
+        return Q.fake_per_token(x, cfg.a_bits)
+    if cfg.act_quant == "crossquant":
+        col = cmax if (cfg.static_c and cmax is not None) else None
+        return Q.fake_crossquant(x, cfg.a_bits, cfg.alpha, col_max=col)
+    raise ValueError(cfg.act_quant)
+
+
+def _fake_weight(w, cfg: QuantConfig, cmax=None):
+    if cfg.w_quant == "per_channel":
+        # Paper eq. (2): reduce over the output axis -> per-input-channel scale.
+        return Q.fake_per_channel(w, cfg.w_bits, axis=-1)
+    if cfg.w_quant == "group":
+        return Q.fake_group(w, cfg.w_bits, cfg.w_group)
+    if cfg.w_quant == "crossquant_w":
+        # App. B.1: CrossQuant applied to the weight matrix itself (OPT-66B W4A4 /
+        # LLaMA3-70B W8A8 rescue). Rows of W are input channels.
+        return Q.fake_crossquant(w, cfg.w_bits, cfg.alpha_w)
+    if cfg.w_quant == "awq":
+        # AWQ baseline: activation-aware salient-channel protection (core/awq.py).
+        from repro.core import awq as awq_lib
+        if cmax is None:
+            cmax = jnp.ones(w.shape[-2], jnp.float32)
+        return awq_lib.awq_weight(w, cmax, bits=cfg.w_bits, group=cfg.w_group)
+    raise ValueError(cfg.w_quant)
+
+
+# ======================================================================================
+# int8 path: static-c CrossQuant (jnp reference; Pallas kernel dispatch in kernels/ops)
+# ======================================================================================
+
+def prepare_int8(params: dict, cfg: QuantConfig, cmax: Optional[jax.Array] = None) -> dict:
+    """Offline weight preparation: fold b_j = c_j^(1-α) into W, per-output-channel
+    int8 quantization. Returns a prepared parameter dict (raw ``w`` dropped)."""
+    w = params["w"]
+    cm = cmax if cmax is not None else params.get("cmax")
+    # Without calibrated column stats, an alpha<1 row factor t^alpha no longer spans
+    # the data range (massive clipping): degrade to exact per-token int8 (alpha=1).
+    # The effective alpha ships as a scalar leaf so mixed calibrated/uncalibrated
+    # linears coexist in one tree.
+    alpha_eff = cfg.alpha if cm is not None else 1.0
+    if cm is None:
+        cm = jnp.ones(w.shape[-2], w.dtype)
+    b = jnp.maximum(cm, Q.EPS) ** (1.0 - alpha_eff)
+    # Stacked weights (L/E leading dims): bcol must carry the same leading dims so
+    # scan-over-layers can slice it per layer.
+    b = jnp.broadcast_to(b, w.shape[:-1])
+    wb = w * b[..., :, None]
+    sw = jnp.maximum(jnp.max(jnp.abs(wb), axis=-2, keepdims=True), Q.EPS) / Q.qmax(cfg.w_bits)
+    qw = jnp.clip(jnp.round(wb / sw), -Q.qmax(cfg.w_bits), Q.qmax(cfg.w_bits)).astype(jnp.int8)
+    # qalpha carries the stack's leading dims (scan/vmap slice it with the weight).
+    return {"qw": qw, "sw": sw.squeeze(-2).astype(jnp.float32),
+            "bcol": b.astype(jnp.float32),
+            "qalpha": jnp.full(w.shape[:-2], alpha_eff, jnp.float32)}
+
+
+def prepare_int4(params: dict, cfg: QuantConfig, cmax: Optional[jax.Array] = None) -> dict:
+    """W4 preparation: group-quantize the b-folded weight along d_in with
+    group == cfg.w_group, pack nibbles along d_in. Group scales shape (..., G, d_out)."""
+    w = params["w"]
+    cm = cmax if cmax is not None else params.get("cmax")
+    alpha_eff = cfg.alpha if cm is not None else 1.0
+    if cm is None:
+        cm = jnp.ones(w.shape[-2], w.dtype)
+    b = jnp.maximum(cm, Q.EPS) ** (1.0 - alpha_eff)
+    b = jnp.broadcast_to(b, w.shape[:-1])
+    wb = w * b[..., :, None]
+    *lead, d_in, d_out = wb.shape
+    g = cfg.w_group
+    assert d_in % g == 0, f"d_in={d_in} not divisible by group {g}"
+    grouped = wb.reshape(*lead, d_in // g, g, d_out)
+    sw = jnp.maximum(jnp.abs(grouped).max(axis=-2, keepdims=True), Q.EPS) / Q.qmax(4)
+    qw = jnp.clip(jnp.round(grouped / sw), -Q.qmax(4), Q.qmax(4)).astype(jnp.int8)
+    qw = qw.reshape(*lead, d_in, d_out)
+    packed = packing.pack_int4(jnp.swapaxes(qw, -1, -2))        # pack along d_in
+    return {
+        "qw4": jnp.swapaxes(packed, -1, -2),                    # (d_in//2, d_out) int8
+        "sw": sw.squeeze(-2).astype(jnp.float32),               # (..., G, d_out)
+        "bcol": b.astype(jnp.float32),
+        "qalpha": jnp.full(w.shape[:-2], alpha_eff, jnp.float32),
+    }
+
+
+def quantize_act_int8(x: jax.Array, bcol: jax.Array, cfg: QuantConfig, alpha=None):
+    """Runtime activation quantization for the int path: divide by outer(a_i, b_j).
+
+    ``alpha`` may be a traced scalar/array from the prepared tree (``qalpha``) so
+    calibrated (alpha<1) and uncalibrated (alpha=1) linears share one program."""
+    alpha = cfg.alpha if alpha is None else alpha
+    if isinstance(alpha, jax.Array):
+        while alpha.ndim < x.ndim:       # stacked experts: (E,) -> (E, 1, 1)
+            alpha = alpha[..., None]
+    # stacked experts: bcol (E, d_in) broadcasts against x (E, C, d_in)
+    while bcol.ndim >= 2 and bcol.ndim < x.ndim:
+        bcol = jnp.expand_dims(bcol, axis=-2)
+    t = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), Q.EPS)
+    a = (t ** alpha) / Q.qmax(cfg.a_bits)                        # (..., T, 1)
+    qx = jnp.clip(jnp.round(x / (a * bcol)), -Q.qmax(cfg.a_bits), Q.qmax(cfg.a_bits))
+    return qx.astype(jnp.int8), a.astype(jnp.float32)
+
+
+def _int8_matmul_ref(qx, qw, a, sw):
+    """Reference int8 GEMM + separable dequant:  y = (qx·qw) * a_i * sw_k.
+
+    Handles stacked experts: qx (E, C, d_in) · qw (E, d_in, d_out) batched over E,
+    with sw (E, d_out) broadcast over the capacity axis."""
+    if qw.ndim == 3 and qx.ndim == 3:
+        acc = jnp.einsum("eci,eio->eco", qx.astype(jnp.int32), qw.astype(jnp.int32))
+        return acc.astype(jnp.float32) * a * sw[:, None, :]
+    acc = jax.lax.dot_general(
+        qx, qw, (((qx.ndim - 1,), (qw.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a * sw
+
+
+def _int4_matmul_ref(qx, qw4, a, sw, group: int):
+    """Reference W4 GEMM: unpack nibbles, per-group int32 partial sums, group dequant.
+
+    Stacked experts supported: qx (E, C, d_in), qw4 (E, d_in//2, d_out),
+    sw (E, G, d_out)."""
+    qw = packing.unpack_int4(jnp.swapaxes(qw4, -1, -2))
+    qw = jnp.swapaxes(qw, -1, -2)                                # (..., d_in, d_out)
+    d_in = qw.shape[-2]
+    ngroups = d_in // group
+    if qw.ndim == 3 and qx.ndim == 3:
+        E, C, _ = qx.shape
+        qx_g = qx.reshape(E, C, ngroups, group)
+        qw_g = qw.reshape(E, ngroups, group, qw.shape[-1])
+        acc = jnp.einsum("ecgk,egko->ecgo", qx_g.astype(jnp.int32),
+                         qw_g.astype(jnp.int32))                 # (E, C, G, d_out)
+        y = (acc.astype(jnp.float32) * sw[:, None]).sum(axis=-2)
+        return y * a
+    qx_g = qx.reshape(*qx.shape[:-1], ngroups, group)
+    qw_g = qw.reshape(ngroups, group, qw.shape[-1])
+    acc = jnp.einsum("...gk,gko->...go", qx_g.astype(jnp.int32), qw_g.astype(jnp.int32))
+    y = (acc.astype(jnp.float32) * sw).sum(axis=-2)              # group dequant + reduce
+    return y * a
+
+
+# ======================================================================================
+# Unified apply
+# ======================================================================================
+
+def apply(params: dict, x: jax.Array, cfg: QuantConfig = FP, *,
+          name: str = "", observer=None, use_pallas: bool = False) -> jax.Array:
+    """y = x @ W under the configured quantization mode.
+
+    Handles 2-D weights and stacked-expert 3-D weights ((E, d_in, d_out) with
+    x (E, C, d_in)). ``observer`` (eager calibration) records column absmax.
+    """
+    if observer is not None:
+        observer.observe(name, x)
+
+    if "qw" in params:       # prepared int8
+        qx, a = quantize_act_int8(x, params["bcol"], cfg, alpha=params.get("qalpha"))
+        if use_pallas and params["qw"].ndim == 2 and qx.ndim == 2:
+            from repro.kernels import ops as kops
+            return kops.qgemm_w8a8(qx, params["qw"], a, params["sw"]).astype(x.dtype)
+        return _int8_matmul_ref(qx, params["qw"], a, params["sw"]).astype(x.dtype)
+
+    if "qw4" in params:      # prepared int4 (packed)
+        qx, a = quantize_act_int8(x, params["bcol"], cfg, alpha=params.get("qalpha"))
+        if use_pallas and params["qw4"].ndim == 2 and qx.ndim == 2:
+            from repro.kernels import ops as kops
+            return kops.qgemm_w4a8(qx, params["qw4"], a, params["sw"],
+                                   group=cfg.w_group).astype(x.dtype)
+        return _int4_matmul_ref(qx, params["qw4"], a, params["sw"], cfg.w_group).astype(x.dtype)
+
+    w = params["w"]
+    if cfg.mode == "fp":
+        pass
+    elif cfg.mode == "fake":
+        if cfg.act_quant == "smoothquant":
+            # SmoothQuant baseline (Xiao et al. 2023): migrate difficulty to weights
+            # via s_j, then per-token A-quant + per-channel W-quant. Exactness of the
+            # transform: (X/s)(sW) == XW. Column stats from calibration when present,
+            # else dynamic (per-batch) — both supported by the paper's framing.
+            from repro.core import smoothquant as sq
+            cm = params.get("cmax")
+            if cm is None:
+                reduce_axes = tuple(range(x.ndim - 1))
+                cm = jnp.max(jnp.abs(x), axis=reduce_axes)
+            w_rowmax = jnp.max(jnp.abs(w), axis=-1)
+            s = sq.smoothing_scale(cm.astype(jnp.float32),
+                                   w_rowmax.astype(jnp.float32), alpha=0.5)
+            x = Q.fake_per_token((x / s.astype(x.dtype)), cfg.a_bits)
+            w = Q.fake_per_channel(w * s[..., :, None].astype(w.dtype), cfg.w_bits,
+                                   axis=-1)
+        elif cfg.act_quant == "remove_kernel":
+            # The paper's Fig. 6/7 ablation: zero ONLY the smallest-|x| fraction of
+            # elements; quantize nothing else in the activation.
+            from repro.core import kernel_analysis as KA
+            x = KA.remove_kernel_fraction(x, cfg.remove_frac)
+            if not cfg.w_prequantized:
+                w = _fake_weight(w, cfg)
+        elif cfg.act_quant == "remove_true_kernel":
+            # The paper's Fig. 1/9 ablation: zero exactly K(Q) under the per-token
+            # scale (|x| < 0.5·Δ_pt) and leave every other element UNQUANTIZED —
+            # the causal test that the kernel, not the rounding of survivors,
+            # carries the A8 accuracy drop.
+            from repro.core import kernel_analysis as KA
+            x = KA.remove_kernel(x, Q.per_token_scale(x, cfg.a_bits))
+            if not cfg.w_prequantized:
+                w = _fake_weight(w, cfg)
+        else:
+            x_cm = params.get("cmax")
+            if cfg.w_quant == "awq" and x_cm is None:
+                reduce_axes = tuple(range(x.ndim - 1))
+                x_cm = jnp.max(jnp.abs(x), axis=reduce_axes)
+            x = _fake_act(x, cfg, params.get("cmax"))
+            if not cfg.w_prequantized:
+                w = _fake_weight(w, cfg, cmax=x_cm)
+    elif cfg.mode == "int8":
+        # int8 mode on unprepared weights: dynamic-c preparation on the fly (column
+        # stats from this batch — the paper's dynamic-c geometry as a true int8
+        # GEMM). Smoke tests and eager experimentation use this path; deployments
+        # prepare offline via models.quantize.quantize_tree.
+        if "cmax" in params:
+            cmax = params["cmax"]
+        else:
+            reduce_axes = tuple(range(x.ndim - 1))
+            cmax = jnp.max(jnp.abs(x), axis=reduce_axes)
+        prepared = prepare_int8({"w": w}, cfg, cmax=cmax)
+        return apply(prepared, x, cfg, use_pallas=use_pallas)
+    else:
+        raise ValueError(cfg.mode)
+
+    if w.ndim == 3 and x.ndim == 3:   # stacked experts
+        return jnp.einsum("eci,eio->eco", x, w.astype(x.dtype))
+    return x @ w.astype(x.dtype)

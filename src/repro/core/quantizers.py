@@ -1,0 +1,200 @@
+"""Quantization functions: the paper's core numerics.
+
+Implements (all symmetric, signed, round-to-nearest-even via jnp.round):
+
+* Per-token quantization      — eq. (1): scale from per-row absmax ``t_i``.
+* Per-channel quantization    — eq. (2): scale from per-row absmax of W (input-channel
+  axis, as written in the paper) or per-output-channel (GEMM-friendly variant).
+* Group-wise quantization     — reshape to (I*O/g, g) groups, per-group absmax.
+* CrossQuant                  — eq. (5): per-element scale ``t_i^alpha * c_j^(1-alpha)``.
+
+Every quantizer returns a :class:`QuantResult` carrying the integer codes, the scale
+tensor (broadcastable against the codes) and enough metadata to dequantize, measure the
+quantization kernel (Definition 1) and fake-quantize.
+
+All functions are jit-friendly: ``bits``/``alpha``/axis arguments are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# A floor on scales so rows/columns of exact zeros do not produce inf/nan.  Matches the
+# smallest normal of fp16 (the paper's storage dtype) divided by qmax headroom.
+EPS = 1e-8
+
+
+def qmax(bits: int) -> int:
+    """Largest representable magnitude: 2^(N-1) - 1 (symmetric signed grid)."""
+    return 2 ** (bits - 1) - 1
+
+
+def _storage_dtype(bits: int):
+    # INT4 codes are stored in int8 containers (packing handled in core/packing.py).
+    return jnp.int8 if bits <= 8 else jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantResult:
+    """Integer codes + broadcastable scale. ``dequant() == codes * scale``."""
+
+    codes: jax.Array       # integer grid values, same shape as input
+    scale: jax.Array       # broadcastable to codes.shape
+    bits: int              # static
+
+    def dequant(self) -> jax.Array:
+        return self.codes.astype(self.scale.dtype) * self.scale
+
+    # -- pytree plumbing ------------------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def _quantize(x: jax.Array, scale: jax.Array, bits: int) -> QuantResult:
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
+    return QuantResult(q.astype(_storage_dtype(bits)), scale.astype(jnp.float32), bits)
+
+
+# ======================================================================================
+# Scale constructions
+# ======================================================================================
+
+def per_token_scale(x: jax.Array, bits: int) -> jax.Array:
+    """Eq. (1): Δ_ij = t_i / qmax with t_i = max|X_i,:| (broadcast over last axis)."""
+    t = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return jnp.maximum(t, EPS) / qmax(bits)
+
+
+def per_channel_scale(w: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Eq. (2): per-channel weight scale.
+
+    ``axis`` is the axis *reduced over*. The paper reduces over the output axis of
+    W ∈ R^{I×O} (``axis=-1``, scale per input channel). The GEMM-friendly variant
+    reduces over the input axis (``axis=-2``, scale per output channel).
+    """
+    t = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    return jnp.maximum(t, EPS) / qmax(bits)
+
+
+def per_tensor_scale(x: jax.Array, bits: int) -> jax.Array:
+    t = jnp.max(jnp.abs(x))
+    return jnp.maximum(t, EPS) / qmax(bits)
+
+
+def crossquant_scale(
+    x: jax.Array,
+    bits: int,
+    alpha: float = 0.15,
+    col_max: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Eq. (5): Δ̃_ij = t_i^α · c_j^(1-α) / qmax.
+
+    ``col_max`` overrides the dynamic column absmax with calibrated statistics
+    (static-c CrossQuant — the TPU int8-GEMM-compatible variant, DESIGN.md §3.1).
+    Row statistics are always dynamic (they are per-token).
+
+    x may have leading batch dims: rows = second-to-last axis, cols = last axis
+    reduced over *all* leading axes (the token axes), matching the paper's
+    "column of the activation matrix".
+    """
+    t = jnp.max(jnp.abs(x), axis=-1, keepdims=True)                     # (..., T, 1)
+    if col_max is None:
+        reduce_axes = tuple(range(x.ndim - 1))                          # all but channel
+        c = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)        # (1, ..., I)
+    else:
+        c = jnp.asarray(col_max).reshape((1,) * (x.ndim - 1) + (-1,))
+    t = jnp.maximum(t, EPS)
+    c = jnp.maximum(c, EPS)
+    return (t ** alpha) * (c ** (1.0 - alpha)) / qmax(bits)
+
+
+# ======================================================================================
+# Quantizers (scale + codes)
+# ======================================================================================
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def per_token_quant(x: jax.Array, bits: int = 8) -> QuantResult:
+    return _quantize(x, per_token_scale(x, bits), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis"))
+def per_channel_quant(w: jax.Array, bits: int = 8, axis: int = -1) -> QuantResult:
+    return _quantize(w, per_channel_scale(w, bits, axis=axis), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def group_quant(w: jax.Array, bits: int = 4, group_size: int = 128) -> QuantResult:
+    """Group-wise weight quantization (the ``g128`` in W4A8-g128).
+
+    Reshapes W ∈ R^{I×O} to (I·O/g, g), scales per group, reshapes codes back.
+    The returned ``scale`` broadcasts against the *grouped* view; dequantization is
+    handled through :func:`group_dequant` (shape restored).
+    """
+    shape = w.shape
+    grouped = w.reshape(-1, group_size)
+    scale = jnp.maximum(jnp.max(jnp.abs(grouped), axis=-1, keepdims=True), EPS) / qmax(bits)
+    q = jnp.clip(jnp.round(grouped / scale), -qmax(bits), qmax(bits))
+    return QuantResult(
+        q.astype(_storage_dtype(bits)).reshape(shape),
+        scale.astype(jnp.float32),  # (I*O/g, 1)
+        bits,
+    )
+
+
+def group_dequant(qr: QuantResult, group_size: int = 128) -> jax.Array:
+    shape = qr.codes.shape
+    grouped = qr.codes.reshape(-1, group_size).astype(qr.scale.dtype)
+    return (grouped * qr.scale).reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha"))
+def crossquant(
+    x: jax.Array,
+    bits: int = 8,
+    alpha: float = 0.15,
+    col_max: Optional[jax.Array] = None,
+) -> QuantResult:
+    """CrossQuant (eq. 5). ``alpha=1`` degenerates exactly to per-token quantization;
+    ``alpha=0`` to per-(input-)channel quantization of the activation."""
+    return _quantize(x, crossquant_scale(x, bits, alpha, col_max), bits)
+
+
+# ======================================================================================
+# Fake quantization (quantize-dequantize in one pass — the paper's evaluation mode)
+# ======================================================================================
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def fake_per_token(x: jax.Array, bits: int = 8) -> jax.Array:
+    s = per_token_scale(x, bits)
+    return (jnp.clip(jnp.round(x / s), -qmax(bits), qmax(bits)) * s).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha"))
+def fake_crossquant(
+    x: jax.Array, bits: int = 8, alpha: float = 0.15,
+    col_max: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Verbatim port of the paper's App. B.1 reference code (div by t^α then by c^(1-α),
+    round, multiply back), expressed as one fused scale."""
+    s = crossquant_scale(x, bits, alpha, col_max)
+    return (jnp.clip(jnp.round(x / s), -qmax(bits), qmax(bits)) * s).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis"))
+def fake_per_channel(w: jax.Array, bits: int = 8, axis: int = -1) -> jax.Array:
+    s = per_channel_scale(w, bits, axis=axis)
+    return (jnp.clip(jnp.round(w / s), -qmax(bits), qmax(bits)) * s).astype(w.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def fake_group(w: jax.Array, bits: int = 4, group_size: int = 128) -> jax.Array:
+    return group_dequant(group_quant(w, bits, group_size), group_size).astype(w.dtype)

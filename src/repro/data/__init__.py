@@ -1,0 +1,6 @@
+"""Data substrate: deterministic synthetic corpora, outlier-planted activation
+ensembles (the paper's App. A statistics), and a shardable host loader with prefetch."""
+from repro.data.synthetic import (  # noqa: F401
+    markov_corpus, outlier_activations, OutlierSpec,
+)
+from repro.data.pipeline import HostDataLoader, make_train_batches  # noqa: F401

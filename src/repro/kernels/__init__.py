@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for CrossQuant's compute hot-spots.
+
+  qgemm.py         int8/int4 MXU GEMMs with fused output-side dequant
+  act_quantize.py  fused row-absmax + CrossQuant quantization (one HBM pass)
+  ops.py           jit'd public wrappers (padding, backend dispatch)
+  ref.py           pure-jnp oracles — the semantic ground truth for every kernel
+
+Kernels are validated on CPU with ``interpret=True`` against ``ref.py`` (shape/dtype
+sweeps + hypothesis, tests/test_kernels.py). The dry-run lowers the reference path:
+CPU cannot lower Mosaic, and HLO cost analysis is identical for the same semantics.
+"""

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused CrossQuant activation quantization (static-c path).
+
+Computes, in a single kernel over x (M, K):
+
+    t_i = max_j |x_ij|                         (row absmax)
+    a_i = t_i^alpha / qmax                     (CrossQuant row dequant factor)
+    q_ij = clip(round(x_ij / (a_i · qmax? no — a_i) / bcol_j))   int8 codes
+
+where ``bcol_j = c_j^(1-alpha)`` comes from calibration (DESIGN.md §3.1). Per-token
+quantization is the ``alpha=1, bcol=1`` special case — the kernel covers both.
+
+Two-phase grid: the K axis is swept twice per row block — phase 0 reduces the row
+absmax into a VMEM scratch column, phase 1 re-reads the same x blocks and emits codes.
+The phase axis is the middle grid dimension so (row, 0, k0..kn, 1, k0..kn) revisits the
+scratch in order. One extra HBM read of x versus an unfused XLA reduction+divide chain,
+but no (M, K) f32 intermediate is ever materialized — the codes leave VMEM as int8,
+which is the whole point on a memory-bound layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _act_quant_kernel(x_ref, bcol_ref, q_ref, a_ref, t_ref, *,
+                      n_k: int, alpha: float, qmax: int, eps: float):
+    phase = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((phase == 0) & (k == 0))
+    def _init():
+        t_ref[...] = jnp.full_like(t_ref, eps)
+
+    @pl.when(phase == 0)
+    def _reduce():
+        blk_max = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)), axis=1,
+                          keepdims=True)
+        t_ref[...] = jnp.maximum(t_ref[...], blk_max)
+
+    @pl.when(phase == 1)
+    def _quantize():
+        a = (t_ref[...] ** alpha) / qmax                    # (bm, 1)
+        x = x_ref[...].astype(jnp.float32)
+        q = jnp.round(x / (a * bcol_ref[...]))
+        q_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+        @pl.when(k == n_k - 1)
+        def _emit_scale():
+            a_ref[...] = a
+
+
+def act_quantize_pallas(
+    x: jax.Array, bcol: jax.Array, *, bits: int = 8, alpha: float = 0.15,
+    bm: int = 256, bk: int = 512, interpret: bool = False,
+):
+    """x (M, K) float → (codes (M, K) int8, a (M, 1) f32). M % bm == K % bk == 0."""
+    M, K = x.shape
+    assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
+    qmax = 2 ** (bits - 1) - 1
+    n_k = K // bk
+    grid = (M // bm, 2, n_k)
+    return pl.pallas_call(
+        functools.partial(_act_quant_kernel, n_k=n_k, alpha=alpha, qmax=qmax,
+                          eps=1e-8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, p, k: (m, k)),
+            pl.BlockSpec((1, bk), lambda m, p, k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda m, p, k: (m, k)),
+            pl.BlockSpec((bm, 1), lambda m, p, k: (m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, bcol.reshape(1, K))

@@ -1,0 +1,149 @@
+"""Pallas TPU kernels: quantized GEMMs with fused output-side dequantization.
+
+These are the compute hot-spots of CrossQuant deployment (DESIGN.md §3.2):
+
+* ``qgemm_w8a8`` — int8 × int8 → int32 MXU GEMM; the int32 accumulator lives in a VMEM
+  scratch tile across the K grid axis and is dequantized once at the last K step by the
+  separable scales ``a_i · sw_k`` (CrossQuant row factor × b-folded weight scale).
+* ``qgemm_w4a8`` — same contraction with weights stored two int4 nibbles per byte,
+  unpacked *in VMEM* (halving the weight HBM traffic — the paper's W4A8-g128 setting);
+  per-group scales are applied per K-block so the K grid axis walks one g128 group per
+  step and accumulates in f32.
+
+Tiling: MXU-aligned (multiples of 128 on M/N; K blocks of 256–512). The int8 tiles are
+small (bm·bk + bk·bn bytes), so the working set stays well under the ~16 MB/core VMEM:
+with (bm, bn, bk) = (256, 256, 512) the tiles are 128 KB + 128 KB + 256 KB accumulator.
+
+Grid iteration order is (m, n, k) with k innermost — the accumulator scratch is
+revisited by consecutive grid steps, the canonical TPU matmul pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------------------
+# W8A8
+# --------------------------------------------------------------------------------------
+
+def _w8a8_kernel(qx_ref, qw_ref, a_ref, sw_ref, out_ref, acc_ref, *, n_k: int):
+    """One (m, n, k) grid step: acc += qx_blk · qw_blk; dequant+write at k == n_k-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        qx_ref[...], qw_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _dequant():
+        a = a_ref[...]                     # (bm, 1) f32
+        sw = sw_ref[...]                   # (1, bn) f32
+        out_ref[...] = acc_ref[...].astype(jnp.float32) * a * sw
+
+
+def qgemm_w8a8_pallas(
+    qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array, *,
+    bm: int = 256, bn: int = 256, bk: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """qx (M,K) int8 · qw (K,N) int8 → (M,N) f32, dequant by a (M,1) · sw (1,N).
+
+    M, K, N must be multiples of (bm, bk, bn) — the ops.py wrapper pads (zero padding
+    is exact for integer GEMM).
+    """
+    M, K = qx.shape
+    K2, N = qw.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"unpadded shapes M={M} K={K} N={N} for blocks {(bm, bk, bn)}")
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_w8a8_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bm, 1), lambda m, n, k: (m, 0)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(qx, qw, a, sw)
+
+
+# --------------------------------------------------------------------------------------
+# W4A8 (grouped scales, in-VMEM nibble unpack)
+# --------------------------------------------------------------------------------------
+
+def _w4a8_kernel(qx_ref, qw4_ref, a_ref, sw_ref, out_ref, acc_ref, *, n_k: int):
+    """K grid axis walks one quantization group per step.
+
+    qw4 block is (bk//2, bn) packed int4; unpack in VMEM (sign-extend both nibbles),
+    contract in int8→int32 on the MXU, dequant the *group* partial sum by sw[g] and
+    accumulate in f32 (per-group scales cannot be folded after the contraction).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = qw4_ref[...]                                   # (bk//2, bn) int8
+    lo = jnp.left_shift(packed, 4)
+    lo = jnp.right_shift(lo, 4)                             # sign-extended low nibble
+    hi = jnp.right_shift(packed, 4)                         # arithmetic shift
+    # interleave rows: unpacked row 2r = lo[r], row 2r+1 = hi[r]
+    bk2, bn = packed.shape
+    qw = jnp.stack([lo, hi], axis=1).reshape(2 * bk2, bn).astype(jnp.int8)
+
+    part = jax.lax.dot_general(
+        qx_ref[...], qw, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                   # (bm, bn) int32
+    acc_ref[...] += part.astype(jnp.float32) * sw_ref[...]  # group dequant
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...] * a_ref[...]
+
+
+def qgemm_w4a8_pallas(
+    qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array, *,
+    group: int = 128, bm: int = 256, bn: int = 256, interpret: bool = False,
+) -> jax.Array:
+    """qx (M,K) int8 · packed qw4 (K//2,N) int4-pairs → (M,N) f32.
+
+    sw: (K//group, N) f32 per-group scales. K block == group size (one group per
+    grid step, scales applied on the partial sum). K must divide by group; M, N padded
+    by the wrapper.
+    """
+    M, K = qx.shape
+    N = qw4.shape[1]
+    assert qw4.shape[0] * 2 == K, (qw4.shape, K)
+    assert K % group == 0 and M % bm == 0 and N % bn == 0
+    n_k = K // group
+    assert sw.shape == (n_k, N), (sw.shape, n_k, N)
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_w4a8_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, group), lambda m, n, k: (m, k)),
+            pl.BlockSpec((group // 2, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bm, 1), lambda m, n, k: (m, 0)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(qx, qw4, a, sw)

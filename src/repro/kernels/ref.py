@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes and
+asserts allclose against the function here. They are also the path the multi-pod
+dry-run lowers (the CPU backend cannot lower TPU Mosaic kernels; HLO cost analysis is
+identical for the reference semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core import quantizers as Q
+
+
+def qgemm_w8a8_ref(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array) -> jax.Array:
+    """int8 GEMM with separable dequant.
+
+    qx: (M, K) int8 codes; qw: (K, N) int8 codes;
+    a:  (M, 1) f32 row dequant scale (CrossQuant t_i^alpha / qmax);
+    sw: (N,)  f32 col dequant scale (per-output-channel weight scale, b-folded).
+    Returns (M, N) f32:  (qx · qw) * a * sw.
+    """
+    acc = jax.lax.dot_general(
+        qx, qw, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a * sw
+
+
+def qgemm_w4a8_ref(qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array,
+                   group: int = 128) -> jax.Array:
+    """W4A8 grouped GEMM.
+
+    qx:  (M, K) int8; qw4: (K//2, N) int8 (two int4 codes per byte, packed along K);
+    a:   (M, 1) f32; sw: (K//group, N) f32 per-group weight scales.
+    Per-group int32 partial sums dequantized by sw[g] then reduced over groups.
+    """
+    K = qx.shape[-1]
+    qw = packing.unpack_int4(jnp.swapaxes(qw4, -1, -2))
+    qw = jnp.swapaxes(qw, -1, -2)                       # (K, N) int8 in [-8, 7]
+    ngroups = K // group
+    qx_g = qx.reshape(*qx.shape[:-1], ngroups, group)
+    qw_g = qw.reshape(ngroups, group, qw.shape[-1])
+    acc = jnp.einsum("mgk,gkn->mgn", qx_g.astype(jnp.int32),
+                     qw_g.astype(jnp.int32))            # (M, G, N)
+    y = (acc.astype(jnp.float32) * sw).sum(axis=-2)
+    return y * a
+
+
+def act_quantize_ref(x: jax.Array, bcol: jax.Array, bits: int = 8,
+                     alpha: float = 0.15):
+    """Fused CrossQuant activation quantization (static-c path).
+
+    x: (M, K) float; bcol: (K,) f32 = c_j^(1-alpha) from calibration.
+    Returns (codes (M,K) int8, a (M,1) f32) with codes = clip(round(x / (a·qmax·bcol))).
+    Exactly `qlinear.quantize_act_int8`.
+    """
+    qm = Q.qmax(bits)
+    t = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), Q.EPS)
+    a = (t.astype(jnp.float32) ** alpha) / qm
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / (a * bcol)), -qm, qm)
+    return q.astype(jnp.int8), a
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, softcap: float | None = None) -> jax.Array:
+    """Plain softmax attention oracle. q: (B,H,S,D); k/v: (B,H,S,D). f32 math."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        Sq, Sk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,285 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) cell against
+the production meshes, and extract the roofline inputs from the compiled artifact.
+
+THE FIRST TWO LINES BELOW MUST RUN BEFORE ANY OTHER IMPORT: jax locks the device
+count on first init, and the dry-run needs 512 placeholder host devices to build the
+(pod=2, data=16, model=16) mesh. Nothing else in the repo sets this flag — smoke
+tests and benchmarks see the real single CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                     # all cells, both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --quant int8
+    PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun
+
+Per cell it writes ``<out>/<arch>__<shape>__<mesh>__<quant>.json`` with the memory
+analysis (proves it fits), cost analysis (FLOPs / bytes for §Roofline), and the
+parsed per-device collective traffic (§Roofline's third term).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402  (the env var must precede every jax-touching import)
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, all_archs, cell_supported, get, with_padded_heads
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import qlinear as ql
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_static as HS
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.serving import engine
+from repro.sharding import hints, planner
+from repro.training import optimizer as opt_lib, trainer
+
+HBM_PER_CHIP = 16 * 1024 ** 3          # TPU v5e: 16 GiB
+
+
+import dataclasses as _dc
+
+
+def default_quant(kind: str) -> ql.QuantConfig:
+    """Baseline quantization per workload kind (DESIGN.md §3.1).
+
+    Training is full-precision (the paper is *post*-training quantization);
+    prefill/decode serve the paper-faithful fake-quant W8A8 CrossQuant model with
+    weights fake-quantized OFFLINE (w_prequantized — that is what PTQ means; it also
+    keeps stacked weight-quant temporaries out of the serving graph).
+    """
+    if kind == "train":
+        return ql.FP
+    return _dc.replace(ql.W8A8_CROSSQUANT, w_prequantized=True)
+
+
+QUANT_BY_NAME = {
+    "fp": ql.FP,
+    "fake": ql.W8A8_CROSSQUANT,
+    "fake_pt": ql.W8A8_PER_TOKEN,
+    "w4a8": ql.W4A8_G128,
+    "int8": ql.W8A8_INT8,
+    # true-integer W4 serving: packed nibbles + static-c CrossQuant activations
+    "int4": ql.QuantConfig(mode="int8", a_bits=8, w_bits=4, w_quant="group"),
+}
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, quant: ql.QuantConfig,
+               n_micro: Optional[int] = None, train_dtype=jnp.float32,
+               force_tier: Optional[str] = None):
+    """Returns (fn, example_args (SDS), in_shardings, out_shardings, donate).
+
+    ``train_dtype=jnp.bfloat16`` enables mixed-precision training (bf16 params,
+    f32 optimizer moments, f32 update math — the MaxText default): FSDP weight
+    all-gathers halve in both ICI and HBM traffic (§Perf hillclimb)."""
+    plan = planner.make_plan(cfg, shape, mesh, force_tier=force_tier)
+    params_sds = S.param_specs(cfg, dtype=jnp.bfloat16 if shape.kind != "train"
+                               else train_dtype, quant=quant)
+    params_sh = planner.param_shardings(params_sds, cfg, plan, mesh)
+
+    if shape.kind == "train":
+        opt_sds = S.opt_specs(params_sds)
+        opt_sh = opt_lib.OptState(
+            planner.replicated(opt_sds.step, mesh),
+            planner.param_shardings(opt_sds.m, cfg, plan, mesh),
+            planner.param_shardings(opt_sds.v, cfg, plan, mesh))
+        batch_sds = S.input_specs(cfg, shape)
+        batch_sh = planner.batch_shardings(batch_sds, plan, mesh)
+        nm = n_micro if n_micro is not None else trainer.pick_n_micro(
+            cfg, shape.global_batch, plan.dp)
+        step = trainer.make_train_step(cfg, opt_lib.AdamWConfig(), n_micro=nm,
+                                       quant=quant)
+        args = (params_sds, opt_sds, batch_sds)
+        in_sh = (params_sh, opt_sh, batch_sh)
+        out_sh = (params_sh, opt_sh, None)
+        donate = (0, 1)
+        return step, args, in_sh, out_sh, donate, plan, {"n_micro": nm}
+
+    cache_sds = S.cache_specs(cfg, shape)
+    cache_sh = planner.cache_shardings(cache_sds, cfg, plan, mesh)
+    if shape.kind == "prefill":
+        batch_sds = S.input_specs(cfg, shape)
+        batch_sh = planner.batch_shardings(batch_sds, plan, mesh)
+        step = engine.make_prefill_step(cfg, quant)
+        args = (params_sds, batch_sds, cache_sds)
+        in_sh = (params_sh, batch_sh, cache_sh)
+        out_sh = (None, cache_sh)
+        donate = (2,)
+    else:  # decode
+        tok_sds = S.input_specs(cfg, shape)["tokens"]
+        tok_sh = planner.batch_shardings({"tokens": tok_sds}, plan, mesh)["tokens"]
+        len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        raw = engine.make_decode_step(cfg, quant)
+        step = raw
+        args = (params_sds, tok_sds, cache_sds, len_sds)
+        in_sh = (params_sh, tok_sh, cache_sh,
+                 jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        out_sh = (None, cache_sh)
+        donate = (2,)
+    return step, args, in_sh, out_sh, donate, plan, {}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               quant: ql.QuantConfig, quant_name: str,
+               pad_heads: bool = True, n_micro: Optional[int] = None,
+               train_dtype=jnp.float32, force_tier: Optional[str] = None,
+               ssm_chunk: Optional[int] = None, pad_train_heads: bool = False) -> Dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "quant": quant_name, "status": "skip", "reason": why}
+
+    if ssm_chunk:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, ssm_chunk=ssm_chunk)
+
+    orig_heads = cfg.n_heads
+    if pad_heads and (shape.kind != "train" or pad_train_heads):
+        # Serving cells run the head-padded (functionally identical) layout so the
+        # attention projections TP-shard; training keeps the assigned head count
+        # unless --pad-train-heads opts in (§Perf: replicated attention pays the
+        # full S²·H score traffic per device).
+        cfg = with_padded_heads(cfg, mesh.shape["model"])
+
+    t0 = time.time()
+    step, args, in_sh, out_sh, donate, plan, extra = build_cell(
+        cfg, shape, mesh, quant, n_micro=n_micro, train_dtype=train_dtype,
+        force_tier=force_tier)
+    ep = plan.tp_axis if plan.moe_mode == "ep" else None
+    with mesh, hints.sharding_hints(ep_axis=ep, dp_axes=plan.dp_axes,
+                                    tp_axis=plan.tp_axis, mesh=mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = H.memory_stats(compiled)
+    cost = H.extract_cost(compiled)
+    hlo = compiled.as_text()
+    coll = H.collective_stats(hlo)
+    per_dev_bytes = sum(v for k, v in mem.items()
+                        if k in ("argument_size_in_bytes", "output_size_in_bytes",
+                                 "temp_size_in_bytes")) - mem.get("alias_size_in_bytes", 0.0)
+    # The CPU backend converts bf16 params/caches to f32 wholesale (no native bf16
+    # dots); those temporaries do not exist on the TPU target (EXPERIMENTS.md §Dry-run).
+    # Floor: resident state (arguments + outputs − aliases) can never be an artifact.
+    from repro.models.model import block_spec
+    artifact = H.cpu_bf16_artifact_bytes(hlo, lead_dim=block_spec(cfg).n_blocks)
+    resident = (mem.get("argument_size_in_bytes", 0.0)
+                + mem.get("output_size_in_bytes", 0.0)
+                - mem.get("alias_size_in_bytes", 0.0))
+    corrected = max(per_dev_bytes - artifact, resident)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "quant": quant_name,
+        "status": "ok", "tier": plan.tier, "moe_mode": plan.moe_mode,
+        "dp": plan.dp, "tp": plan.tp,
+        "head_pad": f"{orig_heads}->{cfg.n_heads}" if cfg.n_heads != orig_heads else "",
+        **extra,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "per_device_bytes": per_dev_bytes,
+        "cpu_bf16_artifact_bytes": artifact,
+        "per_device_bytes_tpu": corrected,
+        "fits_hbm": bool(corrected < HBM_PER_CHIP),
+        "cost": cost,
+        "collectives": coll,
+        "collective_bytes": H.total_collective_bytes(hlo),
+        # Trip-count-aware static analysis (launch/hlo_static.py):
+        # cost_analysis() visits while bodies once; these figures scale by the
+        # known trip counts of every scan in the program.
+        "static": HS.analyze_hlo(hlo),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="auto",
+                    choices=["auto", *QUANT_BY_NAME.keys()])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    ap.add_argument("--no-pad-heads", action="store_true",
+                    help="disable serving head padding (paper-assigned raw counts)")
+    ap.add_argument("--n-micro", type=int, default=None,
+                    help="override microbatch count (train cells)")
+    ap.add_argument("--train-dtype", default="f32", choices=["f32", "bf16"],
+                    help="training param dtype (bf16 = mixed precision)")
+    ap.add_argument("--tier", default=None,
+                    choices=[None, "tp_full", "tp_kv_rep", "tp_ffn", "dp_only"],
+                    help="override the planner's sharding tier")
+    ap.add_argument("--ssm-chunk", type=int, default=None,
+                    help="override the SSD chunk length (SSM archs)")
+    ap.add_argument("--pad-train-heads", action="store_true",
+                    help="apply head padding to training cells too (§Perf)")
+    args = ap.parse_args()
+    train_dtype = jnp.bfloat16 if args.train_dtype == "bf16" else jnp.float32
+
+    archs = list(all_archs()) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                kind = SHAPES[shape_name].kind
+                if args.quant == "auto":
+                    quant = default_quant(kind)
+                    quant_name = "fp" if kind == "train" else "fake"
+                else:
+                    quant, quant_name = QUANT_BY_NAME[args.quant], args.quant
+                tag = f"__{args.tag}" if args.tag else ""
+                fname = f"{arch}__{shape_name}__{mesh_name}__{quant_name}{tag}.json"
+                try:
+                    rec = lower_cell(arch, shape_name, mesh, mesh_name, quant,
+                                     quant_name, pad_heads=not args.no_pad_heads,
+                                     n_micro=args.n_micro, train_dtype=train_dtype,
+                                     force_tier=args.tier, ssm_chunk=args.ssm_chunk,
+                                     pad_train_heads=args.pad_train_heads)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "quant": quant_name, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc(limit=6)}
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=1)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_fail += st == "fail"
+                line = f"[{st:4s}] {arch:26s} {shape_name:12s} {mesh_name:11s} {quant_name}"
+                if st == "ok":
+                    gb = rec["per_device_bytes"] / 2 ** 30
+                    gbc = rec["per_device_bytes_tpu"] / 2 ** 30
+                    line += (f"  tier={rec['tier']:9s} {gb:6.2f} GiB/dev "
+                             f"(tpu~{gbc:.2f}) fits={rec['fits_hbm']} "
+                             f"compile={rec['compile_s']}s")
+                elif st == "fail":
+                    line += f"  {rec['error'][:120]}"
+                print(line, flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

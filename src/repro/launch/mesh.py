@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (never a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for {axes} mesh, have {len(devices)} — the dry-run must "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax "
+            f"import (launch/dryrun.py does this)")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices exist (tests)."""
+    import numpy as np
+    n = data * model
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

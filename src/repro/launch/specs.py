@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch × shape) cell —
+weak-type-correct, shardable, zero device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import qlinear as ql
+from repro.models import model as M
+from repro.models.quantize import quantize_tree
+from repro.training import optimizer as opt_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """Batch inputs for train/prefill. Decode tokens are (B, 1)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": SDS((B, 1), jnp.int32)}
+        return batch
+    if cfg.frontend == "audio_stub":
+        batch = {"frames": SDS((B, S, cfg.frontend_dim), jnp.bfloat16)}
+        if shape.kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+        return batch
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = SDS((B, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+    return batch
+
+
+def param_specs(cfg: ModelConfig, *, dtype=jnp.float32,
+                quant: Optional[ql.QuantConfig] = None):
+    """Abstract params (and optionally the prepared-integer tree) via eval_shape."""
+    key = jax.random.PRNGKey(0)
+    sds = jax.eval_shape(lambda: M.init_params(key, cfg, dtype=dtype))
+    if quant is not None and quant.mode == "int8":
+        sds = jax.eval_shape(functools.partial(quantize_tree, cfg=quant), sds)
+    return sds
+
+
+def opt_specs(params_sds):
+    return jax.eval_shape(opt_lib.init, params_sds)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    B = shape.global_batch
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, B, shape.seq_len, dtype=dtype))

@@ -1,0 +1,3 @@
+"""Unified model zoo for the 10 assigned architectures."""
+from repro.models.model import apply, init_params, init_cache, loss_fn, block_spec  # noqa: F401
+from repro.models.layers import QuantContext  # noqa: F401

@@ -1,0 +1,29 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` entries specify
+the transformer backbone only; ``input_specs()`` provides precomputed frame/patch
+embeddings). The stubs are linear projections from precomputed features into d_model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear as ql
+from repro.configs.base import ModelConfig
+
+
+def init_frontend(key, cfg: ModelConfig) -> dict:
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": ql.init(key, cfg.frontend_dim, cfg.d_model)}
+
+
+def vision_stub_apply(params: dict, tokens_embed: jax.Array, patch_embeds: jax.Array,
+                      cfg: ModelConfig) -> jax.Array:
+    """Prepend projected patch embeddings: sequence = [patches | text]."""
+    patches = (patch_embeds @ params["proj"]["w"].astype(patch_embeds.dtype))
+    return jnp.concatenate(
+        [patches.astype(tokens_embed.dtype), tokens_embed[:, cfg.n_patches:]], axis=1)
+
+
+def audio_stub_apply(params: dict, frames: jax.Array) -> jax.Array:
+    """Project precomputed acoustic frame features to the backbone width."""
+    return frames @ params["proj"]["w"].astype(frames.dtype)

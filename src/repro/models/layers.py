@@ -1,0 +1,295 @@
+"""Transformer building blocks: norms, RoPE, blockwise (flash-style) attention, MLPs.
+
+All modules are functional: ``init_*`` builds a params dict, ``*_apply`` consumes it.
+Quantized linears go through :mod:`repro.core.qlinear` so every GEMM obeys the model's
+:class:`QuantConfig` (fp / fake CrossQuant / int8 static-c).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear as ql
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class QuantContext:
+    """Threaded through every layer: quant behaviour + (eager-only) calibration."""
+    cfg: ql.QuantConfig
+    observer: object = None
+    prefix: str = ""
+    use_pallas: bool = False
+
+    def sub(self, name: str) -> "QuantContext":
+        return QuantContext(self.cfg, self.observer, f"{self.prefix}/{name}", self.use_pallas)
+
+    def linear(self, params: dict, x: jax.Array, name: str) -> jax.Array:
+        return ql.apply(params, x, self.cfg, name=f"{self.prefix}/{name}",
+                        observer=self.observer, use_pallas=self.use_pallas)
+
+
+# ======================================================================================
+# Norms
+# ======================================================================================
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = y * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ======================================================================================
+# RoPE
+# ======================================================================================
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ======================================================================================
+# Attention
+# ======================================================================================
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": ql.init(ks[0], d, hd),
+        "wk": ql.init(ks[1], d, kvd),
+        "wv": ql.init(ks[2], d, kvd),
+        "wo": ql.init(ks[3], hd, d),
+    }
+
+
+def _softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Bq, Bk) boolean validity mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def blockwise_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, window: Optional[int], softcap: Optional[float],
+    q_offset: int | jax.Array = 0, kv_valid_len: Optional[jax.Array] = None,
+    q_block: int = 1024, kv_block: int = 1024,
+) -> jax.Array:
+    """Memory-efficient multihead attention (online softmax over KV blocks).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D). GQA handled by head-group reshape so the
+    kv tensor is never materialized at H heads. O(Sq·Sk) FLOPs, O(block²) memory.
+    This is the jnp oracle mirrored by the Pallas flash kernel.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv                                   # query heads per kv head
+    scale = D ** -0.5
+
+    # Pad to block multiples.
+    pq = (-Sq) % q_block
+    pk = (-Sk) % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // kv_block
+
+    qp = qp.reshape(B, nq, q_block, Hkv, G, D)
+    kp = kp.reshape(B, nk, kv_block, Hkv, D)
+    vp = vp.reshape(B, nk, kv_block, Hkv, D)
+
+    q_pos_base = jnp.arange(q_block)
+    k_pos_base = jnp.arange(kv_block)
+
+    def q_step(iq):
+        qb = qp[:, iq]                                            # (B, Bq, Hkv, G, D)
+        q_pos = q_offset + iq * q_block + q_pos_base
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            kb, vb = kp[:, jk], vp[:, jk]                         # (B, Bk, Hkv, D)
+            k_pos = jk * kv_block + k_pos_base
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale   # (B,Hkv,G,Bq,Bk)
+            s = _softcap(s.astype(jnp.float32), softcap)
+            valid = _block_mask(q_pos, k_pos, causal, window)
+            # Padded key positions (Sk rounded up to kv_block) must never attend —
+            # the causal mask happens to exclude them for suffix queries, but
+            # non-causal/windowless paths would include the zero-padding otherwise.
+            valid = valid & (k_pos[None, :] < Sk)
+            if kv_valid_len is not None:
+                valid = valid & (k_pos[None, :] < kv_valid_len)
+            s = jnp.where(valid, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_block, D), jnp.float32)
+        # Nested remat: without it the scan's AD saves every (q_block, kv_block)
+        # probability tile — a full S×S attention matrix per layer (1.75 GiB/device at
+        # 4k on deepseek-33b, EXPERIMENTS.md §Perf) — which defeats the point of
+        # blockwise attention. With it the backward recomputes tiles one at a time.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]              # (B,Hkv,G,Bq,D)
+        return out
+
+    outs = jax.lax.map(q_step, jnp.arange(nq))                    # (nq,B,Hkv,G,Bq,D)
+    out = jnp.moveaxis(outs, 0, 1)                                # (B,nq,Hkv,G,Bq,D)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * q_block, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+    cur_len: jax.Array, window: Optional[int], softcap: Optional[float],
+) -> jax.Array:
+    """Single-token attention against a (B, T, Hkv, D) cache. The T axis may be
+    sequence-sharded over the model mesh axis (flash-decoding via GSPMD partial
+    softmax — see sharding/planner)."""
+    B, _, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache) * (D ** -0.5)
+    s = _softcap(s.astype(jnp.float32), softcap)
+    t_pos = jnp.arange(k_cache.shape[1])
+    valid = t_pos[None, None, None, :] < cur_len
+    if window is not None:
+        valid &= (cur_len - 1 - t_pos[None, None, None, :]) < window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext, *,
+    local: bool = False, positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full attention sublayer (pre-norm residual is handled by the caller).
+
+    cache: {"k": (B,T,Hkv,D), "v": ...} — prefill writes it, decode reads+appends.
+    Returns (output, new_cache).
+    """
+    B, S, d = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ctx.linear(params["wq"], x, "wq").reshape(B, S, H, D)
+    k = ctx.linear(params["wk"], x, "wk").reshape(B, S, Hkv, D)
+    v = ctx.linear(params["wv"], x, "wv").reshape(B, S, Hkv, D)
+
+    if positions is None:
+        base = cur_len - S if cur_len is not None else 0
+        positions = base + jnp.arange(S)[None, :]
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    window = cfg.window if local else None
+    new_cache = None
+    if ctx.use_pallas and cache is None and S >= 128:
+        # Fused flash-attention kernel (kernels/flash_attention.py): removes the
+        # S²-score-tile HBM traffic that dominates training cells (§Roofline).
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=cfg.causal, window=window,
+            softcap=cfg.attn_softcap).transpose(0, 2, 1, 3)
+        y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
+        return y, None
+    if cache is not None and S == 1:
+        # decode: append then attend over the cache (cur_len is a batch-aligned scalar;
+        # the serving batcher aligns request positions — serving/engine.py)
+        idx = cur_len - 1
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention(q, k_cache, v_cache, cur_len=cur_len,
+                               window=window, softcap=cfg.attn_softcap)
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+            q_block=min(1024, max(S, 16)), kv_block=min(1024, max(S, 16)))
+        if cache is not None:
+            # prefill: write kv into the cache prefix
+            T = cache["k"].shape[1]
+            pad = ((0, 0), (0, T - S), (0, 0), (0, 0))
+            new_cache = {
+                "k": jnp.pad(k.astype(cache["k"].dtype), pad),
+                "v": jnp.pad(v.astype(cache["v"].dtype), pad),
+            }
+    y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
+    return y, new_cache
+
+
+# ======================================================================================
+# MLP
+# ======================================================================================
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"up": ql.init(ks[0], d, f), "down": ql.init(ks[1], f, d)}
+    if cfg.act.endswith("_glu"):
+        p["gate"] = ql.init(ks[2], d, f)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext) -> jax.Array:
+    up = ctx.linear(params["up"], x, "up")
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(ctx.linear(params["gate"], x, "gate")) * up
+    elif cfg.act == "gelu_glu":
+        h = jax.nn.gelu(ctx.linear(params["gate"], x, "gate")) * up
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.act)
+    return ctx.linear(params["down"], h, "down")

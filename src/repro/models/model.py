@@ -1,0 +1,340 @@
+"""Unified language model covering all 10 assigned architectures.
+
+The layer stack is expressed as a *block spec*: a static list of sublayer kinds that is
+repeated ``n_blocks`` times and executed with ``lax.scan`` over stacked parameters
+(small HLO, cheap remat). Heterogeneous stacks map onto this:
+
+  dense global        -> [attn] × L
+  gemma2 alternating  -> [attn_local, attn_global] × L/2
+  moe                 -> [attn+moe] × L
+  mamba2              -> [ssm] × L
+  zamba2 hybrid       -> ([ssm] × attn_every + shared-attn) × L//k  (+ ssm tail),
+                         shared attention/MLP params are closed over (weight sharing)
+
+Modes: ``train`` (full logits), ``prefill`` (writes caches, last-position logits),
+``decode`` (one token against caches). An ``unroll`` python-loop path supports eager
+calibration (observers cannot run under scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import qlinear as ql
+from repro.models import frontends, moe as moe_lib, ssm as ssm_lib
+from repro.sharding import hints
+from repro.models.layers import (
+    QuantContext, attention_apply, init_attention, init_mlp, init_norm, mlp_apply,
+    norm_apply,
+)
+
+
+# ======================================================================================
+# Block spec
+# ======================================================================================
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    sublayers: Tuple[str, ...]       # attn | attn_local | attn_moe | ssm
+    n_blocks: int
+    tail: Tuple[str, ...] = ()       # unscanned remainder layers (hybrid)
+    shared_attn: bool = False        # zamba2: shared block applied after each super-block
+
+
+def block_spec(cfg: ModelConfig) -> BlockSpec:
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "audio"):
+        if cfg.layer_pattern == "local_global":
+            assert L % 2 == 0
+            return BlockSpec(("attn_local", "attn"), L // 2)
+        return BlockSpec(("attn",), L)
+    if cfg.family == "moe":
+        return BlockSpec(("attn_moe",), L)
+    if cfg.family == "ssm":
+        return BlockSpec(("ssm",), L)
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        return BlockSpec(("ssm",) * k, L // k, tail=("ssm",) * (L % k), shared_attn=True)
+    raise ValueError(cfg.family)
+
+
+# ======================================================================================
+# Init
+# ======================================================================================
+
+def _init_sublayer(key, kind: str, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"norm": init_norm(cfg), "ssm": ssm_lib.init_mamba(ks[0], cfg)}
+    p = {"norm1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+         "norm2": init_norm(cfg)}
+    if kind == "attn_moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.float32
+    spec = block_spec(cfg)
+    ks = jax.random.split(key, 8)
+
+    def stack(base_key, kind):
+        keys = jax.random.split(base_key, spec.n_blocks)
+        return jax.vmap(lambda k: _init_sublayer(k, kind, cfg))(keys)
+
+    params: Dict[str, Any] = {
+        "embed": {"w": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model)) * 0.02)},
+        "blocks": [stack(jax.random.fold_in(ks[1], i), kind)
+                   for i, kind in enumerate(spec.sublayers)],
+        "final_norm": init_norm(cfg),
+    }
+    if spec.tail:
+        params["tail"] = [_init_sublayer(jax.random.fold_in(ks[2], i), kind, cfg)
+                          for i, kind in enumerate(spec.tail)]
+    if spec.shared_attn:
+        params["shared_attn"] = {
+            "norm1": init_norm(cfg),
+            "attn": init_attention(ks[3], cfg),
+            "norm2": init_norm(cfg),
+            "mlp": init_mlp(ks[4], cfg),
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ql.init(ks[5], cfg.d_model, cfg.vocab_padded)
+    if cfg.frontend != "none":
+        params["frontend"] = frontends.init_frontend(ks[6], cfg)
+    params = jax.tree_util.tree_map(lambda x: x.astype(dtype)
+                                    if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    return params
+
+
+# ======================================================================================
+# Sublayer application
+# ======================================================================================
+
+def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
+                    cache=None, cur_len=None, decode=False):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, new_cache = ssm_lib.mamba_apply(p["ssm"], norm_apply(p["norm"], x, cfg), cfg,
+                                           ctx.sub("ssm"), cache=cache, decode=decode)
+        return x + h, new_cache, aux
+    local = kind == "attn_local"
+    h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
+                                   ctx.sub("attn"), local=local, cache=cache,
+                                   cur_len=cur_len)
+    x = x + h
+    if kind == "attn_moe":
+        h, aux = moe_lib.moe_apply(p["moe"], norm_apply(p["norm2"], x, cfg), cfg,
+                                   ctx.sub("moe"))
+    else:
+        h = mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg), cfg, ctx.sub("mlp"))
+    return x + h, new_cache, aux
+
+
+def _shared_block(p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
+                  cache=None, cur_len=None):
+    h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
+                                   ctx.sub("shared_attn"), cache=cache, cur_len=cur_len)
+    x = x + h
+    x = x + mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg), cfg, ctx.sub("shared_mlp"))
+    return x, new_cache
+
+
+# ======================================================================================
+# Cache construction
+# ======================================================================================
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Pytree of per-layer caches, stacked (n_blocks, ...) to be scanned."""
+    spec = block_spec(cfg)
+
+    def one(kind):
+        if kind == "ssm":
+            return {
+                "state": jnp.zeros((batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1,
+                                   cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                                  jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+
+    cache: Dict[str, Any] = {
+        "blocks": [jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape), one(kind))
+            for kind in spec.sublayers],
+    }
+    if spec.tail:
+        cache["tail"] = [one(k) for k in spec.tail]
+    if spec.shared_attn:
+        cache["shared"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape), one("attn"))
+    return cache
+
+
+# ======================================================================================
+# Forward
+# ======================================================================================
+
+def _embed(params, batch, cfg: ModelConfig):
+    if cfg.frontend == "audio_stub":
+        x = frontends.audio_stub_apply(params["frontend"], batch["frames"])
+    else:
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            # prefill carries patch embeddings; decode steps are text-token-only
+            x = frontends.vision_stub_apply(params["frontend"], x,
+                                            batch["patch_embeds"], cfg)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = hints.constrain_batch(x)
+    return x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+
+def _lm_head(params, x, cfg: ModelConfig, ctx: QuantContext):
+    """Returns logits over cfg.vocab_padded; padded ids carry -1e9 (never sampled,
+    ~zero softmax mass) so callers can treat the padded width as the vocabulary."""
+    x = norm_apply(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["w"].T.astype(x.dtype)
+    else:
+        logits = ctx.linear(params["lm_head"], x, "lm_head")
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = (jnp.arange(cfg.vocab_padded) >= cfg.vocab) * -1e9
+        logits = logits + pad_mask
+    return logits
+
+
+def apply(
+    params: dict, batch: dict, cfg: ModelConfig, *,
+    ctx: Optional[QuantContext] = None, mode: str = "train",
+    caches: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
+    unroll: bool = False, remat: bool = False,
+) -> Tuple[jax.Array, dict]:
+    """Returns (logits, {"aux_loss": scalar, "caches": updated-or-None}).
+
+    mode: train (no caches) | prefill (build caches) | decode (read+update caches).
+    """
+    ctx = ctx or QuantContext(cfg.quant)
+    spec = block_spec(cfg)
+    decode = mode == "decode"
+    x = _embed(params, batch, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    use_cache = mode in ("prefill", "decode")
+    if use_cache and caches is None:
+        raise ValueError("prefill/decode need caches (init_cache)")
+
+    def block_fn(x, block_params, block_caches, shared_cache, cur_len, bctx=None):
+        bctx = bctx or ctx
+        x = hints.constrain_batch(x)
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_caches: List[Any] = []
+        for i, kind in enumerate(spec.sublayers):
+            c = block_caches[i] if use_cache else None
+            x, nc, aux = _apply_sublayer(kind, block_params[i], x, cfg,
+                                         bctx.sub(f"S{i}"),
+                                         cache=c, cur_len=cur_len, decode=decode)
+            aux_sum += aux
+            new_caches.append(nc if nc is not None else c)
+        new_shared = shared_cache
+        if spec.shared_attn:
+            x, new_shared = _shared_block(params["shared_attn"], x, cfg, ctx,
+                                          cache=shared_cache, cur_len=cur_len)
+        return x, new_caches, new_shared, aux_sum
+
+    if unroll:
+        take = lambda tree, i: jax.tree_util.tree_map(lambda a: a[i], tree)
+        for b in range(spec.n_blocks):
+            bp = [take(params["blocks"][i], b) for i in range(len(spec.sublayers))]
+            bc = ([take(caches["blocks"][i], b) for i in range(len(spec.sublayers))]
+                  if use_cache else [None] * len(spec.sublayers))
+            sc = take(caches["shared"], b) if (use_cache and spec.shared_attn) else None
+            # Per-layer ctx prefix: calibration observers record per-layer column
+            # stats under names calibration.stack_tables maps back to param paths.
+            x, _, _, aux = block_fn(x, bp, bc, sc, cur_len, bctx=ctx.sub(f"L{b}"))
+            aux_total += aux
+    else:
+        def scan_body(carry, xs):
+            x, aux_acc = carry
+            bp = xs["p"]
+            bc = xs.get("c", [None] * len(spec.sublayers))
+            sc = xs.get("s")
+            x, ncs, nsc, aux = block_fn(x, bp, bc, sc, cur_len)
+            ys = {}
+            if use_cache:
+                ys["c"] = ncs
+                if spec.shared_attn:
+                    ys["s"] = nsc
+            return (x, aux_acc + aux), ys
+
+        body = jax.checkpoint(scan_body, policy=None) if remat else scan_body
+        xs: Dict[str, Any] = {"p": params["blocks"]}
+        if use_cache:
+            xs["c"] = caches["blocks"]
+            if spec.shared_attn:
+                xs["s"] = caches["shared"]
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if use_cache:
+            caches = dict(caches)
+            caches["blocks"] = ys["c"]
+            if spec.shared_attn:
+                caches["shared"] = ys["s"]
+
+    # hybrid tail (unscanned remainder layers)
+    if spec.tail:
+        new_tail = []
+        for i, kind in enumerate(spec.tail):
+            c = caches["tail"][i] if use_cache else None
+            x, nc, aux = _apply_sublayer(kind, params["tail"][i], x, cfg,
+                                         ctx.sub(f"T{i}"),
+                                         cache=c, cur_len=cur_len, decode=decode)
+            aux_total += aux
+            new_tail.append(nc if nc is not None else c)
+        if use_cache:
+            caches["tail"] = new_tail
+
+    if mode == "prefill":
+        logits = _lm_head(params, x[:, -1:], cfg, ctx)
+    else:
+        logits = _lm_head(params, x, cfg, ctx)
+    return logits, {"aux_loss": aux_total, "caches": caches if use_cache else None}
+
+
+# ======================================================================================
+# Loss
+# ======================================================================================
+
+def loss_fn(params, batch, cfg: ModelConfig, *, ctx=None, remat: bool = True):
+    """Causal-LM (or encoder classification) cross entropy + MoE aux loss."""
+    logits, extras = apply(params, batch, cfg, ctx=ctx, mode="train", remat=remat)
+    if cfg.is_encoder_only:
+        labels = batch["labels"]
+        mask = jnp.ones(labels.shape, jnp.float32)
+    else:
+        tokens = batch["tokens"]
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        mask = jnp.ones(labels.shape, jnp.float32).at[:, -1].set(0.0)
+        if cfg.frontend == "vision_stub":
+            mask = mask.at[:, : cfg.n_patches].set(0.0)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + 0.01 * extras["aux_loss"]
+    return loss, {"ce": ce, "aux": extras["aux_loss"],
+                  "ppl": jnp.exp(jnp.minimum(ce, 20.0))}

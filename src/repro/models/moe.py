@@ -1,0 +1,168 @@
+"""Mixture-of-Experts layer: deterministic top-k routing with capacity, sort-based
+dispatch (O(N·k) memory — no (N, E, C) dense dispatch tensors), stacked-expert GEMMs
+that shard over the model axis (EP) or within experts (expert-internal TP) per the
+sharding planner, and a load-balancing auxiliary loss.
+
+Activation quantization inside experts: CrossQuant column statistics are computed over
+the tokens routed to each expert (the (E, C, d) stacked layout keeps eq. 5's row/col
+geometry per expert) — DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear as ql
+from repro.configs.base import ModelConfig
+from repro.models.layers import QuantContext
+from repro.sharding import hints
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dff = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, E)) * d ** -0.5).astype(jnp.float32)},
+        "up": ql.init(ks[1], d, dff, n_stack=E),
+        "down": ql.init(ks[2], dff, d, n_stack=E),
+    }
+    if cfg.act.endswith("_glu"):
+        p["gate"] = ql.init(ks[3], d, dff, n_stack=E)
+    if cfg.n_shared_experts:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)   # round up to 8 for TPU-friendly shapes
+
+
+def _expert_ffn(p: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext) -> jax.Array:
+    """x: (E, C, d) stacked per expert. Linear names match the param-tree paths so
+    calibration tables attach (calibration.stack_tables)."""
+    up = ctx.linear(p["up"], x, "up")
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(ctx.linear(p["gate"], x, "gate")) * up
+    elif cfg.act == "gelu_glu":
+        h = jax.nn.gelu(ctx.linear(p["gate"], x, "gate")) * up
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    return ctx.linear(p["down"], h, "down")
+
+
+def _route_group(xf: jax.Array, router_w: jax.Array, cfg: ModelConfig):
+    """Routing + sort-based slot assignment for one token group.
+
+    xf: (Ng, d). Returns (gate_w (Ng,K), e_idx (Ng*K,), pos (Ng*K,), keep, aux).
+    """
+    Ng, _ = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(Ng, cfg)
+
+    logits = xf.astype(jnp.float32) @ router_w                       # router stays fp32
+    probs = jax.nn.softmax(logits, axis=-1)                          # (Ng, E)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)                       # (Ng, K)
+    if K > 1:
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing aux loss.
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(E).at[gate_idx.reshape(-1)].add(1.0) / (Ng * K)
+    aux = E * jnp.sum(me * ce)
+
+    # Sort-based position of each (token, k) within its expert; overflow beyond the
+    # per-group capacity routes to expert id E, dropped by the scatter's mode="drop".
+    flat_e = gate_idx.reshape(-1)                                    # (Ng*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(Ng * K) - starts[flat_e[order]]
+    pos = jnp.zeros(Ng * K, jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+    e_idx = jnp.where(keep, flat_e, E).astype(jnp.int32)
+    pos_c = jnp.where(keep, pos, 0)
+    return gate_w, e_idx, pos_c, keep, aux
+
+
+def _dispatch_group(xf: jax.Array, gate_w, e_idx, pos_c, keep, cfg: ModelConfig):
+    """Scatter one group's tokens into its (E, C, d) expert buffer."""
+    Ng, d = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(Ng, cfg)
+    token_id = jnp.repeat(jnp.arange(Ng), K)
+    expanded = xf[token_id]                                          # (Ng*K, d)
+    buf = jnp.zeros((E, C, d), xf.dtype).at[e_idx, pos_c].set(expanded, mode="drop")
+    return buf
+
+
+def _combine_group(expert_out, gate_w, e_idx, pos_c, keep, cfg: ModelConfig, dtype):
+    """Gather one group's expert outputs back to token order and mix by gate."""
+    E, C, d = expert_out.shape
+    K = cfg.top_k
+    Ng = e_idx.shape[0] // K
+    token_id = jnp.repeat(jnp.arange(Ng), K)
+    out_rows = expert_out[jnp.minimum(e_idx, E - 1), pos_c]          # (Ng*K, d)
+    gathered = jnp.where(keep[:, None], out_rows, 0.0)
+    contrib = gathered * gate_w.reshape(-1)[:, None].astype(dtype)
+    return jnp.zeros((Ng, d), dtype).at[token_id].add(contrib)
+
+
+def moe_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux_loss scalar).
+
+    Dispatch is *grouped*: tokens are split into G data-parallel groups, each with
+    its own capacity (GShard/Switch "local capacity"). Every gather/scatter then has
+    a leading sharded batch dim, which SPMD partitions cleanly — an ungrouped global
+    dispatch replicates the (N·K, d) expansion on every device (48 GiB/device on
+    granite prefill_32k, EXPERIMENTS.md §Perf). G == data-axis size under the
+    launcher's hints; 1 (global dispatch) in tests/eager mode and during calibration
+    (observers cannot run under vmap).
+    """
+    B, S, d = x.shape
+    N = B * S
+    E = cfg.n_experts
+    G = 1 if ctx.observer is not None else hints.token_group_count(N)
+    xf = x.reshape(N, d)
+
+    if G == 1:
+        gate_w, e_idx, pos_c, keep, aux = _route_group(xf, params["router"]["w"], cfg)
+        expert_in = hints.constrain_experts(
+            _dispatch_group(xf, gate_w, e_idx, pos_c, keep, cfg))
+        expert_out = hints.constrain_experts(_expert_ffn(params, expert_in, cfg, ctx))
+        y = _combine_group(expert_out, gate_w, e_idx, pos_c, keep, cfg, x.dtype)
+    else:
+        xg = hints.constrain_token_groups(xf.reshape(G, N // G, d))
+        gate_w, e_idx, pos_c, keep, aux_g = jax.vmap(
+            lambda xi: _route_group(xi, params["router"]["w"], cfg))(xg)
+        aux = aux_g.mean()
+        expert_in = jax.vmap(
+            lambda xi, gw, ei, pc, kp: _dispatch_group(xi, gw, ei, pc, kp, cfg)
+        )(xg, gate_w, e_idx, pos_c, keep)                            # (G, E, C, d)
+        expert_in = hints.constrain_grouped_experts(expert_in)
+        # Experts see all groups' slots: fold G into capacity for the stacked GEMM.
+        C = expert_in.shape[2]
+        flat_in = expert_in.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+        flat_in = hints.constrain_experts(flat_in)
+        flat_out = hints.constrain_experts(_expert_ffn(params, flat_in, cfg, ctx))
+        expert_out = hints.constrain_grouped_experts(
+            flat_out.reshape(E, G, C, d).transpose(1, 0, 2, 3))
+        y = jax.vmap(
+            lambda eo, gw, ei, pc, kp: _combine_group(eo, gw, ei, pc, kp, cfg, x.dtype)
+        )(expert_out, gate_w, e_idx, pos_c, keep)
+        y = hints.constrain_token_groups(y).reshape(N, d)
+
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp_apply
+        y = y + mlp_apply(params["shared"], xf[None], cfg, ctx)[0]
+    return y.reshape(B, S, d), aux

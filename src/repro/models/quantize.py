@@ -1,0 +1,126 @@
+"""Whole-model weight quantization: walk a params pytree and convert every quantizable
+linear to its prepared integer form (int8 static-c CrossQuant or packed int4 groups).
+
+This is the offline PTQ step of a serving deployment: run once, checkpoint the
+quantized tree, serve from it. Embeddings, lm_head, router, norms, convs and the SSM
+recurrence parameters stay fp (paper scope: activations *entering linear layers*)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qlinear as ql
+
+QUANTIZABLE_PARENTS = ("wq", "wk", "wv", "wo", "up", "gate", "down",
+                       "in_proj", "out_proj")
+
+
+def _pathstr(path) -> str:
+    out = []
+    for p in path:
+        out.append(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)))
+    return "/".join(out)
+
+
+def quantize_tree(params, cfg: ql.QuantConfig,
+                  tables: Optional[Dict[str, np.ndarray]] = None):
+    """Returns a new params pytree with prepared quantized linears.
+
+    tables: calibration column-absmax per linear name (core.calibration.Observer);
+    missing names fall back to c=1 (pure per-token row scaling)."""
+    tables = tables or {}
+
+    def convert(node, prefix):
+        if isinstance(node, dict):
+            if "w" in node and prefix and prefix.split("/")[-1] in QUANTIZABLE_PARENTS:
+                w = node["w"]
+                if w.ndim >= 2:
+                    cmax = node.get("cmax")
+                    if cmax is None and prefix in tables:
+                        cmax = jnp.asarray(tables[prefix])
+                    if cfg.w_bits <= 4:
+                        return ql.prepare_int4({"w": w}, cfg, cmax)
+                    return ql.prepare_int8({"w": w}, cfg, cmax)
+            return {k: convert(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [convert(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+        return node
+
+    return convert(params, "")
+
+
+def fake_quantize_weights(params, cfg: ql.QuantConfig):
+    """Offline PTQ for the *fake-quant* evaluation path: replace every quantizable
+    linear's ``w`` with its fake-quantized value. Serving with
+    ``cfg.w_prequantized=True`` is then bitwise identical to in-graph weight fake
+    quantization, but the decode/prefill graphs carry no weight-quant compute (which
+    XLA otherwise hoists into stacked f32 copies of the whole weight tree —
+    EXPERIMENTS.md §Perf)."""
+    from repro.core.qlinear import _fake_weight
+
+    def convert(node, prefix):
+        if isinstance(node, dict):
+            if "w" in node and prefix and prefix.split("/")[-1] in QUANTIZABLE_PARENTS:
+                if node["w"].ndim >= 2:
+                    return {**node, "w": _fake_weight(node["w"], cfg)}
+            return {k: convert(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [convert(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+        return node
+
+    return convert(params, "")
+
+
+def quantized_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def pad_head_params(params, cfg_from, cfg_to):
+    """Transplant params into a head-padded layout (configs.with_padded_heads).
+
+    Padding is PER KV GROUP (GQA maps head h to kv group h // G, so appending heads
+    at the tail would reassign existing heads to different kv groups): each group
+    gains zero q-columns (padded heads emit q=0) and zero wo-rows (padded heads
+    contribute nothing) — the padded model computes exactly the same function, but
+    its attention projections divide the TP degree.
+    """
+    import jax.numpy as jnp
+    dh = cfg_to.head_dim
+    hkv = cfg_from.n_kv_heads
+    g0 = cfg_from.n_heads // hkv
+    g1 = cfg_to.n_heads // hkv
+    assert dh == cfg_from.head_dim and cfg_to.n_kv_heads == hkv
+    if g0 == g1:
+        return params
+
+    def pad_wq(w):            # (..., d, H0*dh) -> (..., d, H1*dh)
+        lead = w.shape[:-1]
+        wg = w.reshape(*lead, hkv, g0, dh)
+        pad = [(0, 0)] * wg.ndim
+        pad[-2] = (0, g1 - g0)
+        return jnp.pad(wg, pad).reshape(*lead, hkv * g1 * dh)
+
+    def pad_wo(w):            # (..., H0*dh, d) -> (..., H1*dh, d)
+        lead, d_out = w.shape[:-2], w.shape[-1]
+        wg = w.reshape(*lead, hkv, g0, dh, d_out)
+        pad = [(0, 0)] * wg.ndim
+        pad[-3] = (0, g1 - g0)
+        return jnp.pad(wg, pad).reshape(*lead, hkv * g1 * dh, d_out)
+
+    def convert(node, parent=""):
+        if isinstance(node, dict):
+            if parent == "wq" and "w" in node:
+                return {**node, "w": pad_wq(node["w"])}
+            if parent == "wo" and "w" in node:
+                return {**node, "w": pad_wo(node["w"])}
+            return {k: convert(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [convert(v, parent) for v in node]
+        return node
+
+    return convert(params)

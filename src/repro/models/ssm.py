@@ -1,0 +1,202 @@
+"""Mamba2 (state-space duality / SSD) block — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm as a single `lax.scan` over sequence chunks
+(carry = inter-chunk SSM state), which keeps peak memory at O(chunk²) instead of
+O(S²) or O(S·N·H): the formulation long-context prefill needs, and the direct jnp
+oracle for the Pallas `ssd` kernel.
+
+Per chunk (length l, heads h, head dim p, state n; decay dA = dt·A ≤ 0):
+  L[i,j]      = exp(Σ_{k=j+1..i} dA_k)              intra-chunk decay (lower-tri)
+  y_diag      = (C·Bᵀ ⊙ L) · (dt·x)                 intra-chunk "attention"
+  y_off       = C · S_prev, decayed by exp(cum dA)  contribution of carried state
+  S_new       = S_prev·exp(Σ dA) + Σ_s B_s ⊗ (dt·x)_s · exp(Σ_{k>s} dA_k)
+
+Decode is the O(1) recurrence  S ← S·exp(dt·A) + dt·x⊗B,  y = C·S + D·x.
+
+All projections are quantized linears (CrossQuant applies to the in/out projections;
+the recurrence itself stays fp — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear as ql
+from repro.configs.base import ModelConfig
+from repro.models.layers import QuantContext
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    G, N, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * G * N + H        # z, x, B, C, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,)) * (jnp.log(0.1) - jnp.log(0.001))
+                 + jnp.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": ql.init(ks[0], d, proj_out),
+        "conv_w": (jax.random.normal(ks[1], (K, _conv_channels(cfg))) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((_conv_channels(cfg),), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": ql.init(ks[3], di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d via shift-sum (K is tiny). x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        shift = K - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[k]
+    return out + b
+
+
+def _conv_step(x_t: jax.Array, buf: jax.Array, w: jax.Array, b: jax.Array):
+    """One-token causal conv with rolling buffer. x_t: (B,C); buf: (B,K-1,C)."""
+    window = jnp.concatenate([buf, x_t[:, None]], axis=1)          # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * G * N], axis=-1)
+    return z, xbc, dt                                              # dt: (..., H)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (B, l, H) -> (B, H, l, l) with T[i,j] = Σ_{k=j+1..i} dA_k (−inf above diag)."""
+    cum = jnp.cumsum(dA, axis=1)                                   # (B, l, H)
+    T = cum.transpose(0, 2, 1)[:, :, :, None] - cum.transpose(0, 2, 1)[:, :, None, :]
+    l = dA.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, T, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    chunk: int, init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) (G=1 squeezed).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    S0 = S
+    pad = (-S) % chunk
+    if pad:
+        # Pad the sequence to a chunk multiple. dt is padded with zeros so padded
+        # positions neither decay nor update the carried state (dA = dt·A = 0 →
+        # decay 1, update dt·x = 0): the final state stays exact for prefill.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    state0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xb, dtb, Bb, Cb = inp                                      # per-chunk slices
+        dA = dtb * A                                               # (B,l,H), ≤ 0
+        cum = jnp.cumsum(dA, axis=1)                               # (B,l,H)
+        xdt = xb * dtb[..., None]                                  # (B,l,H,P)
+
+        L = jnp.exp(_segsum(dA))                                   # (B,H,l,l)
+        scores = jnp.einsum("bln,bsn->bls", Cb, Bb)                # (B,l,l)
+        y_diag = jnp.einsum("bls,bhls,bshp->blhp", scores, L, xdt)
+
+        decay_out = jnp.exp(cum)                                   # (B,l,H)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", Cb, state, decay_out)
+
+        chunk_decay = jnp.exp(cum[:, -1])                          # (B,H)
+        decay_states = jnp.exp(cum[:, -1:] - cum)                  # (B,l,H)
+        state_new = state * chunk_decay[:, :, None, None] + jnp.einsum(
+            "bln,blhp,blh->bhpn", Bb, xdt, decay_states)
+        return state_new, y_diag + y_off
+
+    final_state, ys = jax.lax.scan(step, state0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)[:, :S0]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+    Bm: jax.Array, Cm: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrence. state: (B,H,P,N); x: (B,H,P); dt: (B,H); Bm/Cm: (B,N)."""
+    dA = jnp.exp(dt * A)                                           # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], Bm)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    return state, y
+
+
+def mamba_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext, *,
+    cache: Optional[dict] = None, decode: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba2 block. x: (B,S,d). cache = {"state": (B,H,P,N), "conv": (B,K-1,C)}."""
+    Bsz, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    A = -jnp.exp(params["A_log"])
+
+    proj = ctx.linear(params["in_proj"], x, "in_proj")
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    if decode:
+        assert S == 1 and cache is not None
+        xbc_t, conv_buf = _conv_step(xbc[:, 0].astype(jnp.float32),
+                                     cache["conv"], params["conv_w"], params["conv_b"])
+        xbc_t = jax.nn.silu(xbc_t)
+        xi, Bm, Cm = jnp.split(xbc_t, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+        state, y = ssd_decode_step(
+            cache["state"], xi.reshape(Bsz, H, P), dt[:, 0], A, Bm, Cm)
+        y = y + params["D"][:, None] * xi.reshape(Bsz, H, P)
+        y = y.reshape(Bsz, 1, cfg.d_inner)
+        new_cache = {"state": state, "conv": conv_buf}
+    else:
+        xbc_raw = xbc.astype(jnp.float32)          # cache keeps PRE-conv inputs
+        xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
+        xi, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+        xh = xi.reshape(Bsz, S, H, P)
+        init_state = cache["state"] if cache is not None else None
+        y, final_state = ssd_scan(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S),
+                                  init_state=init_state)
+        y = y + params["D"][None, None, :, None] * xh
+        y = y.reshape(Bsz, S, cfg.d_inner)
+        new_cache = None
+        if cache is not None:
+            K = cfg.ssm_conv
+            conv_buf = xbc_raw[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+                xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            new_cache = {"state": final_state, "conv": conv_buf}
+
+    # gated RMSNorm (mamba2) then output projection
+    g = y * jax.nn.silu(z.astype(y.dtype))
+    g = g * jax.lax.rsqrt(jnp.mean(jnp.square(g), axis=-1, keepdims=True) + 1e-6)
+    g = (g * params["norm_scale"]).astype(x.dtype)
+    out = ctx.linear(params["out_proj"], g, "out_proj")
+    return out, new_cache

@@ -1,0 +1,56 @@
+"""Elastic mesh rebuild: shrink/grow the device mesh and reshard live state.
+
+When the supervisor evicts a straggler or loses a host, the surviving device count
+changes; training continues on a *smaller* (or, after repair, larger) mesh. The moving
+parts:
+
+  * ``plan_mesh(n_devices, model_parallel)`` — choose the largest (data, model) grid
+    over the surviving devices, holding the model axis fixed (TP degree is a property
+    of the weight layout; DP absorbs elasticity, as in production systems).
+  * ``reshard(tree, old → new shardings)`` — device_put against the new mesh; with the
+    checkpoint manager the same path handles restore-time elasticity.
+
+The assigned production mesh is (data=16, model=16); losing one host of 8 chips drops
+data 16 → 15 if 15 divides the batch, else to the largest divisor — ``usable_dp``
+encodes that global-batch divisibility rule.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def usable_dp(n_avail_dp: int, global_batch: int) -> int:
+    """Largest dp ≤ n_avail_dp dividing global_batch (keeps per-replica batch whole)."""
+    for dp in range(min(n_avail_dp, global_batch), 0, -1):
+        if global_batch % dp == 0:
+            return dp
+    return 1
+
+
+def plan_mesh_shape(n_devices: int, model_parallel: int,
+                    global_batch: Optional[int] = None) -> Tuple[int, int]:
+    """(data, model) for the surviving device count; model axis held fixed."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep tp={model_parallel} with {n_devices} devices — "
+            f"weight layout requires at least one full model-parallel group")
+    dp = n_devices // model_parallel
+    if global_batch is not None:
+        dp = usable_dp(dp, global_batch)
+    return dp, model_parallel
+
+
+def make_elastic_mesh(devices, model_parallel: int,
+                      global_batch: Optional[int] = None) -> Mesh:
+    dp, tp = plan_mesh_shape(len(devices), model_parallel, global_batch)
+    grid = np.asarray(devices[: dp * tp]).reshape(dp, tp)
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard(tree, shardings):
+    """Lay out ``tree`` (host or device arrays) against new shardings (new mesh)."""
+    return jax.tree_util.tree_map(lambda a, s: jax.device_put(a, s), tree, shardings)

@@ -1,0 +1,122 @@
+"""Serving engine: prefill / decode step builders + a host-side continuous batcher.
+
+Step functions are pure and jit/pjit-ready: the dry-run lowers exactly these. The
+engine serves either raw-fp params (with fake-quant CrossQuant activations — the
+paper-faithful W8A8 evaluation path) or a prepared integer tree from
+``models.quantize.quantize_tree`` (the int8/int4 deployment path: ~2×/4× weight bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import qlinear as ql
+from repro.models import model as M
+from repro.models.layers import QuantContext
+
+
+def make_prefill_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None):
+    ctx = QuantContext(quant or cfg.quant)
+
+    def prefill_step(params, batch, caches):
+        """batch tokens (B, S) → (last-position logits (B,1,V), filled caches)."""
+        S = (batch["frames"].shape[1] if "frames" in batch else batch["tokens"].shape[1])
+        if cfg.is_encoder_only:
+            logits, _ = M.apply(params, batch, cfg, ctx=ctx, mode="train")
+            return logits[:, -1:], caches
+        logits, ex = M.apply(params, batch, cfg, ctx=ctx, mode="prefill",
+                             caches=caches, cur_len=jnp.asarray(S, jnp.int32))
+        return logits, ex["caches"]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None):
+    ctx = QuantContext(quant or cfg.quant)
+
+    def decode_step(params, tokens, caches, cur_len):
+        """tokens (B,1) + caches + cur_len (scalar int32, post-append length)
+        → (logits (B,1,V), updated caches)."""
+        logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx, mode="decode",
+                             caches=caches, cur_len=cur_len)
+        return logits, ex["caches"]
+
+    return decode_step
+
+
+# ======================================================================================
+# Host-side continuous batcher (end-to-end serving example / integration tests)
+# ======================================================================================
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (len,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Batched greedy serving over a fixed-size slot table.
+
+    Requests with equal prompt lengths are prefetched together (the batcher groups by
+    length); decode advances all active slots in lock-step, retiring finished requests
+    and refilling slots — the standard continuous-batching loop, single-host edition.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int, max_len: int,
+                 quant: Optional[ql.QuantConfig] = None, eos_id: int = 0):
+        self.cfg, self.params = cfg, params
+        self.B, self.T = batch_size, max_len
+        self.eos = eos_id
+        self.prefill = jax.jit(make_prefill_step(cfg, quant))
+        self.decode = jax.jit(make_decode_step(cfg, quant))
+        self.queue: List[Request] = []
+
+    def submit(self, prompts: List[np.ndarray], max_new: int = 16) -> List[Request]:
+        reqs = [Request(i, np.asarray(p, np.int32), max_new)
+                for i, p in enumerate(prompts)]
+        self.queue.extend(reqs)
+        return reqs
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        while self.queue:
+            group_len = len(self.queue[0].prompt)
+            group = [r for r in self.queue if len(r.prompt) == group_len][: self.B]
+            self.queue = [r for r in self.queue if r not in group]
+            done.extend(self._serve_group(group, group_len))
+        return done
+
+    def _serve_group(self, group: List[Request], plen: int) -> List[Request]:
+        B = self.B
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(group):
+            toks[i] = r.prompt
+        caches = M.init_cache(self.cfg, B, self.T, dtype=jnp.float32)
+        logits, caches = self.prefill(self.params, {"tokens": jnp.asarray(toks)}, caches)
+        cur = plen
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        max_new = max(r.max_new for r in group)
+        for step in range(max_new):
+            for i, r in enumerate(group):
+                if not r.done and step < r.max_new:
+                    t = int(next_tok[i])
+                    r.out.append(t)
+                    if t == self.eos:
+                        r.done = True
+            cur += 1
+            if cur >= self.T or all(r.done for r in group):
+                break
+            logits, caches = self.decode(self.params, next_tok[:, None], caches,
+                                         jnp.asarray(cur, jnp.int32))
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for r in group:
+            r.done = True
+        return group

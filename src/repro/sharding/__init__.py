@@ -1,0 +1,3 @@
+from repro.sharding.planner import (  # noqa: F401
+    Plan, make_plan, param_shardings, batch_shardings, cache_shardings, replicated,
+)

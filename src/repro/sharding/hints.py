@@ -1,0 +1,157 @@
+"""Activation-sharding hints (contextvars) consumed inside model code.
+
+GSPMD propagates most activation shardings from parameter/input shardings, but a few
+internal tensors need explicit constraints to avoid pathological layouts — notably the
+MoE dispatch buffer (must be expert-sharded, not replicated) and the post-embedding
+activations (a gather output can lose its batch sharding, after which the partitioner
+replicates whole activation stacks). Launchers set these hints around tracing; unit
+tests and eager code leave them unset (every constraint degrades to a no-op).
+
+Axis *sizes* are carried in the hints (from the concrete mesh) because
+``jax.sharding.get_abstract_mesh()`` is empty under a plain ``with mesh:`` scope —
+divisibility checks cannot read the mesh from inside a trace.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_EP_AXIS: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "ep_axis", default=None)
+_DP_AXES: contextvars.ContextVar[Optional[Tuple[str, ...]]] = contextvars.ContextVar(
+    "dp_axes", default=None)
+_TP_AXIS: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "tp_axis", default=None)
+_AXIS_SIZES: contextvars.ContextVar[Dict[str, int]] = contextvars.ContextVar(
+    "axis_sizes", default={})
+
+
+@contextlib.contextmanager
+def sharding_hints(ep_axis: Optional[str] = None,
+                   dp_axes: Optional[Tuple[str, ...]] = None,
+                   tp_axis: Optional[str] = None,
+                   mesh=None):
+    sizes = dict(mesh.shape) if mesh is not None else {}
+    t1 = _EP_AXIS.set(ep_axis)
+    t2 = _DP_AXES.set(dp_axes)
+    t3 = _TP_AXIS.set(tp_axis)
+    t4 = _AXIS_SIZES.set(sizes)
+    try:
+        yield
+    finally:
+        _EP_AXIS.reset(t1)
+        _DP_AXES.reset(t2)
+        _TP_AXIS.reset(t3)
+        _AXIS_SIZES.reset(t4)
+
+
+def _axis_size(axes) -> int:
+    sizes = _AXIS_SIZES.get()
+    if not sizes:
+        return 1 << 62   # unknown mesh: fail every divisibility check -> no-op
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        if a not in sizes:
+            return 1 << 62
+        n *= sizes[a]
+    return n
+
+
+def constrain_experts(x: jax.Array) -> jax.Array:
+    """x: (E, C, d) stacked expert buffers — pin E to the EP axis (when divisible)
+    and the capacity axis to the data axes (token parallelism inside the expert
+    computation). Without the C constraint the dispatch buffer replicates across the
+    data axis: 7.5 GB/device on granite-moe train_4k (EXPERIMENTS.md §Perf)."""
+    ep = _EP_AXIS.get()
+    dp = _DP_AXES.get()
+    spec = [None] * x.ndim
+    if ep is not None and x.shape[0] % _axis_size(ep) == 0:
+        spec[0] = ep
+    if dp is not None and x.ndim >= 2 and x.shape[1] % _axis_size(dp) == 0:
+        spec[1] = dp
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """(B, ...) activations — pin the leading batch axis to the data axes.
+
+    GSPMD mostly propagates batch sharding from the input tokens, but gathers
+    (embedding lookups) and microbatch reshapes can lose it, after which the
+    partitioner replicates entire activation stacks (observed: 265 GB/device temps on
+    mamba2 train_4k before this constraint — EXPERIMENTS.md §Perf iteration 0)."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    if x.ndim == 0 or x.shape[0] % _axis_size(axes) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """x: (N, d) flat token activations — pin to the data axes if hinted."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    if x.shape[0] % _axis_size(axes) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))
+
+
+def token_group_count(n_tokens: int) -> int:
+    """Number of dp-aligned token groups for grouped MoE dispatch (GShard-style
+    per-group capacity). Equals the data-axis size when it divides the token count,
+    else 1 (single global dispatch — tests, eager mode)."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return 1
+    g = _axis_size(axes)
+    if g >= (1 << 62) or n_tokens % g != 0:
+        return 1
+    return g
+
+
+def constrain_token_groups(x: jax.Array) -> jax.Array:
+    """(G, N/G, ...) grouped tokens — pin the group axis to the data axes so every
+    per-group dispatch gather/scatter has a sharded batch dimension (SPMD partitions
+    batched gathers on their parallel dims; unbatched dispatch gathers replicate the
+    whole (N·K, d) expansion — 48 GiB/device on granite prefill_32k,
+    EXPERIMENTS.md §Perf)."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    if x.shape[0] % _axis_size(axes) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))
+
+
+def constrain_grouped_experts(x: jax.Array) -> jax.Array:
+    """(G, E, C, d) grouped expert buffers — G → data axes, E → EP axis."""
+    ep = _EP_AXIS.get()
+    dp = _DP_AXES.get()
+    spec = [None] * x.ndim
+    if dp is not None and x.shape[0] % _axis_size(dp) == 0:
+        spec[0] = dp
+    if ep is not None and x.ndim >= 2 and x.shape[1] % _axis_size(ep) == 0:
+        spec[1] = ep
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_microbatches(x: jax.Array) -> jax.Array:
+    """(n_micro, B_micro, ...) stacked microbatches — dp on axis 1, never axis 0
+    (the scan axis must stay unsharded or every scan step pays a reshard)."""
+    axes = _DP_AXES.get()
+    if axes is None:
+        return x
+    if x.ndim < 2 or x.shape[1] % _axis_size(axes) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(None, axes, *([None] * (x.ndim - 2))))

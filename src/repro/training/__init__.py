@@ -1,0 +1,1 @@
+from repro.training.optimizer import AdamWConfig, OptState, init as opt_init, apply_updates  # noqa: F401

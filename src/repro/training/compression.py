@@ -1,0 +1,95 @@
+"""Gradient compression for the data-parallel all-reduce: int8 with error feedback.
+
+Beyond-paper transplant of CrossQuant's insight to the distributed-optimization layer
+(DESIGN.md §3.5). The DP all-reduce moves every gradient matrix across ICI each step;
+quantizing the payload to int8 quarters that traffic. The failure mode of per-tensor
+int8 gradient quantization is exactly the paper's *quantization kernel*: most gradient
+entries are tiny relative to the tensor absmax and get rounded to zero. CrossQuant
+geometry — scale = rowmax^alpha × colmax^(1-alpha) per element — shrinks the kernel on
+gradients the same way it does on activations (measured in
+benchmarks/grad_compression.py), and **error feedback** carries what quantization
+dropped into the next step, making the scheme convergent.
+
+Usage inside a train step (see training/trainer.py ``compress="int8_crossquant"``):
+
+    carry, grads_q = compress_grads(grads, carry, cfg)   # before the DP all-reduce
+    # psum/all-reduce happens on the int8 codes' dequantized values under GSPMD; in
+    # the jit'd data-parallel step the quantize→dequantize pair bounds the payload.
+
+The compression is simulated-in-graph (quantize→dequantize around the mean), which is
+how fake-quant gradient-compression studies measure convergence impact; the wire
+format (codes + two scale vectors) is what a custom collective would ship.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    alpha: float = 0.5            # gradient matrices are near-isotropic → balanced mix
+    scheme: str = "crossquant"    # crossquant | per_tensor | none
+    error_feedback: bool = True
+
+
+def _grad_scale(g2d: jax.Array, cfg: CompressionConfig) -> jax.Array:
+    if cfg.scheme == "per_tensor":
+        return Q.per_tensor_scale(g2d, cfg.bits)
+    return Q.crossquant_scale(g2d, cfg.bits, cfg.alpha)
+
+
+def compress_leaf(g: jax.Array, err: jax.Array, cfg: CompressionConfig
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize-dequantize one gradient tensor with error feedback.
+
+    Returns (g_hat, new_err) with g_hat = deq(quant(g + err)), new_err = (g+err) - g_hat.
+    Tensors with < 2 dims (norm scales, biases) pass through uncompressed — they are a
+    negligible fraction of bytes and the most precision-sensitive.
+    """
+    if cfg.scheme == "none" or g.ndim < 2:
+        return g, err
+    gf = g.astype(jnp.float32) + (err if cfg.error_feedback else 0.0)
+    g2d = gf.reshape(-1, gf.shape[-1])
+    scale = _grad_scale(g2d, cfg)
+    qm = Q.qmax(cfg.bits)
+    codes = jnp.clip(jnp.round(g2d / scale), -qm, qm)
+    ghat = (codes * scale).reshape(g.shape)
+    new_err = (gf - ghat) if cfg.error_feedback else err
+    return ghat.astype(g.dtype), new_err
+
+
+def init_error_state(params):
+    """Zeros matching every compressible leaf (same shapes → same shardings)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if p.ndim >= 2
+        else jnp.zeros((), jnp.float32), params)
+
+
+def compress_grads(grads, err_state, cfg: CompressionConfig):
+    """Apply :func:`compress_leaf` across the gradient pytree."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [compress_leaf(g, e, cfg) for g, e in zip(flat_g, flat_e)]
+    ghat = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return ghat, new_err
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha"))
+def gradient_kernel_fractions(g: jax.Array, bits: int = 8, alpha: float = 0.5):
+    """Diagnostic: quantization-kernel mass of a gradient matrix under per-tensor vs
+    CrossQuant scaling — the paper's Definition 1 applied to gradients."""
+    from repro.core import kernel_analysis as KA
+    g2d = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    return {
+        "per_tensor": KA.kernel_fraction(g2d, Q.per_tensor_scale(g2d, bits)),
+        "crossquant": KA.kernel_fraction(g2d, Q.crossquant_scale(g2d, bits, alpha)),
+    }

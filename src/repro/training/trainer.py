@@ -1,0 +1,99 @@
+"""Training step: microbatched gradient accumulation over a scanned loss, remat'd
+scan-over-layers inside the model, AdamW update. The step is a pure function suitable
+for ``jax.jit`` with sharded params/opt/batch (see launch/dryrun.py and launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import qlinear as ql
+from repro.models import model as M
+from repro.models.layers import QuantContext
+from repro.sharding import hints
+from repro.training import compression as comp_lib
+from repro.training import optimizer as opt_lib
+
+
+def pick_n_micro(cfg: ModelConfig, global_batch: int, dp: int) -> int:
+    """Microbatch count heuristic: keep per-replica microbatch small enough that
+    (activations + fp32 logits) fit HBM. Large d_model / vocab → smaller microbatch."""
+    local = max(1, global_batch // dp)
+    # MoE dispatch buffers scale with the microbatch token count (E·C·d); keep the
+    # per-replica microbatch at 1 sequence for MoE and for wide/huge-vocab models.
+    target_local_mb = 1 if (cfg.d_model >= 4096 or cfg.vocab >= 128000
+                            or cfg.n_experts) else 4
+    n_micro = max(1, local // target_local_mb)
+    while global_batch % (n_micro * dp) and n_micro > 1:   # keep divisibility
+        n_micro -= 1
+    while global_batch % n_micro:
+        n_micro -= 1
+    return n_micro
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.AdamWConfig, n_micro: int = 1,
+                    quant: Optional[ql.QuantConfig] = None,
+                    compression: Optional["comp_lib.CompressionConfig"] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``compression`` set, the signature becomes
+    train_step(params, opt_state, err_state, batch) -> (params, opt_state, err_state,
+    metrics): gradients are int8-compressed (CrossQuant geometry + error feedback)
+    before the optimizer — the payload a compressed DP all-reduce would ship.
+    """
+    ctx = QuantContext(quant or cfg.quant)
+
+    def loss(params, mb):
+        return M.loss_fn(params, mb, cfg, ctx=ctx, remat=True)
+
+    def train_step(params, opt_state, batch, err_state=None):
+        if n_micro > 1:
+            micro = jax.tree_util.tree_map(
+                lambda x: hints.constrain_microbatches(
+                    x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])), batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), grads = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
+                                           micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            mean_loss = lsum / n_micro
+        else:
+            (mean_loss, _), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+
+        if compression is not None:
+            grads, err_state = comp_lib.compress_grads(grads, err_state, compression)
+
+        new_params, new_opt, om = opt_lib.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": mean_loss, **om}
+        if compression is not None:
+            return new_params, new_opt, err_state, metrics
+        return new_params, new_opt, metrics
+
+    if compression is not None:
+        def train_step_c(params, opt_state, err_state, batch):
+            return train_step(params, opt_state, batch, err_state)
+        return train_step_c
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None):
+    ctx = QuantContext(quant or cfg.quant)
+
+    @jax.jit
+    def eval_step(params, batch):
+        loss, metrics = M.loss_fn(params, batch, cfg, ctx=ctx, remat=False)
+        return metrics
+
+    return eval_step

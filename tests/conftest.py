@@ -1,0 +1,19 @@
+import os
+
+# Tests run against the real single CPU device. (Only launch/dryrun.py forces 512
+# placeholder devices, and only in its own process.)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,50 @@
+"""AWQ baseline (core/awq.py): salient-channel protection + exactness properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import awq, qlinear as ql, quantizers as Q
+from repro.data.synthetic import OPT_LIKE, outlier_activations
+
+
+class TestAWQ:
+    def test_protects_salient_channels(self, key):
+        """Channels with large activations must get LOWER weight quantization error
+        than under plain group quantization (AWQ's defining property)."""
+        d_in, d_out = 256, 64
+        w = jax.random.normal(key, (d_in, d_out)) * 0.1
+        cmax = jnp.ones((d_in,)).at[:8].set(100.0)       # 8 salient channels
+        wq_awq = awq.awq_weight(w, cmax, bits=4, group=128)
+        wq_plain = awq._fake_group_cols(w, 4, 128)
+        err_awq = float(jnp.linalg.norm((w - wq_awq)[:8]))
+        err_plain = float(jnp.linalg.norm((w - wq_plain)[:8]))
+        assert err_awq < err_plain, (err_awq, err_plain)
+
+    def test_uniform_activations_degenerate_to_plain(self, key):
+        """With flat cmax, the alpha search lands on s = 1 (plain group quant)."""
+        w = jax.random.normal(key, (128, 32)) * 0.1
+        cmax = jnp.ones((128,))
+        wq_awq = awq.awq_weight(w, cmax, bits=4, group=128)
+        wq_plain = awq._fake_group_cols(w, 4, 128)
+        np.testing.assert_allclose(np.asarray(wq_awq), np.asarray(wq_plain),
+                                   atol=1e-6)
+
+    def test_qlinear_awq_mode_runs_and_beats_plain_w4(self, key):
+        x = jnp.asarray(outlier_activations(64, 256, OPT_LIKE, seed=0))
+        p = ql.init(key, 256, 64)
+        y_fp = ql.apply(p, x, ql.FP)
+        y_awq = ql.apply(p, x, ql.W4A8_G128_AWQ)
+        y_plain = ql.apply(p, x, ql.W4A8_G128_PER_TOKEN)
+        err_awq = float(jnp.linalg.norm(y_awq - y_fp))
+        err_plain = float(jnp.linalg.norm(y_plain - y_fp))
+        assert err_awq <= err_plain * 1.01, (err_awq, err_plain)
+
+    def test_crossquant_plus_awq_combination(self, key):
+        """The paper's Table 2 combination must run and track fp closely."""
+        x = jnp.asarray(outlier_activations(64, 256, OPT_LIKE, seed=1))
+        p = ql.init(key, 256, 64)
+        y_fp = ql.apply(p, x, ql.FP)
+        y = ql.apply(p, x, ql.W4A8_G128_CQ_AWQ)
+        rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        assert rel < 0.2, rel

@@ -1,0 +1,69 @@
+"""Calibration (static-c) pipeline: observer statistics, table attachment, and the
+end-to-end quantize_tree flow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import calibration, qlinear as ql
+from repro.models import model as M
+from repro.models.layers import QuantContext
+from repro.models.quantize import quantize_tree
+
+
+class TestObserver:
+    def test_hard_max_accumulates(self):
+        obs = calibration.Observer()
+        obs.observe("l", jnp.asarray([[1.0, -2.0], [0.5, 1.0]]))
+        obs.observe("l", jnp.asarray([[3.0, 0.1], [0.2, 0.3]]))
+        np.testing.assert_allclose(obs.tables()["l"], [3.0, 2.0])
+
+    def test_momentum_ema(self):
+        obs = calibration.Observer(momentum=0.5)
+        obs.observe("l", jnp.asarray([[2.0, 2.0]]))
+        obs.observe("l", jnp.asarray([[4.0, 0.0]]))
+        np.testing.assert_allclose(obs.tables()["l"], [3.0, 1.0])
+
+    def test_batch_dims_flattened(self):
+        obs = calibration.Observer()
+        x = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+        obs.observe("l", x)
+        np.testing.assert_allclose(obs.tables()["l"], [20, 21, 22, 23])
+
+
+class TestEndToEnd:
+    def test_model_calibration_flow(self, key):
+        """Eager (unroll) forward with an observer records every linear; the tables
+        feed quantize_tree and the int8 model still runs."""
+        cfg = get("starcoder2-7b", smoke=True)
+        params = M.init_params(key, cfg)
+        obs = calibration.Observer()
+        ctx = QuantContext(ql.W8A8_CROSSQUANT, observer=obs)
+        batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+        M.apply(params, batch, cfg, ctx=ctx, mode="train", unroll=True)
+        raw = obs.tables()
+        assert len(raw) >= 4 * cfg.n_layers          # wq/wk/wv/wo + mlp × layers
+        for name, t in raw.items():
+            assert t.ndim == 1 and (t >= 0).all(), name
+        tables = calibration.stack_tables(raw)
+        # stacked per-layer tables keyed by parameter path
+        assert "blocks/0/attn/wq" in tables
+        assert tables["blocks/0/attn/wq"].shape == (cfg.n_layers, cfg.d_model)
+
+        qparams = quantize_tree(params, ql.W8A8_INT8, tables=tables)
+        logits_q, _ = M.apply(qparams, batch, cfg, ctx=QuantContext(ql.W8A8_INT8),
+                              mode="train")
+        logits_f, _ = M.apply(params, batch, cfg, mode="train")
+        assert not bool(jnp.any(jnp.isnan(logits_q)))
+        # int8 static-c serving tracks the fp model (kernel is small on smoke data)
+        rel = float(jnp.linalg.norm(logits_q - logits_f) /
+                    jnp.linalg.norm(logits_f))
+        assert rel < 0.35, rel
+
+    def test_quantize_tree_shrinks_bytes(self, key):
+        from repro.models.quantize import quantized_bytes
+        cfg = get("starcoder2-7b", smoke=True)
+        params = M.init_params(key, cfg)
+        q8 = quantize_tree(params, ql.W8A8_INT8)
+        assert quantized_bytes(q8) < 0.55 * quantized_bytes(params)

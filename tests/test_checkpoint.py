@@ -1,0 +1,90 @@
+"""Checkpoint manager: roundtrip, atomicity, integrity, GC, async writes."""
+import json
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def tree():
+    return {
+        "params": {"embed": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+                   "blocks": [{"w": np.ones((2, 2), np.float32)}]},
+        "step_count": np.asarray(7, np.int32),
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, tree):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(3, tree, blocking=True)
+        got, step = cm.restore(tree)
+        assert step == 3
+        np.testing.assert_array_equal(got["params"]["embed"]["w"],
+                                      tree["params"]["embed"]["w"])
+        np.testing.assert_array_equal(got["step_count"], tree["step_count"])
+
+    def test_latest_and_specific_step(self, tmp_path, tree):
+        cm = CheckpointManager(str(tmp_path), keep_n=10)
+        for s in (1, 5, 9):
+            t = dict(tree)
+            t["step_count"] = np.asarray(s, np.int32)
+            cm.save(s, t, blocking=True)
+        got, step = cm.restore(tree)
+        assert step == 9 and int(got["step_count"]) == 9
+        got5, s5 = cm.restore(tree, step=5)
+        assert s5 == 5 and int(got5["step_count"]) == 5
+
+    def test_keep_n_gc(self, tmp_path, tree):
+        cm = CheckpointManager(str(tmp_path), keep_n=2)
+        for s in range(5):
+            cm.save(s, tree, blocking=True)
+        assert cm.all_steps() == [3, 4]
+
+    def test_async_save_then_wait(self, tmp_path, tree):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, tree, blocking=False)
+        cm.wait()
+        assert cm.latest_step() == 1
+
+    def test_corruption_detected(self, tmp_path, tree):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(2, tree, blocking=True)
+        d = tmp_path / "step_000000002"
+        # Corrupt the array archive but keep the manifest.
+        flat = dict(np.load(d / "arrays.npz"))
+        k = next(iter(flat))
+        flat[k] = flat[k] + 1
+        np.savez(d / "arrays.npz", **flat)
+        with pytest.raises(IOError, match="corruption"):
+            cm.restore(tree)
+
+    def test_tmp_dir_never_visible(self, tmp_path, tree):
+        """A stale .tmp staging dir must not be listed or restored from."""
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(4, tree, blocking=True)
+        os.makedirs(tmp_path / "step_000000009.tmp")
+        assert cm.all_steps() == [4]
+        assert cm.latest_step() == 4
+
+    def test_missing_leaf_raises(self, tmp_path, tree):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, tree, blocking=True)
+        bigger = dict(tree)
+        bigger["extra"] = np.zeros(3)
+        with pytest.raises(KeyError):
+            cm.restore(bigger)
+
+    def test_jax_arrays_roundtrip(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        tree = {"w": jnp.arange(8.0).reshape(2, 4), "b": jnp.zeros((3,), jnp.bfloat16)}
+        cm.save(0, tree, blocking=True)
+        got, _ = cm.restore(tree)
+        np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                      np.arange(8.0).reshape(2, 4))
+        assert got["b"].dtype == jnp.bfloat16

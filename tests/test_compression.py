@@ -1,0 +1,80 @@
+"""Gradient compression: error-feedback convergence + CrossQuant-geometry kernel
+shrinkage on gradients (the beyond-paper transplant, DESIGN.md §3.5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import OPT_LIKE, outlier_activations
+from repro.training import compression as comp
+
+
+class TestCompressLeaf:
+    def test_roundtrip_error_small(self, key):
+        g = jax.random.normal(key, (64, 128)) * 1e-3
+        cfg = comp.CompressionConfig()
+        ghat, err = comp.compress_leaf(g, jnp.zeros_like(g), cfg)
+        rel = float(jnp.linalg.norm(ghat - g) / jnp.linalg.norm(g))
+        assert rel < 0.05, rel
+
+    def test_error_feedback_unbiased_over_steps(self, key):
+        """Feeding the same gradient repeatedly: the *sum* of compressed updates must
+        converge to the sum of true gradients (EF makes compression contractive)."""
+        g = jnp.asarray(outlier_activations(32, 64, OPT_LIKE, seed=2)) * 1e-3
+        cfg = comp.CompressionConfig()
+        err = jnp.zeros_like(g)
+        acc = jnp.zeros_like(g)
+        T = 32
+        for _ in range(T):
+            ghat, err = comp.compress_leaf(g, err, cfg)
+            acc = acc + ghat
+        rel = float(jnp.linalg.norm(acc / T - g) / jnp.linalg.norm(g))
+        assert rel < 0.02, rel
+
+    def test_no_error_feedback_is_biased_on_outlier_grads(self):
+        """Without EF, per-tensor int8 systematically drops small entries (the
+        quantization-kernel failure mode) — EF must do strictly better."""
+        g = jnp.asarray(outlier_activations(64, 128, OPT_LIKE, seed=3)) * 1e-3
+        T = 16
+
+        def run(cfg):
+            err = jnp.zeros_like(g)
+            acc = jnp.zeros_like(g)
+            for _ in range(T):
+                ghat, err = comp.compress_leaf(g, err, cfg)
+                acc += ghat
+            return float(jnp.linalg.norm(acc / T - g) / jnp.linalg.norm(g))
+        with_ef = run(comp.CompressionConfig(scheme="per_tensor", error_feedback=True))
+        without = run(comp.CompressionConfig(scheme="per_tensor", error_feedback=False))
+        assert with_ef < without
+
+    def test_small_leaves_pass_through(self, key):
+        b = jax.random.normal(key, (64,))
+        ghat, _ = comp.compress_leaf(b, jnp.zeros(()), comp.CompressionConfig())
+        np.testing.assert_array_equal(np.asarray(ghat), np.asarray(b))
+
+
+class TestKernelGeometry:
+    def test_crossquant_kernel_smaller_than_per_tensor(self):
+        g = jnp.asarray(outlier_activations(256, 512, OPT_LIKE, seed=1)) * 1e-3
+        fr = comp.gradient_kernel_fractions(g)
+        assert float(fr["crossquant"]) < 0.5 * float(fr["per_tensor"])
+
+    def test_crossquant_scheme_better_single_shot(self):
+        g = jnp.asarray(outlier_activations(128, 256, OPT_LIKE, seed=4)) * 1e-3
+
+        def rel(scheme):
+            cfg = comp.CompressionConfig(scheme=scheme, error_feedback=False)
+            ghat, _ = comp.compress_leaf(g, jnp.zeros_like(g), cfg)
+            return float(jnp.linalg.norm(ghat - g) / jnp.linalg.norm(g))
+        assert rel("crossquant") < rel("per_tensor")
+
+
+class TestTreeAPI:
+    def test_compress_grads_tree(self, key):
+        grads = {"a": {"w": jax.random.normal(key, (16, 16))},
+                 "b": jax.random.normal(key, (8,))}
+        err = comp.init_error_state(grads)
+        ghat, new_err = comp.compress_grads(grads, err, comp.CompressionConfig())
+        assert ghat["a"]["w"].shape == (16, 16)
+        assert jax.tree_util.tree_structure(ghat) == jax.tree_util.tree_structure(grads)

@@ -1,0 +1,82 @@
+"""Trip-count-aware HLO static analyzer (launch/hlo_static.py): validated against
+programs with analytically known FLOP counts — including the nested-scan case where
+XLA's own cost_analysis undercounts by the trip product."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_static import analyze_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+class TestFlops:
+    def test_single_dot(self):
+        a = jnp.ones((32, 64))
+        b = jnp.ones((64, 16))
+        res = analyze_hlo(_compile(lambda a, b: a @ b, a, b))
+        assert res["flops_fp"] == 2 * 32 * 64 * 16
+        assert res["unresolved_dots"] == 0
+
+    def test_scan_multiplies_by_trip(self):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+        x = jnp.ones((64, 128))
+        w = jnp.ones((128, 128))
+        res = analyze_hlo(_compile(f, x, w))
+        assert res["flops_fp"] == 7 * 2 * 64 * 128 * 128
+
+    def test_nested_scans(self):
+        def g(x, w):
+            def inner(c, _):
+                return jnp.tanh(c @ w), None
+            def outer(c, _):
+                c2, _ = jax.lax.scan(inner, c, None, length=5)
+                return c2, None
+            out, _ = jax.lax.scan(outer, x, None, length=3)
+            return out
+        x = jnp.ones((64, 128))
+        w = jnp.ones((128, 128))
+        res = analyze_hlo(_compile(g, x, w))
+        assert res["flops_fp"] == 15 * 2 * 64 * 128 * 128
+
+    def test_int8_dot_counted_separately(self):
+        def h(a, b):
+            return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.int32)
+        a = jnp.ones((32, 64), jnp.int8)
+        b = jnp.ones((64, 16), jnp.int8)
+        res = analyze_hlo(_compile(h, a, b))
+        assert res["flops_int8"] == 2 * 32 * 64 * 16
+        assert res["flops_fp"] == 0
+
+    def test_grad_counts_forward_and_backward(self):
+        def loss(w, x):
+            return jnp.sum(jnp.tanh(x @ w))
+        w = jnp.ones((128, 64))
+        x = jnp.ones((32, 128))
+        res = analyze_hlo(_compile(jax.grad(loss), w, x))
+        # forward dot + one backward dot for dw (dx not needed for arg 0 only...
+        # jax.grad(loss) w.r.t. w: forward (32,128)@(128,64) + backward x^T@g
+        want = 2 * (2 * 32 * 128 * 64)
+        assert res["flops_fp"] == want
+
+
+class TestBytes:
+    def test_hbm_bytes_scale_with_trip(self):
+        def f(x, w, n):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=n)
+            return out
+        x = jnp.ones((64, 128))
+        w = jnp.ones((128, 128))
+        r2 = analyze_hlo(_compile(lambda x, w: f(x, w, 2), x, w))
+        r8 = analyze_hlo(_compile(lambda x, w: f(x, w, 8), x, w))
+        ratio = r8["hbm_bytes"] / r2["hbm_bytes"]
+        assert 2.5 < ratio < 4.5, ratio     # ~4x body traffic, constant prologue

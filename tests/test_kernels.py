@@ -1,0 +1,214 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles,
+executed with interpret=True on CPU (the kernels target TPU Mosaic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.kernels import ops, ref
+
+SET = dict(max_examples=10, deadline=None)
+
+
+def _pack(codes):
+    return jnp.swapaxes(packing.pack_int4(jnp.swapaxes(codes, -1, -2)), -1, -2)
+
+
+class TestQgemmW8A8:
+    @pytest.mark.parametrize("M,K,N", [
+        (128, 128, 128), (256, 512, 256), (100, 300, 70), (512, 1024, 384),
+        (1, 128, 128), (130, 257, 129),
+    ])
+    def test_shapes(self, M, K, N):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(M + K + N), 3)
+        qx = jax.random.randint(k1, (M, K), -127, 128, jnp.int8)
+        qw = jax.random.randint(k2, (K, N), -127, 128, jnp.int8)
+        a = jax.random.uniform(k3, (M, 1), jnp.float32, 0.01, 1.0)
+        sw = jax.random.uniform(k3, (N,), jnp.float32, 0.01, 1.0)
+        got = ops.qgemm_w8a8(qx, qw, a, sw)
+        want = ref.qgemm_w8a8_ref(qx, qw, a, sw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    @settings(**SET)
+    @given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5), st.integers(0, 99))
+    def test_property_random_shapes(self, mm, kk, nn, seed):
+        M, K, N = 32 * mm + seed % 7, 64 * kk + seed % 5, 32 * nn + seed % 3
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        qx = jax.random.randint(k1, (M, K), -127, 128, jnp.int8)
+        qw = jax.random.randint(k2, (K, N), -127, 128, jnp.int8)
+        a = jax.random.uniform(k3, (M, 1), jnp.float32, 0.01, 1.0)
+        sw = jax.random.uniform(k3, (N,), jnp.float32, 0.01, 1.0)
+        got = ops.qgemm_w8a8(qx, qw, a, sw)
+        want = ref.qgemm_w8a8_ref(qx, qw, a, sw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_int32_accumulation_no_overflow_path(self):
+        """Worst-case magnitudes: 127*127*K must accumulate in int32, not int8/16."""
+        M = N = 128
+        K = 1024
+        qx = jnp.full((M, K), 127, jnp.int8)
+        qw = jnp.full((K, N), 127, jnp.int8)
+        a = jnp.ones((M, 1), jnp.float32)
+        sw = jnp.ones((N,), jnp.float32)
+        got = ops.qgemm_w8a8(qx, qw, a, sw)
+        assert float(got[0, 0]) == 127 * 127 * K
+
+
+class TestQgemmW4A8:
+    @pytest.mark.parametrize("M,K,N,g", [
+        (128, 256, 128, 128), (64, 512, 100, 128), (256, 384, 256, 128),
+        (32, 128, 64, 64),
+    ])
+    def test_shapes(self, M, K, N, g):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(M + N), 3)
+        codes = jax.random.randint(k1, (K, N), -8, 8, jnp.int8)
+        qw4 = _pack(codes)
+        qx = jax.random.randint(k2, (M, K), -127, 128, jnp.int8)
+        a = jax.random.uniform(k3, (M, 1), jnp.float32, 0.01, 1.0)
+        sw = jax.random.uniform(k3, (K // g, N), jnp.float32, 0.01, 1.0)
+        got = ops.qgemm_w4a8(qx, qw4, a, sw, group=g)
+        want = ref.qgemm_w4a8_ref(qx, qw4, a, sw, group=g)
+        # f32 group-partial accumulation order differs kernel-vs-einsum: allow ulp-
+        # level relative error on ~1e3-magnitude outputs.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=1e-3)
+
+    def test_nibble_sign_extension(self):
+        """All 16 int4 values must unpack exactly inside the kernel."""
+        K, N = 128, 128
+        codes = jnp.tile(jnp.arange(-8, 8, dtype=jnp.int8), (K // 16))[:, None]
+        codes = jnp.broadcast_to(codes, (K, N))
+        qw4 = _pack(codes)
+        qx = jnp.eye(K, dtype=jnp.int8)[:16]        # selects rows 0..15
+        a = jnp.ones((16, 1), jnp.float32)
+        sw = jnp.ones((1, N), jnp.float32)
+        got = ops.qgemm_w4a8(qx, qw4, a, sw, group=128)
+        np.testing.assert_array_equal(np.asarray(got[:, 0]).astype(np.int32),
+                                      np.arange(-8, 8))
+
+
+class TestActQuantize:
+    @pytest.mark.parametrize("M,K", [(256, 512), (100, 300), (512, 768), (1, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, M, K, dtype):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(M * K), 2)
+        x = (jax.random.normal(k1, (M, K)) * 3).astype(dtype)
+        bcol = jax.random.uniform(k2, (K,), jnp.float32, 0.1, 2.0)
+        qg, ag = ops.act_quantize(x, bcol, alpha=0.15)
+        qr, ar = ref.act_quantize_ref(x, bcol, alpha=0.15)
+        # bf16 inputs can straddle rounding boundaries; allow <0.1% code mismatch
+        mismatch = float(jnp.mean((qg != qr).astype(jnp.float32)))
+        assert mismatch < 1e-3, mismatch
+        np.testing.assert_allclose(np.asarray(ag), np.asarray(ar), rtol=1e-5)
+
+    @pytest.mark.parametrize("alpha", [0.0, 0.15, 0.55, 1.0])
+    def test_alpha_sweep(self, alpha):
+        x = jax.random.normal(jax.random.PRNGKey(0), (128, 256)) * 5
+        bcol = jnp.ones((256,), jnp.float32)
+        qg, ag = ops.act_quantize(x, bcol, alpha=alpha)
+        qr, ar = ref.act_quantize_ref(x, bcol, alpha=alpha)
+        np.testing.assert_array_equal(np.asarray(qg), np.asarray(qr))
+
+    def test_int4_bits(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (128, 128)) * 2
+        bcol = jnp.ones((128,), jnp.float32)
+        qg, _ = ops.act_quantize(x, bcol, bits=4)
+        assert int(jnp.max(jnp.abs(qg))) <= 7
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,Hkv,S,D", [
+        (1, 2, 1, 128, 64), (2, 4, 2, 256, 128), (1, 2, 2, 200, 64),
+    ])
+    def test_causal_gqa(self, B, H, Hkv, S, D):
+        ks = jax.random.split(jax.random.PRNGKey(S + D), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D))
+        k = jax.random.normal(ks[1], (B, Hkv, S, D))
+        v = jax.random.normal(ks[2], (B, Hkv, S, D))
+        got = ops.flash_attention(q, k, v, causal=True, bq=128, bk=128)
+        kr = jnp.repeat(k, H // Hkv, axis=1)
+        vr = jnp.repeat(v, H // Hkv, axis=1)
+        want = ref.flash_attention_ref(q, kr, vr, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_softcap(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 64)) * 4
+        k = jax.random.normal(ks[1], (1, 2, 128, 64)) * 4
+        v = jax.random.normal(ks[2], (1, 2, 128, 64))
+        got = ops.flash_attention(q, k, v, causal=True, softcap=30.0, bq=128, bk=128)
+        want = ref.flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_sliding_window(self):
+        B, H, S, D, W = 1, 2, 256, 64, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D))
+        k = jax.random.normal(ks[1], (B, H, S, D))
+        v = jax.random.normal(ks[2], (B, H, S, D))
+        got = ops.flash_attention(q, k, v, causal=True, window=W, bq=128, bk=128)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (D ** -0.5)
+        qp = jnp.arange(S)[:, None]
+        kp = jnp.arange(S)[None, :]
+        m = (qp >= kp) & ((qp - kp) < W)
+        want = jnp.einsum("bhqk,bhkd->bhqd",
+                          jax.nn.softmax(jnp.where(m, s, -1e30), -1), v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_matches_model_blockwise_oracle(self):
+        """The Pallas kernel and the model's jnp blockwise attention agree."""
+        from repro.models.layers import blockwise_attention
+        B, H, Hkv, S, D = 1, 4, 2, 192, 32
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        want = blockwise_attention(q, k, v, causal=True, window=None, softcap=None,
+                                   q_block=64, kv_block=64)
+        got = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                  k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), causal=True,
+                                  bq=128, bk=128).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+class TestEndToEnd:
+    def test_quantize_then_gemm_matches_qlinear_ref(self):
+        """Full int8 pipeline: act_quantize kernel -> qgemm kernel == qlinear jnp path."""
+        from repro.core import qlinear as ql
+        key = jax.random.PRNGKey(5)
+        k1, k2 = jax.random.split(key)
+        d_in, d_out, T = 256, 128, 64
+        w = jax.random.normal(k1, (d_in, d_out)) * 0.1
+        x = jax.random.normal(k2, (T, d_in)) * 2
+        cmax = jnp.max(jnp.abs(x), axis=0)
+        cfg = ql.W8A8_INT8
+        prepared = ql.prepare_int8({"w": w}, cfg, cmax=cmax)
+        y_ref = ql.apply(prepared, x, cfg, use_pallas=False)
+        y_pallas = ql.apply(prepared, x, cfg, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pallas),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFlashInModel:
+    def test_model_forward_matches_jnp_path(self):
+        """Full-model forward with the Pallas flash-attention path (interpret mode)
+        matches the jnp blockwise oracle path."""
+        import dataclasses
+        from repro.configs import get
+        from repro.models import model as M
+        from repro.models.layers import QuantContext
+        from repro.core import qlinear as ql
+
+        cfg = get("starcoder2-7b", smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0, cfg.vocab)
+        logits_ref, _ = M.apply(params, {"tokens": toks}, cfg,
+                                ctx=QuantContext(ql.FP), mode="train")
+        logits_fa, _ = M.apply(params, {"tokens": toks}, cfg,
+                               ctx=QuantContext(ql.FP, use_pallas=True),
+                               mode="train")
+        np.testing.assert_allclose(np.asarray(logits_fa), np.asarray(logits_ref),
+                                   atol=0.1)

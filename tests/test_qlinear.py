@@ -1,0 +1,144 @@
+"""Quantized-linear layer: execution-mode semantics + int8-path exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qlinear as ql
+from repro.core import quantizers as Q
+from repro.data.synthetic import OPT_LIKE, outlier_activations
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def _params(key, d_in, d_out, n_stack=None):
+    return ql.init(key, d_in, d_out, n_stack=n_stack)
+
+
+class TestModes:
+    @pytest.mark.parametrize("cfg", [ql.FP, ql.W8A8_CROSSQUANT, ql.W8A8_PER_TOKEN,
+                                     ql.W4A8_G128, ql.W4A4, ql.W8A8_INT8])
+    def test_all_modes_run_2d(self, key, cfg):
+        p = _params(key, 128, 64)
+        x = jax.random.normal(key, (8, 128))
+        y = ql.apply(p, x, cfg)
+        assert y.shape == (8, 64)
+        assert not bool(jnp.any(jnp.isnan(y)))
+
+    @pytest.mark.parametrize("cfg", [ql.FP, ql.W8A8_CROSSQUANT])
+    def test_stacked_experts_3d(self, key, cfg):
+        p = _params(key, 32, 16, n_stack=4)
+        x = jax.random.normal(key, (4, 8, 32))
+        y = ql.apply(p, x, cfg)
+        assert y.shape == (4, 8, 16)
+
+    def test_fake_mode_close_to_fp(self, key):
+        """W8A8 CrossQuant fake quant should track the fp output closely (the paper's
+        'negligible precision loss' claim at INT8)."""
+        p = _params(key, 256, 128)
+        x = jnp.asarray(outlier_activations(64, 256, OPT_LIKE, seed=0))
+        y_fp = ql.apply(p, x, ql.FP)
+        y_cq = ql.apply(p, x, ql.W8A8_CROSSQUANT)
+        y_pt = ql.apply(p, x, ql.W8A8_PER_TOKEN)
+        err_cq = float(jnp.linalg.norm(y_cq - y_fp) / jnp.linalg.norm(y_fp))
+        err_pt = float(jnp.linalg.norm(y_pt - y_fp) / jnp.linalg.norm(y_fp))
+        assert err_cq < err_pt, (err_cq, err_pt)   # Fig. 1 ordering
+        assert err_cq < 0.05, err_cq
+
+    def test_prequantized_weights_bitwise_equal(self, key):
+        from repro.models.quantize import fake_quantize_weights
+        cfg = ql.W8A8_CROSSQUANT
+        p = {"wq": _params(key, 64, 32)}
+        x = jax.random.normal(key, (8, 64))
+        y_in_graph = ql.apply(p["wq"], x, cfg)
+        pq = fake_quantize_weights(p, cfg)
+        y_offline = ql.apply(pq["wq"], x, dataclasses.replace(cfg, w_prequantized=True))
+        np.testing.assert_array_equal(np.asarray(y_in_graph), np.asarray(y_offline))
+
+
+class TestInt8Path:
+    """The TPU-native static-c path must be exact w.r.t. its own fake-quant semantics
+    (DESIGN.md §3.1): int8 GEMM + separable dequant == quantize-dequantize + fp GEMM
+    when both use the same static column stats."""
+
+    @settings(**SET)
+    @given(st.integers(1, 6), st.integers(1, 4), st.integers(1, 4))
+    def test_int8_matches_staticc_fake(self, seed, din_blk, dout_blk):
+        d_in, d_out, T = 32 * din_blk, 16 * dout_blk, 24
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        w = jax.random.normal(k1, (d_in, d_out)) * 0.1
+        x = jnp.asarray(outlier_activations(T, d_in, seed=seed))
+        cmax = jnp.max(jnp.abs(x), axis=0)
+        cfg = ql.W8A8_INT8
+
+        # int8 path
+        prepared = ql.prepare_int8({"w": w}, cfg, cmax=cmax)
+        y_int = ql.apply(prepared, x, cfg)
+
+        # reference: fake-quantize activations with static c, weights per-output-
+        # channel on the b-folded weight, fp matmul
+        b = jnp.maximum(cmax, Q.EPS) ** (1 - cfg.alpha)
+        t = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), Q.EPS)
+        a = (t ** cfg.alpha) / 127
+        qx = jnp.clip(jnp.round(x / (a * b)), -127, 127)
+        wb = w * b[:, None]
+        sw = jnp.maximum(jnp.max(jnp.abs(wb), axis=0), Q.EPS) / 127
+        qw = jnp.clip(jnp.round(wb / sw), -127, 127)
+        y_ref = (qx @ qw) * a * sw
+        np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_int8_kernel_geometry_preserved(self, key):
+        """The int8 path's effective element scale is outer(a_i·qmax, b_j)·(1/qmax) =
+        t^α c^(1-α)/qmax — the same kernel-shrinking geometry as eq. (5)."""
+        x = jnp.asarray(outlier_activations(128, 256, OPT_LIKE, seed=7))
+        cmax = jnp.max(jnp.abs(x), axis=0)
+        cfg = ql.W8A8_INT8
+        qx, a = ql.quantize_act_int8(x, jnp.maximum(cmax, Q.EPS) ** (1 - cfg.alpha), cfg)
+        frac_int8 = float(jnp.mean((qx == 0) & (x != 0)))
+        s_dyn = Q.crossquant_scale(x, 8, cfg.alpha, col_max=cmax)
+        frac_fake = float(jnp.mean((jnp.abs(x) < 0.5 * s_dyn) & (x != 0)))
+        assert abs(frac_int8 - frac_fake) < 0.01
+
+    def test_prepare_int4_shapes(self, key):
+        w = jax.random.normal(key, (256, 64))
+        prepared = ql.prepare_int4({"w": w}, ql.W4A8_G128)
+        assert prepared["qw4"].shape == (128, 64)
+        assert prepared["sw"].shape == (2, 64)
+        x = jax.random.normal(key, (8, 256))
+        y = ql.apply(prepared, x, ql.W4A8_G128)
+        y_fp = x @ w
+        rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        assert rel < 0.2, rel
+
+
+class TestInt8StackedExperts:
+    def test_int8_path_stacked_matches_fp(self, key):
+        """Prepared int8 expert stacks (E, d_in, d_out) must track the fp einsum."""
+        E, C, d_in, d_out = 4, 16, 64, 32
+        k1, k2 = jax.random.split(key)
+        w = jax.random.normal(k1, (E, d_in, d_out)) * 0.1
+        x = jax.random.normal(k2, (E, C, d_in))
+        cfg = ql.W8A8_INT8
+        cmax = jnp.max(jnp.abs(x), axis=1)                 # (E, d_in)
+        prepared = ql.prepare_int8({"w": w}, cfg, cmax=cmax)
+        y = ql.apply(prepared, x, cfg)
+        y_fp = jnp.einsum("eci,eio->eco", x, w)
+        rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        assert rel < 0.05, rel
+
+    def test_int4_path_stacked_matches_fp(self, key):
+        E, C, d_in, d_out = 2, 8, 128, 32
+        k1, k2 = jax.random.split(key)
+        w = jax.random.normal(k1, (E, d_in, d_out)) * 0.1
+        x = jax.random.normal(k2, (E, C, d_in))
+        cfg = dataclasses.replace(ql.W4A8_G128, mode="int8")
+        prepared = ql.prepare_int4({"w": w}, cfg)
+        y = ql.apply(prepared, x, cfg)
+        y_fp = jnp.einsum("eci,eio->eco", x, w)
+        rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        assert rel < 0.25, rel

@@ -1,0 +1,198 @@
+"""Unit + property tests for the paper's core numerics (core/quantizers.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import kernel_analysis as KA
+from repro.core import packing
+from repro.core import quantizers as Q
+from repro.data.synthetic import OPT_LIKE, LLAMA_LIKE, outlier_activations
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _mats(min_rows=2, max_rows=24, min_cols=2, max_cols=48):
+    return hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(min_rows, max_rows), st.integers(min_cols, max_cols)),
+        elements=st.floats(-100, 100, width=32),
+    )
+
+
+# ======================================================================================
+# Eq. (1)/(5): scale construction and degeneracies
+# ======================================================================================
+
+class TestScales:
+    def test_per_token_scale_is_rowmax_over_qmax(self):
+        x = jnp.asarray([[1.0, -4.0, 2.0], [0.5, 0.25, -0.125]])
+        s = Q.per_token_scale(x, bits=8)
+        np.testing.assert_allclose(np.asarray(s).ravel(), [4 / 127, 0.5 / 127],
+                                   rtol=1e-6)
+
+    @settings(**SET)
+    @given(_mats())
+    def test_alpha_one_degenerates_to_per_token(self, x):
+        """Paper Table 1: alpha = 1 'is actually Per-token quantization'."""
+        x = jnp.asarray(x)
+        s_cq = Q.crossquant_scale(x, 8, alpha=1.0)
+        s_pt = Q.per_token_scale(x, 8)
+        np.testing.assert_allclose(np.asarray(jnp.broadcast_to(s_cq, x.shape)),
+                                   np.asarray(jnp.broadcast_to(s_pt, x.shape)),
+                                   rtol=1e-5)
+
+    @settings(**SET)
+    @given(_mats())
+    def test_alpha_zero_is_per_column(self, x):
+        x = jnp.asarray(x)
+        s_cq = Q.crossquant_scale(x, 8, alpha=0.0)
+        c = jnp.maximum(jnp.max(jnp.abs(x), axis=0, keepdims=True), Q.EPS) / 127
+        np.testing.assert_allclose(np.asarray(jnp.broadcast_to(s_cq, x.shape)),
+                                   np.asarray(jnp.broadcast_to(c, x.shape)), rtol=1e-5)
+
+    @settings(**SET)
+    @given(_mats(), st.floats(0.0, 1.0))
+    def test_crossquant_scale_is_geometric_mix(self, x, alpha):
+        """Δ̃ = t^α c^(1-α) / qmax lies between the row and column scales."""
+        x = jnp.asarray(x)
+        t = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), Q.EPS)
+        c = jnp.maximum(jnp.max(jnp.abs(x), axis=0, keepdims=True), Q.EPS)
+        s = Q.crossquant_scale(x, 8, alpha=alpha) * 127
+        lo = jnp.minimum(jnp.broadcast_to(t, x.shape), jnp.broadcast_to(c, x.shape))
+        hi = jnp.maximum(jnp.broadcast_to(t, x.shape), jnp.broadcast_to(c, x.shape))
+        assert bool(jnp.all(s >= lo * (1 - 1e-5)))
+        assert bool(jnp.all(s <= hi * (1 + 1e-5)))
+
+
+# ======================================================================================
+# Quantization round-trip properties
+# ======================================================================================
+
+class TestQuantizers:
+    @settings(**SET)
+    @given(_mats(), st.sampled_from([4, 8]))
+    def test_dequant_error_bounded_by_half_scale(self, x, bits):
+        x = jnp.asarray(x)
+        qr = Q.per_token_quant(x, bits)
+        err = jnp.abs(qr.dequant() - x)
+        # |round(x/s)*s - x| <= s/2 wherever no clipping occurred (symmetric grid
+        # covers the full range by construction of the absmax scale).
+        bound = jnp.broadcast_to(qr.scale / 2, x.shape) + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+    @settings(**SET)
+    @given(_mats(), st.sampled_from([0.15, 0.45, 0.75]))
+    def test_crossquant_codes_within_grid(self, x, alpha):
+        x = jnp.asarray(x)
+        qr = Q.crossquant(x, 8, alpha)
+        assert qr.codes.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(qr.codes))) <= 127
+
+    def test_group_quant_roundtrip_shape(self):
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 32)), jnp.float32)
+        qr = Q.group_quant(w, bits=4, group_size=16)
+        assert qr.codes.shape == w.shape
+        deq = Q.group_dequant(qr, group_size=16)
+        assert deq.shape == w.shape
+        err = jnp.abs(deq - w)
+        grouped_scale = jnp.repeat(qr.scale.reshape(-1), 16).reshape(w.shape)
+        assert bool(jnp.all(err <= grouped_scale / 2 + 1e-6))
+
+    def test_fake_quant_matches_quant_dequant(self):
+        x = jnp.asarray(outlier_activations(64, 128, seed=3))
+        np.testing.assert_allclose(
+            np.asarray(Q.fake_crossquant(x, 8, 0.15)),
+            np.asarray(Q.crossquant(x, 8, 0.15).dequant()), rtol=1e-6)
+
+    def test_static_c_override(self):
+        x = jnp.asarray(outlier_activations(32, 64, seed=4))
+        cmax = jnp.max(jnp.abs(x), axis=0)
+        dyn = Q.crossquant_scale(x, 8, 0.15)
+        stat = Q.crossquant_scale(x, 8, 0.15, col_max=cmax)
+        np.testing.assert_allclose(np.asarray(dyn), np.asarray(stat), rtol=1e-6)
+
+
+# ======================================================================================
+# Definition 1: the quantization kernel
+# ======================================================================================
+
+class TestKernel:
+    @settings(**SET)
+    @given(_mats())
+    def test_definition1_equivalence(self, x):
+        """Q(x)=0  ⇔  |x| < 0.5·Δ (eq. 4)."""
+        x = jnp.asarray(x)
+        scale = Q.per_token_scale(x, 8)
+        qr = Q.per_token_quant(x, 8)
+        # jnp.round is round-half-even; the boundary |x| == 0.5Δ rounds to 0 — the
+        # strict-inequality form of eq. (4) holds off the measure-zero boundary.
+        boundary = jnp.isclose(jnp.abs(x), 0.5 * jnp.broadcast_to(scale, x.shape),
+                               rtol=1e-5)
+        mask_def = jnp.abs(x) < 0.5 * jnp.broadcast_to(scale, x.shape)
+        mask_q = qr.codes == 0
+        agree = (mask_def == mask_q) | boundary
+        assert bool(jnp.all(agree))
+
+    def test_crossquant_kernel_smaller_on_outlier_data(self):
+        """The paper's central claim: K(CQ) << K(Q) on outlier-heavy activations."""
+        for spec, name in [(OPT_LIKE, "opt"), (LLAMA_LIKE, "llama")]:
+            x = jnp.asarray(outlier_activations(512, 1024, spec, seed=0))
+            k_pt = float(KA.per_token_kernel_fraction(x, 8))
+            k_cq = float(KA.crossquant_kernel_fraction(x, 8, 0.15))
+            assert k_cq < k_pt, (name, k_cq, k_pt)
+
+    def test_kernel_fractions_match_paper_regimes(self):
+        """OPT-like: per-token kernel ~40-60%, CrossQuant much lower (paper Fig. 4:
+        43.4% -> 16%); LLaMA-like: per-token ~10%, CrossQuant <2%."""
+        x_opt = jnp.asarray(outlier_activations(1024, 2048, OPT_LIKE, seed=1))
+        k_pt = float(KA.per_token_kernel_fraction(x_opt, 8))
+        k_cq = float(KA.crossquant_kernel_fraction(x_opt, 8, 0.15))
+        assert 0.30 < k_pt < 0.75, k_pt
+        assert k_cq < 0.5 * k_pt, (k_cq, k_pt)
+        x_ll = jnp.asarray(outlier_activations(1024, 2048, LLAMA_LIKE, seed=1))
+        k_pt_l = float(KA.per_token_kernel_fraction(x_ll, 8))
+        k_cq_l = float(KA.crossquant_kernel_fraction(x_ll, 8, 0.15))
+        assert k_pt_l < 0.35, k_pt_l
+        assert k_cq_l < 0.05, k_cq_l
+
+    def test_remove_kernel_zeroes_exactly_the_kernel(self):
+        x = jnp.asarray(outlier_activations(64, 128, seed=2))
+        scale = Q.per_token_scale(x, 8)
+        removed = KA.remove_kernel(x, scale)
+        mask = KA.kernel_mask(x, scale, count_exact_zeros=True)
+        assert bool(jnp.all(jnp.where(mask, removed == 0, removed == x)))
+
+    def test_remove_kernel_fraction_removes_that_fraction(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(128, 128)), jnp.float32)
+        for frac in (0.1, 0.4, 0.8):
+            out = KA.remove_kernel_fraction(x, frac)
+            got = float(jnp.mean(out == 0))
+            assert abs(got - frac) < 0.02, (frac, got)
+
+    def test_table1_stats_fields(self):
+        x = jnp.asarray(outlier_activations(256, 512, OPT_LIKE, seed=5))
+        s = KA.table1_stats(x, 8, 0.15)
+        assert 0 <= float(s["c_ge_t"]) <= 1
+        # Table 1 row 2: the vast majority of positions have a *shrunken* zero bound.
+        assert float(s["bcq_lt_bpt"]) > 0.9
+        assert float(s["kernel_crossquant"]) < float(s["kernel_per_token"])
+
+
+# ======================================================================================
+# int4 packing
+# ======================================================================================
+
+class TestPacking:
+    @settings(**SET)
+    @given(hnp.arrays(np.int8, st.tuples(st.integers(1, 8), st.integers(1, 16)),
+                      elements=st.integers(-8, 7)))
+    def test_pack_unpack_roundtrip(self, codes):
+        if codes.shape[-1] % 2:
+            codes = np.concatenate([codes, np.zeros_like(codes[..., :1])], -1)
+        packed = packing.pack_int4(jnp.asarray(codes))
+        assert packed.shape[-1] == codes.shape[-1] // 2
+        out = packing.unpack_int4(packed)
+        np.testing.assert_array_equal(np.asarray(out), codes)

@@ -1,0 +1,103 @@
+"""Runtime fault tolerance: supervisor restart determinism, straggler deadline
+barrier, elastic mesh planning."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime import DeadlineBarrier, FailureInjector, Supervisor, WorkerFailure
+from repro.runtime.elastic import plan_mesh_shape, usable_dp
+
+
+def _deterministic_step(state, step):
+    v = np.float32((step * 2654435761) % 97)
+    return {"x": state["x"] + v}, {"v": float(v)}
+
+
+class TestSupervisor:
+    def test_restart_bitwise_determinism(self, tmp_path):
+        """A run with injected failures ends bitwise-identical to a clean run —
+        the checkpoint/restart contract at cluster scale."""
+        def run(fail, sub):
+            cm = CheckpointManager(str(tmp_path / sub), keep_n=10)
+            sup = Supervisor(cm, ckpt_every=4)
+            inj = FailureInjector(fail_at_steps=fail) if fail else None
+            return sup.run({"x": np.zeros(4, np.float32)}, _deterministic_step, 21,
+                           injector=inj)
+        clean = run((), "clean")
+        faulty = run((3, 10, 17), "faulty")
+        np.testing.assert_array_equal(clean.state["x"], faulty.state["x"])
+        assert faulty.restarts == 3
+        assert clean.restarts == 0
+
+    def test_restart_budget_exhausted(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep_n=10)
+        sup = Supervisor(cm, ckpt_every=100, max_restarts=2)
+
+        class AlwaysFail:
+            def check(self, step):
+                if step == 1:
+                    raise WorkerFailure("flaky node")
+        with pytest.raises(RuntimeError, match="restart budget"):
+            sup.run({"x": np.zeros(1, np.float32)}, _deterministic_step, 5,
+                    injector=AlwaysFail())
+
+    def test_rebuild_hook_called_on_restart(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep_n=10)
+        sup = Supervisor(cm, ckpt_every=2)
+        calls = []
+
+        def rebuild(state):
+            calls.append(1)
+            return state
+        inj = FailureInjector(fail_at_steps=(3,))
+        sup.run({"x": np.zeros(1, np.float32)}, _deterministic_step, 6,
+                injector=inj, rebuild=rebuild)
+        assert calls == [1]
+
+    def test_history_truncated_at_restore(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep_n=10)
+        sup = Supervisor(cm, ckpt_every=4)
+        inj = FailureInjector(fail_at_steps=(6,))
+        res = sup.run({"x": np.zeros(1, np.float32)}, _deterministic_step, 9,
+                      injector=inj)
+        steps = [h["step"] for h in res.metrics_history]
+        assert steps == sorted(set(steps)) == list(range(9))
+
+
+class TestStraggler:
+    def test_no_eviction_during_warmup(self):
+        b = DeadlineBarrier(n_hosts=4, min_history=16)
+        out = b.step([1.0, 1.0, 1.0, 50.0])
+        assert out["deadline"] is None and out["evict"] == []
+
+    def test_persistent_straggler_evicted(self):
+        b = DeadlineBarrier(n_hosts=4, quantile=0.9, slack=1.5, evict_after=3)
+        for _ in range(6):
+            b.step([1.0, 1.0, 1.0, 1.05])
+        evictions = []
+        for _ in range(5):
+            out = b.step([1.0, 1.0, 1.0, 10.0])
+            evictions += out["evict"]
+        assert 3 in evictions
+
+    def test_transient_spike_not_evicted(self):
+        b = DeadlineBarrier(n_hosts=4, evict_after=3)
+        for _ in range(6):
+            b.step([1.0, 1.0, 1.0, 1.0])
+        out = b.step([1.0, 1.0, 1.0, 10.0])     # one bad step
+        assert out["evict"] == []
+        out = b.step([1.0, 1.0, 1.0, 1.0])      # recovers
+        assert 3 not in out["suspect"]
+
+
+class TestElastic:
+    def test_usable_dp_divides_batch(self):
+        assert usable_dp(16, 256) == 16
+        assert usable_dp(15, 256) == 8     # largest divisor of 256 <= 15
+        assert usable_dp(7, 256) == 4
+
+    def test_plan_holds_tp_fixed(self):
+        assert plan_mesh_shape(256, 16) == (16, 16)
+        assert plan_mesh_shape(240, 16, global_batch=256) == (8, 16)
+        with pytest.raises(ValueError):
+            plan_mesh_shape(8, 16)

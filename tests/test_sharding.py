@@ -1,0 +1,132 @@
+"""Sharding planner: tier selection, divisibility degradation (never errors),
+head-padding functional equivalence, and spec construction on a real multi-device
+mesh (subprocess with forced host device count)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_archs, get, with_padded_heads
+from repro.models import model as M
+from repro.models.quantize import pad_head_params
+from repro.sharding import planner
+
+
+class FakeMesh:
+    """Just enough Mesh for make_plan/_maybe (shape lookup)."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+class TestPlanTiers:
+    def test_tiers_for_assigned_archs(self):
+        mesh = FakeMesh(data=16, model=16)
+        expect = {
+            "deepseek-coder-33b": "tp_ffn",     # 56 q heads, 8 kv
+            "gemma2-9b": "tp_kv_rep",           # 16 q, 8 kv
+            "hubert-xlarge": "tp_full",         # 16 q, 16 kv
+            "zamba2-1.2b": "tp_full",           # 32 q, 32 kv
+            "starcoder2-7b": "tp_ffn",          # 36 q
+            "nemotron-4-15b": "tp_kv_rep",      # 48 q, 8 kv
+        }
+        for arch, tier in expect.items():
+            plan = planner.make_plan(get(arch), SHAPES["train_4k"], mesh)
+            assert plan.tier == tier, (arch, plan.tier, tier)
+
+    def test_moe_modes(self):
+        mesh = FakeMesh(data=16, model=16)
+        assert planner.make_plan(get("llama4-scout-17b-a16e"), SHAPES["train_4k"],
+                                 mesh).moe_mode == "ep"          # 16 experts
+        assert planner.make_plan(get("granite-moe-3b-a800m"), SHAPES["train_4k"],
+                                 mesh).moe_mode == "expert_tp"   # 40 experts, dff 512
+
+    def test_seq_shard_kv_for_serving_kinds(self):
+        mesh = FakeMesh(data=16, model=16)
+        cfg = get("gemma2-9b")
+        assert planner.make_plan(cfg, SHAPES["decode_32k"], mesh).seq_shard_kv
+        assert planner.make_plan(cfg, SHAPES["prefill_32k"], mesh).seq_shard_kv
+        assert not planner.make_plan(cfg, SHAPES["train_4k"], mesh).seq_shard_kv
+
+    def test_never_raises_for_any_cell(self):
+        mesh = FakeMesh(pod=2, data=16, model=16)
+        for arch in all_archs():
+            for shape in SHAPES.values():
+                planner.make_plan(get(arch), shape, mesh)   # must not raise
+
+
+class TestHeadPadding:
+    def test_padded_counts(self):
+        assert with_padded_heads(get("deepseek-coder-33b"), 16).n_heads == 64
+        assert with_padded_heads(get("starcoder2-7b"), 16).n_heads == 48
+        assert with_padded_heads(get("llama4-scout-17b-a16e"), 16).n_heads == 48
+        assert with_padded_heads(get("gemma2-9b"), 16).n_heads == 16    # unchanged
+
+    def test_functional_equivalence(self, key):
+        """Padded model with zero-padded wq columns / wo rows computes the SAME
+        function — the exactness claim behind serving head padding."""
+        cfg = get("starcoder2-7b", smoke=True)          # 4 heads smoke
+        cfg_pad = with_padded_heads(cfg, 3)             # 4 -> 6 heads
+        assert cfg_pad.n_heads == 6
+        params = M.init_params(key, cfg)
+        params_pad = pad_head_params(params, cfg, cfg_pad)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+        logits, _ = M.apply(params, {"tokens": toks}, cfg, mode="train")
+        logits_pad, _ = M.apply(params_pad, {"tokens": toks}, cfg_pad, mode="train")
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_pad),
+                                   atol=2e-2)
+
+    def test_ssm_family_not_padded(self):
+        cfg = get("mamba2-130m")
+        assert with_padded_heads(cfg, 16) is cfg
+
+
+class TestParamSpecs:
+    def test_specs_on_8dev_mesh_subprocess(self):
+        """Full spec construction + jit lowering of a smoke train step on a real
+        (4, 2) mesh — the dry-run machinery end-to-end, at test scale."""
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import jax, numpy as np
+            from jax.sharding import Mesh
+            from repro.configs import get, SHAPES
+            import dataclasses
+            from repro.launch.dryrun import build_cell, default_quant
+            from repro.sharding import hints
+
+            mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+            cfg = get("starcoder2-7b", smoke=True)
+            shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
+            step, args, in_sh, out_sh, donate, plan, extra = build_cell(
+                cfg, shape, mesh, default_quant("train"))
+            with mesh, hints.sharding_hints(dp_axes=plan.dp_axes,
+                                            tp_axis=plan.tp_axis, mesh=mesh):
+                compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                                   donate_argnums=donate).lower(*args).compile()
+            print("OK", compiled.memory_analysis().temp_size_in_bytes > 0)
+        """)
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=600,
+                           env={**__import__("os").environ, "PYTHONPATH": "src"},
+                           cwd="/root/repo")
+        assert "OK" in r.stdout, r.stderr[-2000:]
+
+    def test_param_shardings_cover_tree(self, key):
+        mesh = FakeMesh(data=4, model=2)
+        # NamedSharding needs a real mesh; use shape-only checks through _param_spec.
+        cfg = get("gemma2-9b", smoke=True)
+        sds = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        plan = planner.make_plan(cfg, SHAPES["train_4k"], mesh)
+        flat = jax.tree_util.tree_flatten_with_path(sds)[0]
+        for path, leaf in flat:
+            spec = planner._param_spec(planner._path_str(path), leaf.shape, cfg,
+                                       plan, mesh)
+            assert len(spec) == len(leaf.shape)
+            # every mesh axis used at most once
+            used = [a for s in spec if s is not None
+                    for a in ((s,) if isinstance(s, str) else s)]
+            assert len(used) == len(set(used)), (path, spec)

@@ -1,0 +1,104 @@
+"""End-to-end training integration: loss goes down, microbatching is exact,
+checkpoint-resume reproduces, gradient compression trains."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get
+from repro.data import make_train_batches
+from repro.models import model as M
+from repro.training import compression as comp_lib
+from repro.training import optimizer as opt_lib, trainer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get("mamba2-130m", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    opt_cfg = opt_lib.AdamWConfig(lr=5e-3, warmup_steps=2, total_steps=40)
+    batch_fn = make_train_batches(cfg.vocab, 32, 8, seed=0)
+    return cfg, params, opt_cfg, batch_fn
+
+
+class TestTraining:
+    def test_loss_decreases(self, setup):
+        cfg, params, opt_cfg, batch_fn = setup
+        step = jax.jit(trainer.make_train_step(cfg, opt_cfg))
+        opt = opt_lib.init(params)
+        losses = []
+        for s in range(25):
+            batch = {k: jnp.asarray(v) for k, v in batch_fn(s).items()}
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+    def test_microbatching_matches_full_batch(self, setup):
+        """Gradient accumulation over n_micro must equal the single-batch gradient.
+
+        Compared via the first Adam moment (m = (1-b1)·g after step 1): the params
+        themselves are ill-conditioned for comparison — the first AdamW update is
+        sign-like (m̂/√v̂ ≈ ±1), so fp32 accumulation-order noise flips whole ±lr
+        steps on near-zero-gradient weights."""
+        cfg, params, opt_cfg, batch_fn = setup
+        batch = {k: jnp.asarray(v) for k, v in batch_fn(0).items()}
+        s1 = jax.jit(trainer.make_train_step(cfg, opt_cfg, n_micro=1))
+        s4 = jax.jit(trainer.make_train_step(cfg, opt_cfg, n_micro=4))
+        opt = opt_lib.init(params)
+        p1, o1, m1 = s1(params, opt, batch)
+        p4, o4, m4 = s4(params, opt, batch)
+        assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-5
+        # bf16 forwards at different microbatch shapes round differently; observed
+        # relative gradient deltas are ~3e-3 on this model.
+        for a, b in zip(jax.tree_util.tree_leaves(o1.m),
+                        jax.tree_util.tree_leaves(o4.m)):
+            scale = float(jnp.max(jnp.abs(a))) + 1e-8
+            np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                                       atol=6e-3)
+
+    def test_checkpoint_resume_bitwise(self, setup, tmp_path):
+        cfg, params0, opt_cfg, batch_fn = setup
+        step = jax.jit(trainer.make_train_step(cfg, opt_cfg))
+
+        def advance(params, opt, a, b):
+            for s in range(a, b):
+                batch = {k: jnp.asarray(v) for k, v in batch_fn(s).items()}
+                params, opt, _ = step(params, opt, batch)
+            return params, opt
+
+        # straight run 0..8
+        p_ref, o_ref = advance(params0, opt_lib.init(params0), 0, 8)
+
+        # run 0..5, checkpoint, restore, run 5..8
+        p, o = advance(params0, opt_lib.init(params0), 0, 5)
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(5, {"p": p, "o": o}, blocking=True)
+        restored, s = cm.restore({"p": p, "o": o})
+        p2, o2 = advance(restored["p"], restored["o"], 5, 8)
+
+        for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_compressed_training_converges(self, setup):
+        cfg, params, opt_cfg, batch_fn = setup
+        ccfg = comp_lib.CompressionConfig()
+        step = jax.jit(trainer.make_train_step(cfg, opt_cfg, compression=ccfg))
+        opt = opt_lib.init(params)
+        err = comp_lib.init_error_state(params)
+        losses = []
+        for s in range(25):
+            batch = {k: jnp.asarray(v) for k, v in batch_fn(s).items()}
+            params, opt, err, m = step(params, opt, err, batch)
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.15, losses
+
+    def test_pick_n_micro_divides(self):
+        cfg = get("deepseek-coder-33b")
+        for gb, dp in [(256, 16), (256, 32), (128, 16), (96, 16)]:
+            nm = trainer.pick_n_micro(cfg, gb, dp)
+            assert gb % nm == 0, (gb, dp, nm)
