@@ -1,4 +1,5 @@
-"""Kernel-level roofline micro-benchmark for the Pallas qgemm/act-quantize kernels.
+"""Kernel-level roofline micro-benchmark for the Pallas qgemm/act-quantize kernels,
+plus an end-to-end fp-vs-fused-int8 serving comparison (DESIGN.md §3.3/§7).
 
 No TPU is attached, so wall-clock numbers are CPU-interpret sanity only; the
 *derived* columns are the structural roofline terms for TPU v5e per kernel call:
@@ -9,6 +10,12 @@ archs at the paper's W8A8 setting.
 Reported speedup logic (recorded in §Perf): against a bf16 GEMM of the same shape,
 the int8 path moves ~half the weight bytes and runs the MXU at 2x throughput —
 projected_bf16 / projected_int8 is the kernel-level headline.
+
+The ``e2e`` section serves the same request batch through the continuous batcher on
+the fp path and the fused-int8 path (ServeEngine path="fused-int8"): measured CPU
+tokens/sec for both, plus the projected TPU step-time ratio from the model's
+decode-GEMM shapes. On CPU the fused path *loses* wall-clock (Pallas interpret
+overhead) — the projected column is the deployment-relevant number.
 """
 from __future__ import annotations
 
@@ -43,6 +50,49 @@ def derived(M, K, N, w_bits=8):
     return bytes_moved, ops, ops / bytes_moved, t_int8, t_bf16
 
 
+def _serve_tok_s(cfg, params, *, quant, path, kv_cache, n_req, max_new) -> float:
+    from repro.serving.engine import ServeEngine
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(n_req)]
+    eng = ServeEngine(cfg, params, batch_size=min(4, n_req), max_len=32,
+                      quant=quant, eos_id=-1, path=path, kv_cache=kv_cache)
+    eng.submit(prompts, max_new=max_new)
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    return sum(len(r.out) for r in done) / dt
+
+
+def e2e(quick: bool = False):
+    """End-to-end continuous-batching comparison: fp vs fused-int8 (+ int8 KV)."""
+    from repro.configs import get
+    from repro.core import qlinear as ql
+    from repro.models import model as M2
+    from repro.models.quantize import quantize_tree
+
+    cfg = get("starcoder2-7b", smoke=True)
+    params = M2.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_tree(params, ql.W8A8_INT8)
+    n_req, max_new = (2, 4) if quick else (4, 8)
+    fp = _serve_tok_s(cfg, params, quant=ql.FP, path=None, kv_cache="fp",
+                      n_req=n_req, max_new=max_new)
+    fused = _serve_tok_s(cfg, qparams, quant=ql.W8A8_INT8, path="fused-int8",
+                         kv_cache="int8", n_req=n_req, max_new=max_new)
+    # Projected TPU ratio from the decode hot GEMMs of this config (structural —
+    # the same roofline terms as the qgemm section, summed over the layer's dots).
+    d, f = cfg.d_model, cfg.d_ff
+    shapes = [(n_req, d, cfg.n_heads * cfg.head_dim),
+              (n_req, cfg.n_heads * cfg.head_dim, d),
+              (n_req, d, f), (n_req, f, d)]
+    t8 = sum(derived(M, K, N)[3] for M, K, N in shapes)
+    t16 = sum(derived(M, K, N)[4] for M, K, N in shapes)
+    return [
+        "e2e,arch,cpu_fp_tok_s,cpu_int8_tok_s,cpu_ratio,proj_tpu_ratio",
+        f"e2e,{cfg.name},{fp:.1f},{fused:.1f},{fused / fp:.2f},{t16 / t8:.2f}",
+    ]
+
+
 def run(quick: bool = False):
     lines = ["qgemm,shape,bytes,int8_ops,intensity,proj_tpu_us,proj_bf16_us,speedup,"
              "cpu_ref_us"]
@@ -64,6 +114,7 @@ def run(quick: bool = False):
         cpu_us = (time.perf_counter() - t0) / reps * 1e6
         lines.append(f"qgemm,{tag},{b:.3g},{ops:.3g},{inten:.0f},"
                      f"{t8 * 1e6:.1f},{t16 * 1e6:.1f},{t16 / t8:.2f},{cpu_us:.0f}")
+    lines.extend(e2e(quick))
     return lines
 
 

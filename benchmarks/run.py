@@ -8,11 +8,15 @@ XLA-CPU JIT dylibs across hundreds of compiled graphs and eventually fails with
 "Failed to materialize symbols"; process isolation resets the JIT per module.
 
 Prints CSV sections; each line is ``<bench>,<key...>,<value...>``. The mapping to
-the paper's tables/figures is in DESIGN.md §7; EXPERIMENTS.md quotes these outputs.
+the paper's tables/figures is in DESIGN.md §7 and benchmarks/README.md; EXPERIMENTS.md
+quotes these outputs. ``--json PATH`` additionally writes the machine-readable
+``BENCH_*.json`` snapshot (schema in benchmarks/README.md) used for cross-PR
+trajectory tracking.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
@@ -28,10 +32,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated module subset")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_*.json snapshot (benchmarks/README.md)")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
     t_all = time.time()
     failures = []
+    snapshot = {"schema": 1, "quick": args.quick, "modules": {}}
     env = {**os.environ, "PYTHONPATH": os.environ.get("PYTHONPATH", "src")}
     for name in mods:
         t0 = time.time()
@@ -41,13 +48,25 @@ def main() -> None:
         r = subprocess.run([sys.executable, "-c", code], env=env, text=True,
                            capture_output=True, timeout=3600)
         sys.stdout.write(r.stdout)
-        if r.returncode != 0:
+        ok = r.returncode == 0
+        if not ok:
             failures.append((name, r.stderr.strip().splitlines()[-1][:200]
                              if r.stderr.strip() else "unknown"))
             print(f"{name},ERROR,see stderr", flush=True)
             sys.stderr.write(r.stderr[-2000:])
-        print(f"# {name} took {time.time() - t0:.0f}s", flush=True)
-    print(f"# total {time.time() - t_all:.0f}s")
+        dt = time.time() - t0
+        snapshot["modules"][name] = {
+            "ok": ok, "seconds": round(dt, 1),
+            "lines": [ln for ln in r.stdout.splitlines() if ln.strip()],
+        }
+        print(f"# {name} took {dt:.0f}s", flush=True)
+    snapshot["total_seconds"] = round(time.time() - t_all, 1)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(snapshot, fh, indent=1)
+        print(f"# wrote {args.json}")
+    print(f"# total {snapshot['total_seconds']:.0f}s")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -2,9 +2,13 @@
 
 Calibrates CrossQuant's static column statistics on synthetic traffic, folds them
 into true-int8 weights (quantize_tree), and serves a batch of requests through the
-continuous-batching engine — the int8 deployment path of DESIGN.md §3.1.
+continuous-batching engine. ``--path`` selects the integer execution backend
+(DESIGN.md §3.3) and ``--kv-cache int8`` stores decode K/V as int8 codes +
+per-token scales; ``--compare`` serves the same workload through the fp baseline
+and the fused int8 path and reports both tokens/sec.
 
     PYTHONPATH=src:. python examples/serve_batch.py [--quant int8|fake|fp]
+        [--path ref|dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
 """
 import argparse
 import time
@@ -22,9 +26,46 @@ from repro.models.quantize import quantize_tree, quantized_bytes
 from repro.serving.engine import ServeEngine
 
 
+def calibrate_and_quantize(cfg, params, quant):
+    print("calibrating static-c column stats on 2 batches ...")
+    obs = calibration.Observer()
+    batch_fn = make_train_batches(cfg.vocab, 16, 4, seed=1)
+    for b in range(2):
+        batch = {k: jnp.asarray(v) for k, v in batch_fn(b).items()}
+        M.apply(params, batch, cfg, ctx=QuantContext(quant, observer=obs),
+                mode="train", unroll=True)
+    before = quantized_bytes(params)
+    qparams = quantize_tree(params, quant,
+                            tables=calibration.stack_tables(obs.tables()))
+    after = quantized_bytes(qparams)
+    print(f"weights {before / 2**20:.1f} MiB -> {after / 2**20:.1f} MiB "
+          f"({before / after:.2f}x smaller)")
+    return qparams
+
+
+def serve(cfg, params, prompts, *, quant, path=None, kv_cache="fp",
+          max_new=12, tag=""):
+    engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
+                         eos_id=-1, path=path, kv_cache=kv_cache)
+    engine.submit([p.copy() for p in prompts], max_new=max_new)
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total = sum(len(r.out) for r in done)
+    print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache})")
+    return done, total / dt
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quant", default="int8", choices=["fp", "fake", "int8"])
+    ap.add_argument("--path", default="fused-int8",
+                    choices=["ref", "dequant-fp", "fused-int8"],
+                    help="integer execution backend (int8 quant only)")
+    ap.add_argument("--kv-cache", default="fp", choices=["fp", "int8"])
+    ap.add_argument("--compare", action="store_true",
+                    help="also serve the fp baseline and report both tok/s")
     ap.add_argument("--arch", default="starcoder2-7b")
     ap.add_argument("--n-requests", type=int, default=6)
     args = ap.parse_args()
@@ -33,33 +74,28 @@ def main() -> None:
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     quant = {"fp": ql.FP, "fake": ql.W8A8_CROSSQUANT, "int8": ql.W8A8_INT8}[args.quant]
 
-    if args.quant == "int8":
-        print("calibrating static-c column stats on 2 batches ...")
-        obs = calibration.Observer()
-        batch_fn = make_train_batches(cfg.vocab, 16, 4, seed=1)
-        for b in range(2):
-            batch = {k: jnp.asarray(v) for k, v in batch_fn(b).items()}
-            M.apply(params, batch, cfg, ctx=QuantContext(quant, observer=obs),
-                    mode="train", unroll=True)
-        before = quantized_bytes(params)
-        params = quantize_tree(params, quant,
-                               tables=calibration.stack_tables(obs.tables()))
-        after = quantized_bytes(params)
-        print(f"weights {before / 2**20:.1f} MiB -> {after / 2**20:.1f} MiB "
-              f"({before / after:.2f}x smaller)")
-
-    engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
-                         eos_id=-1)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab, size=12).astype(np.int32)
                for _ in range(args.n_requests)]
-    engine.submit(prompts, max_new=12)
-    t0 = time.time()
-    done = engine.run()
-    dt = time.time() - t0
-    total = sum(len(r.out) for r in done)
-    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s on CPU)")
+
+    if args.quant != "int8":
+        # The int8 KV cache is independent of weight quantization and applies to
+        # fp/fake serving too; only --path needs a prepared integer tree.
+        if args.path != "fused-int8":
+            print(f"note: --path {args.path} only applies to --quant int8; ignored")
+        done, _ = serve(cfg, params, prompts, quant=quant, kv_cache=args.kv_cache,
+                        tag=args.quant)
+    else:
+        qparams = calibrate_and_quantize(cfg, params, quant)
+        path = None if args.path == "ref" else args.path
+        done, int8_tps = serve(cfg, qparams, prompts, quant=quant, path=path,
+                               kv_cache=args.kv_cache)
+        if args.compare:
+            _, fp_tps = serve(cfg, params, prompts, quant=ql.FP, tag="fp-baseline")
+            print(f"end-to-end tokens/sec: fp={fp_tps:.1f} "
+                  f"{args.path}={int8_tps:.1f} ({int8_tps / fp_tps:.2f}x; "
+                  "CPU-interpret numbers — the kernel-level TPU projection is in "
+                  "benchmarks/qgemm_bench.py)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.prompt[:4].tolist()}... -> {r.out[:6]}")
 

@@ -205,6 +205,73 @@ def quantize_act_int8(x: jax.Array, bcol: jax.Array, cfg: QuantConfig, alpha=Non
     return qx.astype(jnp.int8), a.astype(jnp.float32)
 
 
+def _int8_pallas(params: dict, x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Fused Pallas pipeline for a 2-D prepared linear: ``act_quantize`` emits int8
+    codes + row scales straight into ``qgemm_w8a8``/``w4a8`` (DESIGN.md §3.3).
+
+    Leading batch/sequence axes are flattened to the GEMM M axis (token-parallel).
+    The activation never materializes an (M, K) f32 intermediate on the way in, and
+    the contraction runs on integer codes with output-side dequantization.
+    """
+    from repro.kernels import ops as kops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    alpha = params.get("qalpha")
+    if alpha is None:
+        qx, a = kops.act_quantize(x2, params["bcol"], bits=cfg.a_bits,
+                                  alpha=cfg.alpha)
+    else:
+        qx, a = kops.act_quantize_dyn(x2, params["bcol"],
+                                      jnp.asarray(alpha, jnp.float32),
+                                      bits=cfg.a_bits)
+    if "qw" in params:
+        y = kops.qgemm_w8a8(qx, params["qw"], a, params["sw"])
+    else:
+        y = kops.qgemm_w4a8(qx, params["qw4"], a, params["sw"], group=cfg.w_group)
+    return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+
+
+def _int8_dequant_fp(qx, qw, a, sw):
+    """Dequantize-then-fp-GEMM baseline: codes are scaled back to f32 *before* the
+    contraction (xdq ≈ x/b rows, wdq ≈ w·b columns — the b factors cancel), so the
+    GEMM runs at fp throughput and fp HBM traffic. Numerically it carries exactly the
+    same quantization error as the integer path; it exists as the serving baseline the
+    fused kernels are measured against (DESIGN.md §3.3)."""
+    xdq = qx.astype(jnp.float32) * a
+    wdq = qw.astype(jnp.float32)
+    if qw.ndim == 3 and qx.ndim == 3:
+        wdq = wdq * sw[:, None, :]
+        return jnp.einsum("eci,eio->eco", xdq, wdq)
+    return (xdq @ wdq) * sw
+
+
+def unpack_int4_weight(qw4: jax.Array) -> jax.Array:
+    """(..., d_in//2, d_out) packed nibbles → (..., d_in, d_out) int8 codes."""
+    qw = packing.unpack_int4(jnp.swapaxes(qw4, -1, -2))
+    return jnp.swapaxes(qw, -1, -2)
+
+
+def dequant_int4_weight(qw4: jax.Array, sw: jax.Array, group: int) -> jax.Array:
+    """Unpack nibbles and apply the (..., G, d_out) per-group scales → f32 weight
+    (the b-folded ``wb``, see :func:`prepare_int4`). Single home for the qw4/sw
+    layout contract shared by the dequant backend and models.quantize."""
+    qw = unpack_int4_weight(qw4).astype(jnp.float32)
+    *lead, d_in, d_out = qw.shape
+    grouped = qw.reshape(*lead, d_in // group, group, d_out)
+    return (grouped * sw[..., :, None, :]).reshape(*lead, d_in, d_out)
+
+
+def _int4_dequant_fp(qx, qw4, a, sw, group: int):
+    """W4 variant of :func:`_int8_dequant_fp`: unpack nibbles, apply per-group scales
+    to the weight, fp GEMM."""
+    xdq = qx.astype(jnp.float32) * a
+    wdq = dequant_int4_weight(qw4, sw, group)
+    if wdq.ndim == 3 and qx.ndim == 3:
+        return jnp.einsum("eci,eio->eco", xdq, wdq)
+    return xdq @ wdq
+
+
 def _int8_matmul_ref(qx, qw, a, sw):
     """Reference int8 GEMM + separable dequant:  y = (qx·qw) * a_i * sw_k.
 
@@ -224,8 +291,7 @@ def _int4_matmul_ref(qx, qw4, a, sw, group: int):
 
     Stacked experts supported: qx (E, C, d_in), qw4 (E, d_in//2, d_out),
     sw (E, G, d_out)."""
-    qw = packing.unpack_int4(jnp.swapaxes(qw4, -1, -2))
-    qw = jnp.swapaxes(qw, -1, -2)                                # (..., d_in, d_out)
+    qw = unpack_int4_weight(qw4)                                 # (..., d_in, d_out)
     d_in = qw.shape[-2]
     ngroups = d_in // group
     if qw.ndim == 3 and qx.ndim == 3:
@@ -248,28 +314,44 @@ def _int4_matmul_ref(qx, qw4, a, sw, group: int):
 # ======================================================================================
 
 def apply(params: dict, x: jax.Array, cfg: QuantConfig = FP, *,
-          name: str = "", observer=None, use_pallas: bool = False) -> jax.Array:
+          name: str = "", observer=None, use_pallas: bool = False,
+          int_exec: Optional[str] = None) -> jax.Array:
     """y = x @ W under the configured quantization mode.
 
     Handles 2-D weights and stacked-expert 3-D weights ((E, d_in, d_out) with
     x (E, C, d_in)). ``observer`` (eager calibration) records column absmax.
+
+    For *prepared* integer trees, ``int_exec`` selects the execution backend
+    (DESIGN.md §3.3):
+
+    * ``"ref"`` (default) — jnp integer GEMM (int32 accumulation under XLA).
+    * ``"dequant"``       — dequantize codes to f32, fp GEMM (the dequant-fp
+                            serving baseline).
+    * ``"pallas"``        — fused ``act_quantize → qgemm`` Pallas kernels
+                            (Mosaic on TPU, ``interpret=True`` elsewhere).
+
+    ``use_pallas=True`` is shorthand for ``int_exec="pallas"`` (it also switches the
+    attention layers to the flash kernel — see models/layers.py).
     """
     if observer is not None:
         observer.observe(name, x)
 
-    if "qw" in params:       # prepared int8
+    if int_exec not in (None, "ref", "dequant", "pallas"):
+        raise ValueError(f"unknown int_exec {int_exec!r}; "
+                         "pick one of 'ref', 'dequant', 'pallas'")
+    if "qw" in params or "qw4" in params:        # prepared integer tree
+        exec_mode = "pallas" if use_pallas else (int_exec or "ref")
+        wq = params.get("qw", params.get("qw4"))
+        if exec_mode == "pallas" and wq.ndim == 2 and x.ndim >= 2:
+            return _int8_pallas(params, x, cfg)
         qx, a = quantize_act_int8(x, params["bcol"], cfg, alpha=params.get("qalpha"))
-        if use_pallas and params["qw"].ndim == 2 and qx.ndim == 2:
-            from repro.kernels import ops as kops
-            return kops.qgemm_w8a8(qx, params["qw"], a, params["sw"]).astype(x.dtype)
-        return _int8_matmul_ref(qx, params["qw"], a, params["sw"]).astype(x.dtype)
-
-    if "qw4" in params:      # prepared int4 (packed)
-        qx, a = quantize_act_int8(x, params["bcol"], cfg, alpha=params.get("qalpha"))
-        if use_pallas and params["qw4"].ndim == 2 and qx.ndim == 2:
-            from repro.kernels import ops as kops
-            return kops.qgemm_w4a8(qx, params["qw4"], a, params["sw"],
-                                   group=cfg.w_group).astype(x.dtype)
+        if "qw" in params:
+            if exec_mode == "dequant":
+                return _int8_dequant_fp(qx, params["qw"], a, params["sw"]).astype(x.dtype)
+            return _int8_matmul_ref(qx, params["qw"], a, params["sw"]).astype(x.dtype)
+        if exec_mode == "dequant":
+            return _int4_dequant_fp(qx, params["qw4"], a, params["sw"],
+                                    cfg.w_group).astype(x.dtype)
         return _int4_matmul_ref(qx, params["qw4"], a, params["sw"], cfg.w_group).astype(x.dtype)
 
     w = params["w"]
@@ -327,7 +409,7 @@ def apply(params: dict, x: jax.Array, cfg: QuantConfig = FP, *,
             reduce_axes = tuple(range(x.ndim - 1))
             cmax = jnp.max(jnp.abs(x), axis=reduce_axes)
         prepared = prepare_int8({"w": w}, cfg, cmax=cmax)
-        return apply(prepared, x, cfg, use_pallas=use_pallas)
+        return apply(prepared, x, cfg, use_pallas=use_pallas, int_exec=int_exec)
     else:
         raise ValueError(cfg.mode)
 

@@ -26,8 +26,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _act_quant_kernel(x_ref, bcol_ref, q_ref, a_ref, t_ref, *,
-                      n_k: int, alpha: float, qmax: int, eps: float):
+def _act_quant_kernel(x_ref, bcol_ref, *refs,
+                      n_k: int, alpha, qmax: int, eps: float):
+    """``alpha`` is either a static float or ``None`` — in the latter case the exponent
+    arrives as a (1, 1) SMEM scalar input (``alpha_ref``), so one compiled kernel
+    serves every linear in a scanned layer stack even when the prepared tree carries
+    per-layer ``qalpha`` leaves (DESIGN.md §3.3)."""
+    if alpha is None:
+        alpha_ref, q_ref, a_ref, t_ref = refs
+    else:
+        q_ref, a_ref, t_ref = refs
     phase = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -43,7 +51,8 @@ def _act_quant_kernel(x_ref, bcol_ref, q_ref, a_ref, t_ref, *,
 
     @pl.when(phase == 1)
     def _quantize():
-        a = (t_ref[...] ** alpha) / qmax                    # (bm, 1)
+        a_exp = alpha_ref[0, 0] if alpha is None else alpha
+        a = (t_ref[...] ** a_exp) / qmax                    # (bm, 1)
         x = x_ref[...].astype(jnp.float32)
         q = jnp.round(x / (a * bcol_ref[...]))
         q_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
@@ -54,23 +63,35 @@ def _act_quant_kernel(x_ref, bcol_ref, q_ref, a_ref, t_ref, *,
 
 
 def act_quantize_pallas(
-    x: jax.Array, bcol: jax.Array, *, bits: int = 8, alpha: float = 0.15,
+    x: jax.Array, bcol: jax.Array, *, bits: int = 8, alpha=0.15,
     bm: int = 256, bk: int = 512, interpret: bool = False,
 ):
-    """x (M, K) float → (codes (M, K) int8, a (M, 1) f32). M % bm == K % bk == 0."""
+    """x (M, K) float → (codes (M, K) int8, a (M, 1) f32). M % bm == K % bk == 0.
+
+    ``alpha`` may be a python float (baked into the kernel) or a jax scalar array
+    (runtime SMEM input — the fused serving path threads the prepared tree's
+    per-layer ``qalpha`` leaf through here).
+    """
     M, K = x.shape
     assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
     qmax = 2 ** (bits - 1) - 1
     n_k = K // bk
     grid = (M // bm, 2, n_k)
+    dyn_alpha = isinstance(alpha, jax.Array)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda m, p, k: (m, k)),
+        pl.BlockSpec((1, bk), lambda m, p, k: (0, k)),
+    ]
+    operands = [x, bcol.reshape(1, K)]
+    if dyn_alpha:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        operands.append(jnp.asarray(alpha, jnp.float32).reshape(1, 1))
     return pl.pallas_call(
-        functools.partial(_act_quant_kernel, n_k=n_k, alpha=alpha, qmax=qmax,
+        functools.partial(_act_quant_kernel, n_k=n_k,
+                          alpha=None if dyn_alpha else alpha, qmax=qmax,
                           eps=1e-8),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda m, p, k: (m, k)),
-            pl.BlockSpec((1, bk), lambda m, p, k: (0, k)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bm, bk), lambda m, p, k: (m, k)),
             pl.BlockSpec((bm, 1), lambda m, p, k: (m, 0)),
@@ -81,4 +102,4 @@ def act_quantize_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
         interpret=interpret,
-    )(x, bcol.reshape(1, K))
+    )(*operands)

@@ -103,14 +103,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :, :Sq]
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk"))
-def act_quantize(x: jax.Array, bcol: jax.Array, *, bits: int = 8,
-                 alpha: float = 0.15, bm: int = 256, bk: int = 512):
-    """Fused CrossQuant activation quantization. x (M,K); bcol (K,) = c^(1-alpha).
+def _act_quantize_padded(x, bcol, alpha, bits, bm, bk):
+    """Shared pad → kernel → slice for the static- and traced-alpha wrappers.
 
-    Returns (codes (M,K) int8, a (M,1) f32). Zero row padding is exact (padded rows
-    produce a = eps^alpha scale, sliced away); K padding pads bcol with 1 to avoid
-    division by zero.
+    Zero row padding is exact (padded rows produce a = eps^alpha scale, sliced
+    away); K padding pads bcol with 1 to avoid division by zero.
     """
     M, K = x.shape
     bm = _pick_block(M, bm)
@@ -123,3 +120,26 @@ def act_quantize(x: jax.Array, bcol: jax.Array, *, bits: int = 8,
     q, a = _aq.act_quantize_pallas(xp, bcolp, bits=bits, alpha=alpha, bm=bm, bk=bk,
                                    interpret=_interpret())
     return q[:M, :K], a[:M]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk"))
+def act_quantize(x: jax.Array, bcol: jax.Array, *, bits: int = 8,
+                 alpha: float = 0.15, bm: int = 256, bk: int = 512):
+    """Fused CrossQuant activation quantization. x (M,K); bcol (K,) = c^(1-alpha).
+
+    Returns (codes (M,K) int8, a (M,1) f32).
+    """
+    return _act_quantize_padded(x, bcol, alpha, bits, bm, bk)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bk"))
+def act_quantize_dyn(x: jax.Array, bcol: jax.Array, alpha: jax.Array, *,
+                     bits: int = 8, bm: int = 256, bk: int = 512):
+    """:func:`act_quantize` with a *traced* CrossQuant exponent.
+
+    The fused serving path slices ``qalpha`` out of a scanned prepared tree, so the
+    exponent is a runtime scalar: it enters the kernel through SMEM instead of being
+    baked into the lowering (one compiled kernel for all layers, DESIGN.md §3.3).
+    """
+    return _act_quantize_padded(x, bcol, jnp.asarray(alpha, jnp.float32),
+                                bits, bm, bk)

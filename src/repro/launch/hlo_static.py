@@ -36,8 +36,13 @@ COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 _COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(")
 _RESULT = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\w+)\[([0-9,]*)\]")
 _SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
-_DOT_OPERANDS = re.compile(r"\bdot\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)\s*\)")
+# Operands may be bare (`dot(%a, %b)`) or carry their full type
+# (`dot(f32[32,128]{1,0} %a, ...)`) depending on the XLA printer version.
+_DOT_OPERANDS = re.compile(
+    r"\bdot\(\s*(?:[\w\[\]{},]+\s+)?%?([\w\.\-]+)\s*,\s*"
+    r"(?:[\w\[\]{},]+\s+)?%?([\w\.\-]+)\s*\)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONVERT_SRC = re.compile(r"\bconvert\(\s*(?:(\w+)\[[0-9,]*\]\S*\s+)?%?([\w\.\-]+)")
 _WHILE = re.compile(r"\bwhile\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
 _CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
@@ -111,19 +116,33 @@ class Module:
         coll = {k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVES}
         children: List[Tuple[str, float]] = []
         table = self._symbols(name)
+        # Integer dots reach the MXU/accumulator as widening converts (s8 -> s32
+        # feeding the dot). Track each convert's source dtype so the dot is
+        # classified by the *storage* dtype of its operands, not the accumulator.
+        narrow: Dict[str, str] = {}
+        for line in self.comps.get(name, ()):
+            mr = _RESULT.match(line)
+            if mr and " convert(" in line:
+                mc = _CONVERT_SRC.search(line)
+                if mc:
+                    src_dt = mc.group(1) or (table.get(mc.group(2)) or ("",))[0]
+                    if src_dt:
+                        narrow[mr.group(1)] = src_dt
         for line in self.comps.get(name, ()):
             hbm_bytes += self._op_bytes(line, table)
             mr = _RESULT.match(line)
-            md = _DOT_OPERANDS.search(line)
-            if md and mr and " dot(" in line:
-                out = _prod(_dims(mr.group(3)))
-                lhs = table.get(md.group(1))
+            if mr and " dot(" in line:
+                # A dot whose operands don't parse (printer-format drift) must
+                # land in unresolved_dots, never be silently dropped from flops.
+                md = _DOT_OPERANDS.search(line)
+                lhs = table.get(md.group(1)) if md else None
                 mc = _CONTRACT.search(line)
-                if lhs is not None and mc is not None:
+                if md is not None and lhs is not None and mc is not None:
+                    out = _prod(_dims(mr.group(3)))
                     contract = _prod([lhs[1][i] for i in _dims(mc.group(1))
                                       if i < len(lhs[1])])
                     f = 2.0 * out * contract
-                    if lhs[0] in ("s8", "u8", "s4", "u4"):
+                    if narrow.get(md.group(1), lhs[0]) in ("s8", "u8", "s4", "u4"):
                         flops_int8 += f
                     else:
                         flops_fp += f

@@ -44,6 +44,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--calib-batches", type=int, default=2,
                     help="calibration batches for the int8 static-c path")
+    ap.add_argument("--path", default="ref",
+                    choices=["ref", "dequant-fp", "fused-int8"],
+                    help="integer execution backend (int8 quant, DESIGN.md §3.3)")
+    ap.add_argument("--kv-cache", default="fp", choices=["fp", "int8"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -69,8 +73,10 @@ def main() -> None:
         print(f"quantized weights: {base_bytes / 2**20:.1f} MiB -> "
               f"{q_bytes / 2**20:.1f} MiB ({base_bytes / q_bytes:.2f}x smaller)")
 
+    path = None if (args.quant != "int8" or args.path == "ref") else args.path
     engine = ServeEngine(cfg, params, batch_size=args.batch_size,
-                         max_len=args.max_len, quant=quant)
+                         max_len=args.max_len, quant=quant, path=path,
+                         kv_cache=args.kv_cache)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(1, cfg.vocab, size=args.prompt_len).astype(np.int32)
                for _ in range(args.n_requests)]

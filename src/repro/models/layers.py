@@ -18,18 +18,26 @@ from repro.configs.base import ModelConfig
 
 @dataclasses.dataclass
 class QuantContext:
-    """Threaded through every layer: quant behaviour + (eager-only) calibration."""
+    """Threaded through every layer: quant behaviour + (eager-only) calibration.
+
+    ``int_exec`` picks the execution backend for *prepared* integer linears
+    (``None``/"ref" | "dequant" | "pallas" — DESIGN.md §3.3); ``use_pallas=True``
+    additionally routes prefill attention through the flash kernel.
+    """
     cfg: ql.QuantConfig
     observer: object = None
     prefix: str = ""
     use_pallas: bool = False
+    int_exec: Optional[str] = None
 
     def sub(self, name: str) -> "QuantContext":
-        return QuantContext(self.cfg, self.observer, f"{self.prefix}/{name}", self.use_pallas)
+        return QuantContext(self.cfg, self.observer, f"{self.prefix}/{name}",
+                            self.use_pallas, self.int_exec)
 
     def linear(self, params: dict, x: jax.Array, name: str) -> jax.Array:
         return ql.apply(params, x, self.cfg, name=f"{self.prefix}/{name}",
-                        observer=self.observer, use_pallas=self.use_pallas)
+                        observer=self.observer, use_pallas=self.use_pallas,
+                        int_exec=self.int_exec)
 
 
 # ======================================================================================
@@ -182,26 +190,55 @@ def blockwise_attention(
     return out[:, :Sq].astype(q.dtype)
 
 
+def kv_quantize(x: jax.Array):
+    """Per-token int8 KV quantization (DESIGN.md §3.3): reduce absmax over the head
+    dim, one f32 scale per (batch, position, kv-head). x (B, S, Hkv, D) →
+    (codes (B, S, Hkv, D) int8, scale (B, S, Hkv, 1) f32)."""
+    from repro.core import quantizers as Q
+    qr = Q.per_token_quant(x.astype(jnp.float32), 8)
+    return qr.codes, qr.scale
+
+
+def _scale_to_scores(scale: jax.Array) -> jax.Array:
+    """(B, T, Hkv, 1) per-token KV scale → (B, Hkv, 1, T) score-broadcast layout."""
+    return jnp.transpose(scale[..., 0], (0, 2, 1))[:, :, None, :]
+
+
 def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
     cur_len: jax.Array, window: Optional[int], softcap: Optional[float],
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Single-token attention against a (B, T, Hkv, D) cache. The T axis may be
     sequence-sharded over the model mesh axis (flash-decoding via GSPMD partial
-    softmax — see sharding/planner)."""
+    softmax — see sharding/planner).
+
+    With ``k_scale``/``v_scale`` the cache holds int8 codes and per-token f32 scales:
+    the QK product runs on raw codes and the scale is applied to the *score column*
+    (one multiply per (t, kv-head) instead of dequantizing the (T, D) cache), and the
+    V scale folds into the probability row the same way.
+    """
     B, _, H, D = q.shape
     Hkv = k_cache.shape[2]
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache) * (D ** -0.5)
-    s = _softcap(s.astype(jnp.float32), softcap)
+    kf = k_cache.astype(jnp.float32) if k_scale is not None else k_cache
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, kf) * (D ** -0.5)
+    s = s.astype(jnp.float32)
+    if k_scale is not None:
+        s = s * _scale_to_scores(k_scale)
+    s = _softcap(s, softcap)
     t_pos = jnp.arange(k_cache.shape[1])
     valid = t_pos[None, None, None, :] < cur_len
     if window is not None:
         valid &= (cur_len - 1 - t_pos[None, None, None, :]) < window
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache)
+    if v_scale is not None:
+        out = jnp.einsum("bhgt,bthd->bhgd", p * _scale_to_scores(v_scale),
+                         v_cache.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
@@ -240,29 +277,56 @@ def attention_apply(
             softcap=cfg.attn_softcap).transpose(0, 2, 1, 3)
         y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
         return y, None
+    kv_int8 = cache is not None and "k_scale" in cache
     if cache is not None and S == 1:
         # decode: append then attend over the cache (cur_len is a batch-aligned scalar;
         # the serving batcher aligns request positions — serving/engine.py)
         idx = cur_len - 1
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
-        new_cache = {"k": k_cache, "v": v_cache}
-        out = decode_attention(q, k_cache, v_cache, cur_len=cur_len,
-                               window=window, softcap=cfg.attn_softcap)
+        if kv_int8:
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, idx, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, idx, axis=1),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, idx, axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, idx, axis=1),
+            }
+            out = decode_attention(q, new_cache["k"], new_cache["v"],
+                                   cur_len=cur_len, window=window,
+                                   softcap=cfg.attn_softcap,
+                                   k_scale=new_cache["k_scale"],
+                                   v_scale=new_cache["v_scale"])
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache}
+            out = decode_attention(q, k_cache, v_cache, cur_len=cur_len,
+                                   window=window, softcap=cfg.attn_softcap)
     else:
         out = blockwise_attention(
             q, k, v, causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
             q_block=min(1024, max(S, 16)), kv_block=min(1024, max(S, 16)))
         if cache is not None:
-            # prefill: write kv into the cache prefix
+            # prefill: write kv into the cache prefix (in-flight attention above runs
+            # on the unquantized k/v; only the *stored* cache is int8)
             T = cache["k"].shape[1]
             pad = ((0, 0), (0, T - S), (0, 0), (0, 0))
-            new_cache = {
-                "k": jnp.pad(k.astype(cache["k"].dtype), pad),
-                "v": jnp.pad(v.astype(cache["v"].dtype), pad),
-            }
+            if kv_int8:
+                kq, ks = kv_quantize(k)
+                vq, vs = kv_quantize(v)
+                new_cache = {
+                    "k": jnp.pad(kq, pad), "v": jnp.pad(vq, pad),
+                    "k_scale": jnp.pad(ks, pad), "v_scale": jnp.pad(vs, pad),
+                }
+            else:
+                new_cache = {
+                    "k": jnp.pad(k.astype(cache["k"].dtype), pad),
+                    "v": jnp.pad(v.astype(cache["v"].dtype), pad),
+                }
     y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
     return y, new_cache
 

@@ -53,6 +53,39 @@ def quantize_tree(params, cfg: ql.QuantConfig,
     return convert(params, "")
 
 
+def dequantize_tree(qparams, cfg: ql.QuantConfig):
+    """Invert :func:`quantize_tree`'s *weight* quantization: every prepared linear
+    becomes ``{"w": dequant(q)/b, "cmax": ...}`` — an fp tree whose weights carry
+    exactly the integer path's weight rounding.
+
+    Serving this tree with ``mode="fake", act_quant="crossquant", static_c=True,
+    w_prequantized=True`` is the fake-quant twin of the fused int path: the
+    activation fake-quant applies the same ``t_i^α · c_j^(1-α)`` grid the kernels
+    use, so logits agree up to f32 association (the §3.3 parity tests pin this).
+    Leaves prepared without calibration (``qalpha == 1``) re-attach ``cmax = 1``;
+    their fake twin is per-token activation quantization.
+    """
+    def convert(node):
+        if isinstance(node, dict):
+            if "qw" in node or "qw4" in node:
+                b = node["bcol"]
+                if "qw" in node:
+                    wb = node["qw"].astype(jnp.float32) * node["sw"][..., None, :]
+                else:
+                    wb = ql.dequant_int4_weight(node["qw4"], node["sw"], cfg.w_group)
+                w = wb / b[..., :, None]
+                alpha = node["qalpha"][..., None]
+                denom = jnp.where(alpha < 1.0, 1.0 - alpha, 1.0)
+                cmax = jnp.where(alpha < 1.0, b ** (1.0 / denom), jnp.ones_like(b))
+                return {"w": w, "cmax": cmax}
+            return {k: convert(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [convert(v) for v in node]
+        return node
+
+    return convert(qparams)
+
+
 def fake_quantize_weights(params, cfg: ql.QuantConfig):
     """Offline PTQ for the *fake-quant* evaluation path: replace every quantizable
     linear's ``w`` with its fake-quantized value. Serving with

@@ -1,9 +1,20 @@
 """Serving engine: prefill / decode step builders + a host-side continuous batcher.
 
 Step functions are pure and jit/pjit-ready: the dry-run lowers exactly these. The
-engine serves either raw-fp params (with fake-quant CrossQuant activations — the
+engine serves raw-fp params (fp or fake-quant CrossQuant activations — the
 paper-faithful W8A8 evaluation path) or a prepared integer tree from
-``models.quantize.quantize_tree`` (the int8/int4 deployment path: ~2×/4× weight bytes).
+``models.quantize.quantize_tree``, executed through one of three integer backends
+(``path`` — DESIGN.md §3.3):
+
+* ``"fake"``       — fp weights, fake-quant activations (accuracy-evaluation path).
+* ``"dequant-fp"`` — prepared tree, codes dequantized to f32 before an fp GEMM
+                     (weight-storage savings only; the serving baseline).
+* ``"fused-int8"`` — prepared tree through the Pallas ``act_quantize → qgemm``
+                     kernels: true int8×int8→int32 contractions per layer
+                     (Mosaic on TPU, ``interpret=True`` off-TPU so CI runs it).
+
+``kv_cache="int8"`` additionally stores decode K/V as int8 codes + per-token scales
+(models.layers.kv_quantize), cutting decode-step cache HBM traffic.
 """
 from __future__ import annotations
 
@@ -19,9 +30,28 @@ from repro.core import qlinear as ql
 from repro.models import model as M
 from repro.models.layers import QuantContext
 
+#: serving path → QuantContext wiring (DESIGN.md §3.3). ``None`` keeps the legacy
+#: behaviour: whatever the params tree + quant config imply, on the jnp ref backend.
+SERVE_PATHS = {
+    None: {},
+    "fp": {},
+    "fake": {},
+    "dequant-fp": {"int_exec": "dequant"},
+    "fused-int8": {"int_exec": "pallas", "use_pallas": True},
+}
 
-def make_prefill_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None):
-    ctx = QuantContext(quant or cfg.quant)
+
+def _make_ctx(cfg: ModelConfig, quant: Optional[ql.QuantConfig],
+              path: Optional[str]) -> QuantContext:
+    if path not in SERVE_PATHS:
+        raise ValueError(f"unknown serving path {path!r}; "
+                         f"pick one of {sorted(k for k in SERVE_PATHS if k)}")
+    return QuantContext(quant or cfg.quant, **SERVE_PATHS[path])
+
+
+def make_prefill_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
+                      *, path: Optional[str] = None):
+    ctx = _make_ctx(cfg, quant, path)
 
     def prefill_step(params, batch, caches):
         """batch tokens (B, S) → (last-position logits (B,1,V), filled caches)."""
@@ -36,8 +66,9 @@ def make_prefill_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None):
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None):
-    ctx = QuantContext(quant or cfg.quant)
+def make_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
+                     *, path: Optional[str] = None):
+    ctx = _make_ctx(cfg, quant, path)
 
     def decode_step(params, tokens, caches, cur_len):
         """tokens (B,1) + caches + cur_len (scalar int32, post-append length)
@@ -71,12 +102,15 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int, max_len: int,
-                 quant: Optional[ql.QuantConfig] = None, eos_id: int = 0):
+                 quant: Optional[ql.QuantConfig] = None, eos_id: int = 0,
+                 path: Optional[str] = None, kv_cache: str = "fp"):
+        assert kv_cache in ("fp", "int8"), kv_cache
         self.cfg, self.params = cfg, params
         self.B, self.T = batch_size, max_len
         self.eos = eos_id
-        self.prefill = jax.jit(make_prefill_step(cfg, quant))
-        self.decode = jax.jit(make_decode_step(cfg, quant))
+        self.kv_int8 = kv_cache == "int8"
+        self.prefill = jax.jit(make_prefill_step(cfg, quant, path=path))
+        self.decode = jax.jit(make_decode_step(cfg, quant, path=path))
         self.queue: List[Request] = []
 
     def submit(self, prompts: List[np.ndarray], max_new: int = 16) -> List[Request]:
@@ -99,7 +133,8 @@ class ServeEngine:
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(group):
             toks[i] = r.prompt
-        caches = M.init_cache(self.cfg, B, self.T, dtype=jnp.float32)
+        caches = M.init_cache(self.cfg, B, self.T, dtype=jnp.float32,
+                              kv_int8=self.kv_int8)
         logits, caches = self.prefill(self.params, {"tokens": jnp.asarray(toks)}, caches)
         cur = plen
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)

@@ -1,0 +1,220 @@
+"""Fused int8 serving path (DESIGN.md §3.3).
+
+Parity chain pinned here, all in interpreter mode on CPU:
+
+  act_quantize kernel + qgemm kernel  ==  fake_crossquant + fp GEMM   (layer level)
+  fused-int8 model logits             ==  fake-quant twin logits      (model level)
+  ref / dequant-fp / pallas           ==  each other                  (exec modes)
+
+plus the int8 KV cache and the continuous batcher running end-to-end on the fused
+path. No hypothesis dependency: this module must run on minimal installs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import calibration, qlinear as ql
+from repro.core import quantizers as Q
+from repro.models import model as M
+from repro.models.layers import QuantContext
+from repro.models.quantize import dequantize_tree, quantize_tree
+from repro.serving import engine as E
+
+
+# ======================================================================================
+# Layer-level pipeline parity
+# ======================================================================================
+
+class TestPipelineParity:
+    def test_w8a8_pipeline_matches_fake_crossquant_fp_gemm(self):
+        """act_quantize -> qgemm_w8a8 (interpret mode) == fake_crossquant + fp GEMM
+        on the dequantized prepared weight: the two paths share one quantization
+        grid, so they agree to f32 ulp — far inside int8 tolerance."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        d_in, d_out, T = 256, 128, 64
+        w = jax.random.normal(k1, (d_in, d_out)) * 0.1
+        x = jax.random.normal(k2, (T, d_in)) * 2
+        cmax = jnp.max(jnp.abs(x), axis=0)
+        cfg = ql.W8A8_INT8
+        prep = ql.prepare_int8({"w": w}, cfg, cmax=cmax)
+        y_fused = ql.apply(prep, x, cfg, use_pallas=True)
+        w_fq = (prep["qw"].astype(jnp.float32) * prep["sw"]) / prep["bcol"][:, None]
+        y_fake = Q.fake_crossquant(x, 8, cfg.alpha, col_max=cmax) @ w_fq
+        np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_fake),
+                                   rtol=1e-4, atol=1e-2)
+
+    @pytest.mark.parametrize("shape", [(64, 256, 128), (1, 384, 256)])
+    def test_w8a8_exec_modes_agree(self, shape):
+        """ref (int32 einsum), dequant (fp GEMM) and pallas (fused kernels) are three
+        executions of the same function."""
+        T, d_in, d_out = shape
+        k1, k2 = jax.random.split(jax.random.PRNGKey(T))
+        prep = ql.prepare_int8({"w": jax.random.normal(k1, (d_in, d_out)) * 0.1},
+                               ql.W8A8_INT8)
+        x = jax.random.normal(k2, (T, d_in)) * 2
+        y_ref = ql.apply(prep, x, ql.W8A8_INT8)
+        y_dq = ql.apply(prep, x, ql.W8A8_INT8, int_exec="dequant")
+        y_pl = ql.apply(prep, x, ql.W8A8_INT8, int_exec="pallas")
+        np.testing.assert_allclose(np.asarray(y_dq), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_w4a8_exec_modes_agree(self):
+        cfg = dataclasses.replace(ql.W4A8_G128, mode="int8")
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        d_in, d_out, T = 256, 128, 48
+        prep = ql.prepare_int4({"w": jax.random.normal(k1, (d_in, d_out)) * 0.1}, cfg)
+        x = jax.random.normal(k2, (T, d_in))
+        y_ref = ql.apply(prep, x, cfg)
+        y_dq = ql.apply(prep, x, cfg, int_exec="dequant")
+        y_pl = ql.apply(prep, x, cfg, int_exec="pallas")
+        np.testing.assert_allclose(np.asarray(y_dq), np.asarray(y_ref),
+                                   rtol=2e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                                   rtol=2e-4, atol=1e-3)
+
+    def test_batched_activations_flatten_to_gemm(self):
+        """(B, S, d) activations route through the 2-D kernels via token flattening."""
+        prep = ql.prepare_int8(
+            {"w": jax.random.normal(jax.random.PRNGKey(0), (128, 64)) * 0.1},
+            ql.W8A8_INT8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 128))
+        y_ref = ql.apply(prep, x, ql.W8A8_INT8)
+        y_pl = ql.apply(prep, x, ql.W8A8_INT8, int_exec="pallas")
+        assert y_pl.shape == (2, 16, 64)
+        np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3)
+
+
+# ======================================================================================
+# Model-level parity (the acceptance gate: fused-int8 vs fake-quant, atol=1e-2)
+# ======================================================================================
+
+@pytest.fixture(scope="module")
+def calibrated():
+    """f32 smoke model + calibrated int8 tree + its fake-quant twin."""
+    cfg = dataclasses.replace(get("starcoder2-7b", smoke=True), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    obs = calibration.Observer()
+    M.apply(params, {"tokens": toks}, cfg,
+            ctx=QuantContext(ql.W8A8_CROSSQUANT, observer=obs),
+            mode="train", unroll=True)
+    tables = calibration.stack_tables(obs.tables())
+    qtree = quantize_tree(params, ql.W8A8_INT8, tables=tables)
+    fq_tree = dequantize_tree(qtree, ql.W8A8_INT8)
+    return cfg, toks, qtree, fq_tree
+
+
+class TestModelParity:
+    def test_fused_int8_logits_match_fake_quant(self, calibrated):
+        cfg, toks, qtree, fq_tree = calibrated
+        fake_cfg = dataclasses.replace(ql.W8A8_CROSSQUANT, static_c=True,
+                                       w_prequantized=True)
+        logits_fused, _ = M.apply(qtree, {"tokens": toks}, cfg,
+                                  ctx=QuantContext(ql.W8A8_INT8, use_pallas=True),
+                                  mode="train")
+        logits_fake, _ = M.apply(fq_tree, {"tokens": toks}, cfg,
+                                 ctx=QuantContext(fake_cfg), mode="train")
+        np.testing.assert_allclose(np.asarray(logits_fused), np.asarray(logits_fake),
+                                   atol=1e-2)
+
+    def test_serving_prefill_paths_agree(self, calibrated):
+        """make_prefill_step on {dequant-fp, fused-int8} matches the ref backend."""
+        cfg, toks, qtree, _ = calibrated
+        caches = M.init_cache(cfg, toks.shape[0], 48, dtype=jnp.float32)
+        ref_step = E.make_prefill_step(cfg, ql.W8A8_INT8)
+        logits_ref, _ = ref_step(qtree, {"tokens": toks}, caches)
+        for path in ("dequant-fp", "fused-int8"):
+            step = E.make_prefill_step(cfg, ql.W8A8_INT8, path=path)
+            logits, _ = step(qtree, {"tokens": toks}, caches)
+            np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_ref),
+                                       atol=1e-2, err_msg=path)
+
+
+# ======================================================================================
+# int8 KV cache
+# ======================================================================================
+
+class TestInt8KVCache:
+    def test_cache_layout(self):
+        cfg = get("starcoder2-7b", smoke=True)
+        caches = M.init_cache(cfg, 2, 32, kv_int8=True)
+        blk = caches["blocks"][0]
+        assert blk["k"].dtype == jnp.int8 and blk["v"].dtype == jnp.int8
+        assert blk["k_scale"].dtype == jnp.float32
+        assert blk["k_scale"].shape == blk["k"].shape[:-1] + (1,)
+
+    def test_decode_close_to_fp_cache(self):
+        """Prefill + a few decode steps with the int8 KV cache track the fp-cache
+        logits within int8 rounding of K/V."""
+        cfg = dataclasses.replace(get("starcoder2-7b", smoke=True), dtype="float32")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab)
+        prefill = E.make_prefill_step(cfg)
+        decode = E.make_decode_step(cfg)
+
+        outs = {}
+        for kv_int8 in (False, True):
+            caches = M.init_cache(cfg, 2, 24, dtype=jnp.float32, kv_int8=kv_int8)
+            logits, caches = prefill(params, {"tokens": toks}, caches)
+            steps = [logits]
+            cur = toks.shape[1]
+            for _ in range(3):
+                nxt = jnp.argmax(steps[-1][:, -1], axis=-1).astype(jnp.int32)
+                cur += 1
+                logits, caches = decode(params, nxt[:, None], caches,
+                                        jnp.asarray(cur, jnp.int32))
+                steps.append(logits)
+            outs[kv_int8] = jnp.concatenate(steps, axis=1)
+        err = float(jnp.max(jnp.abs(outs[True] - outs[False])))
+        scale = float(jnp.max(jnp.abs(outs[False]))) + 1e-9
+        assert err / scale < 0.05, (err, scale)
+
+
+# ======================================================================================
+# Continuous batcher on the fused path
+# ======================================================================================
+
+class TestServeEngineFused:
+    @pytest.fixture(scope="class")
+    def smoke(self):
+        cfg = get("starcoder2-7b", smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return cfg, params, quantize_tree(params, ql.W8A8_INT8)
+
+    def _prompts(self, cfg, n=2, seed=2):
+        rng = np.random.default_rng(seed)
+        return [rng.integers(1, cfg.vocab, size=6).astype(np.int32)
+                for _ in range(n)]
+
+    @pytest.mark.parametrize("path,kv", [("dequant-fp", "fp"),
+                                         ("fused-int8", "fp"),
+                                         ("fused-int8", "int8")])
+    def test_paths_serve_to_completion(self, smoke, path, kv):
+        cfg, _, qtree = smoke
+        eng = E.ServeEngine(cfg, qtree, batch_size=2, max_len=32,
+                            quant=ql.W8A8_INT8, eos_id=-1, path=path, kv_cache=kv)
+        eng.submit(self._prompts(cfg), max_new=3)
+        done = eng.run()
+        assert len(done) == 2 and all(len(r.out) == 3 for r in done)
+
+    def test_dequant_fp_first_token_matches_ref(self, smoke):
+        cfg, _, qtree = smoke
+        firsts = {}
+        for path in (None, "dequant-fp"):
+            eng = E.ServeEngine(cfg, qtree, batch_size=2, max_len=32,
+                                quant=ql.W8A8_INT8, eos_id=-1, path=path)
+            eng.submit(self._prompts(cfg), max_new=2)
+            firsts[path] = [r.out[0] for r in eng.run()]
+        assert firsts[None] == firsts["dequant-fp"]
+
+    def test_unknown_path_rejected(self, smoke):
+        cfg, params, _ = smoke
+        with pytest.raises(ValueError, match="serving path"):
+            E.ServeEngine(cfg, params, batch_size=1, max_len=16, path="int4-magic")
