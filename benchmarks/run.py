@@ -25,6 +25,7 @@ import time
 MODULES = [
     "table1_alpha", "table2_ppl", "table3_tasks", "fig4_kernels",
     "fig67_threshold", "fig8_alpha_sweep", "grad_compression", "qgemm_bench",
+    "serving_bench",
 ]
 
 

@@ -1,14 +1,22 @@
-"""Batched serving of a PTQ-quantized model.
+"""Continuous-batched serving of a PTQ-quantized model on a mixed-length workload.
 
 Calibrates CrossQuant's static column statistics on synthetic traffic, folds them
-into true-int8 weights (quantize_tree), and serves a batch of requests through the
-continuous-batching engine. ``--path`` selects the integer execution backend
-(DESIGN.md §3.3) and ``--kv-cache int8`` stores decode K/V as int8 codes +
-per-token scales; ``--compare`` serves the same workload through the fp baseline
-and the fused int8 path and reports both tokens/sec.
+into true-int8 weights (quantize_tree), and serves a *mixed-length* batch of
+requests (three prompt lengths, staggered ``max_new``) through the slot-table
+continuous batcher (DESIGN.md §3.6): prompts are admitted into free slots via
+length-bucketed padded prefill and retired slots refill mid-decode. ``--path``
+selects the integer execution backend (DESIGN.md §3.3) and ``--kv-cache int8``
+stores decode K/V as int8 codes + per-token scales; ``--compare`` serves the same
+workload through the fp baseline and the fused int8 path and reports both
+tokens/sec plus slot occupancy. ``--quant-kernel-stats`` replays the served
+traffic (prompt + generated tokens) through the model eagerly and reports the
+paper's per-layer quantization-kernel proportion (core/kernel_analysis.py) for
+per-token quantization vs CrossQuant — the §4.1 statistic, measured on what the
+engine actually served rather than a calibration set.
 
     PYTHONPATH=src:. python examples/serve_batch.py [--quant int8|fake|fp]
         [--path ref|dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
+        [--prompt-lens 6,10,14] [--eos-id N] [--quant-kernel-stats]
 """
 import argparse
 import time
@@ -18,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get
-from repro.core import calibration, qlinear as ql
+from repro.core import calibration, kernel_analysis as KA, qlinear as ql
 from repro.data import make_train_batches
 from repro.models import model as M
 from repro.models.layers import QuantContext
@@ -43,18 +51,71 @@ def calibrate_and_quantize(cfg, params, quant):
     return qparams
 
 
-def serve(cfg, params, prompts, *, quant, path=None, kv_cache="fp",
-          max_new=12, tag=""):
+def mixed_workload(cfg, n_requests, prompt_lens, seed=0):
+    """Mixed prompt lengths + staggered max_new: the continuous-batching case."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab,
+                            size=prompt_lens[i % len(prompt_lens)]).astype(np.int32)
+               for i in range(n_requests)]
+    max_new = [8 + 4 * (i % 3) for i in range(n_requests)]
+    return prompts, max_new
+
+
+def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
+          eos_id=None, tag=""):
     engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
-                         eos_id=-1, path=path, kv_cache=kv_cache)
-    engine.submit([p.copy() for p in prompts], max_new=max_new)
+                         eos_id=eos_id, path=path, kv_cache=kv_cache)
+    engine.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     total = sum(len(r.out) for r in done)
     print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache})")
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache}, "
+          f"occupancy={engine.occupancy():.2f}, "
+          f"refills_mid_decode={engine.stats['mid_decode_admissions']})")
     return done, total / dt
+
+
+class _KernelStatsObserver:
+    """Observer shim (calibration.Observer protocol): per-layer kernel fractions."""
+
+    def __init__(self, bits: int, alpha: float):
+        self.bits, self.alpha = bits, alpha
+        self.stats: dict = {}
+
+    def observe(self, name, x):
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        rec = self.stats.setdefault(name, {"pt": [], "cq": []})
+        rec["pt"].append(float(KA.per_token_kernel_fraction(x2, self.bits)))
+        rec["cq"].append(float(KA.crossquant_kernel_fraction(x2, self.bits,
+                                                             self.alpha)))
+
+
+def report_kernel_stats(cfg, params, quant, done):
+    """Replay the served traffic eagerly and print per-layer kernel proportions.
+
+    The replay runs each request's prompt + generated tokens through the model in
+    unroll mode (observers cannot run under scan) on the ref backend — the
+    activations feeding every quantized linear are exactly those of the served
+    sequences, so the reported proportions are traffic-faithful (paper §4.1).
+    """
+    bits = getattr(quant, "a_bits", 8) or 8
+    alpha = getattr(quant, "alpha", 0.15)
+    obs = _KernelStatsObserver(bits, alpha)
+    ctx = QuantContext(quant, observer=obs)
+    for r in done:
+        toks = np.concatenate([r.prompt, np.asarray(r.out, np.int32)])
+        M.apply(params, {"tokens": jnp.asarray(toks[None])}, cfg, ctx=ctx,
+                mode="train", unroll=True)
+    print(f"quantization-kernel proportion on served traffic "
+          f"(bits={bits}, alpha={alpha}):")
+    print(f"  {'layer':<28} {'per-token':>10} {'crossquant':>11} {'shrink':>7}")
+    for name, rec in sorted(obs.stats.items()):
+        pt = float(np.mean(rec["pt"]))
+        cq = float(np.mean(rec["cq"]))
+        shrink = (1 - cq / pt) if pt > 0 else 0.0
+        print(f"  {name:<28} {pt:>9.2%} {cq:>10.2%} {shrink:>6.1%}")
 
 
 def main() -> None:
@@ -68,36 +129,50 @@ def main() -> None:
                     help="also serve the fp baseline and report both tok/s")
     ap.add_argument("--arch", default="starcoder2-7b")
     ap.add_argument("--n-requests", type=int, default=6)
+    ap.add_argument("--prompt-lens", default="6,10,14", metavar="L1,L2,...",
+                    help="prompt lengths cycled over requests (mixed-length "
+                         "continuous batching)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="EOS token id; default: no EOS (token 0 is PAD — never "
+                         "an implicit terminator)")
+    ap.add_argument("--quant-kernel-stats", action="store_true",
+                    help="replay served traffic and report per-layer "
+                         "quantization-kernel proportion (paper §4.1)")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     quant = {"fp": ql.FP, "fake": ql.W8A8_CROSSQUANT, "int8": ql.W8A8_INT8}[args.quant]
 
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab, size=12).astype(np.int32)
-               for _ in range(args.n_requests)]
+    prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
+    prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens)
 
     if args.quant != "int8":
         # The int8 KV cache is independent of weight quantization and applies to
         # fp/fake serving too; only --path needs a prepared integer tree.
         if args.path != "fused-int8":
             print(f"note: --path {args.path} only applies to --quant int8; ignored")
-        done, _ = serve(cfg, params, prompts, quant=quant, kv_cache=args.kv_cache,
-                        tag=args.quant)
+        serve_params = params
+        done, _ = serve(cfg, params, prompts, max_new, quant=quant,
+                        kv_cache=args.kv_cache, eos_id=args.eos_id, tag=args.quant)
     else:
         qparams = calibrate_and_quantize(cfg, params, quant)
+        serve_params = qparams
         path = None if args.path == "ref" else args.path
-        done, int8_tps = serve(cfg, qparams, prompts, quant=quant, path=path,
-                               kv_cache=args.kv_cache)
+        done, int8_tps = serve(cfg, qparams, prompts, max_new, quant=quant,
+                               path=path, kv_cache=args.kv_cache,
+                               eos_id=args.eos_id)
         if args.compare:
-            _, fp_tps = serve(cfg, params, prompts, quant=ql.FP, tag="fp-baseline")
+            _, fp_tps = serve(cfg, params, prompts, max_new, quant=ql.FP,
+                              eos_id=args.eos_id, tag="fp-baseline")
             print(f"end-to-end tokens/sec: fp={fp_tps:.1f} "
                   f"{args.path}={int8_tps:.1f} ({int8_tps / fp_tps:.2f}x; "
                   "CPU-interpret numbers — the kernel-level TPU projection is in "
                   "benchmarks/qgemm_bench.py)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.prompt[:4].tolist()}... -> {r.out[:6]}")
+    if args.quant_kernel_stats:
+        report_kernel_stats(cfg, serve_params, quant, done)
 
 
 if __name__ == "__main__":

@@ -30,9 +30,18 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _fa_kernel(q_ref, k_ref, v_ref, *refs,
                n_k: int, bq: int, bk: int, scale: float, causal: bool,
-               window: Optional[int], softcap: Optional[float]):
+               window: Optional[int], softcap: Optional[float],
+               n_heads: Optional[int] = None):
+    """``n_heads`` is set iff a per-slot kv-length vector is present: ``refs`` then
+    leads with ``kvlen_ref``, a (B,) int32 SMEM input indexed by the batch element
+    ``program_id(0) // n_heads`` — keys at or beyond that slot's valid length are
+    masked (right-padded serving prefill, DESIGN.md §3.6)."""
+    if n_heads is not None:
+        kvlen_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -48,6 +57,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     live = True
     if causal:
         live = (ik * bk) <= (iq * bq + bq - 1)
+    if n_heads is not None:
+        kvl = kvlen_ref[pl.program_id(0) // n_heads]
+        # tiles entirely beyond this slot's valid kv length are dead as well
+        live = jnp.logical_and(live, ik * bk < kvl)
 
     @pl.when(live)
     def _tile():
@@ -62,6 +75,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             mask &= q_pos >= k_pos
         if window is not None:
             mask &= (q_pos - k_pos) < window
+        if n_heads is not None:
+            mask &= k_pos < kvl
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
@@ -81,7 +96,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention_pallas(
-    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    kv_len: Optional[jax.Array] = None, *,
     causal: bool = True, window: Optional[int] = None,
     softcap: Optional[float] = None, bq: int = 512, bk: int = 512,
     interpret: bool = False,
@@ -90,6 +106,10 @@ def flash_attention_pallas(
 
     Sq % bq == Skv % bk == 0 (ops.py pads). Positions are 0-based on both axes
     (prefill self-attention; for q_offset semantics pre-slice the kv).
+
+    ``kv_len`` (B,) int32 masks, per batch element, keys at positions ≥ kv_len[b]
+    — the per-slot valid prompt length of right-padded continuous-batching prefill
+    (DESIGN.md §3.6). It rides in SMEM so the mask is one scalar compare per tile.
     """
     B, H, Sq, D = q.shape
     _, Hkv, Sk, _ = k.shape
@@ -101,19 +121,26 @@ def flash_attention_pallas(
 
     kernel = functools.partial(
         _fa_kernel, n_k=n_k, bq=bq, bk=bk, scale=scale, causal=causal,
-        window=window, softcap=softcap)
+        window=window, softcap=softcap,
+        n_heads=H if kv_len is not None else None)
     q3 = q.reshape(B * H, Sq, D)
+    in_specs = [
+        pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        # kv head = (bh % H) // G: GQA indexing, no (B,H,Skv,D) broadcast
+        pl.BlockSpec((1, 1, bk, D),
+                     lambda bh, iq, ik: (bh // H, (bh % H) // G, ik, 0)),
+        pl.BlockSpec((1, 1, bk, D),
+                     lambda bh, iq, ik: (bh // H, (bh % H) // G, ik, 0)),
+    ]
+    args = [q3, k, v]
+    if kv_len is not None:
+        assert kv_len.shape == (B,), kv_len.shape
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.append(kv_len.astype(jnp.int32))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
-            # kv head = (bh % H) // G: GQA indexing, no (B,H,Skv,D) broadcast
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda bh, iq, ik: (bh // H, (bh % H) // G, ik, 0)),
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda bh, iq, ik: (bh // H, (bh % H) // G, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
         scratch_shapes=[
@@ -122,4 +149,4 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, D), jnp.float32),
         ],
         interpret=interpret,
-    )(q3, k, v).reshape(B, H, Sq, D)
+    )(*args).reshape(B, H, Sq, D)

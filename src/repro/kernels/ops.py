@@ -75,10 +75,14 @@ def qgemm_w4a8(qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "softcap", "bq", "bk"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len=None, *,
                     causal: bool = True, window=None, softcap=None,
                     bq: int = 512, bk: int = 512) -> jax.Array:
     """Fused flash attention. q (B,H,Sq,D); k/v (B,Hkv,Skv,D) → (B,H,Sq,D).
+
+    ``kv_len`` (scalar or (B,) int32) masks keys at positions ≥ kv_len[b] per batch
+    element — the per-slot valid length of right-padded continuous-batching prefill
+    (DESIGN.md §3.6).
 
     Pads Sq/Skv to block multiples; padded keys are masked by position (the kernel
     masks k_pos ≥ true Skv via the window/causal machinery — here by pre-masking:
@@ -91,14 +95,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kp = _pad_to(k, 2, bk)
     vp = _pad_to(v, 2, bk)
     pad_k = kp.shape[2] - Sk
-    if pad_k and not causal:
+    if pad_k and not causal and kv_len is None:
         # non-causal paths must not attend to padded keys: window trick can't help,
         # so mask by giving padded keys a -inf-producing value via a huge negative
         # bias channel is fragile — instead run causal=False only on block-aligned
-        # inputs (encoder S=4096 aligns; assert keeps this honest).
+        # inputs (encoder S=4096 aligns; assert keeps this honest). A kv_len bound
+        # subsumes this: it masks the block padding along with the slot padding.
         raise ValueError("non-causal flash_attention requires Skv % bk == 0")
-    out = _fa.flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
-                                     softcap=softcap, bq=bq, bk=bk,
+    if kv_len is not None:
+        kv_len = jnp.broadcast_to(
+            jnp.clip(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), 0, Sk), (B,))
+    out = _fa.flash_attention_pallas(qp, kp, vp, kv_len, causal=causal,
+                                     window=window, softcap=softcap, bq=bq, bk=bk,
                                      interpret=_interpret())
     return out[:, :, :Sq]
 

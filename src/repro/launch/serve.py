@@ -39,9 +39,19 @@ def main() -> None:
     ap.add_argument("--quant", default="fake", choices=QUANTS)
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-lens", default=None, metavar="L1,L2,...",
+                    help="mixed-length workload: cycle prompt lengths over requests "
+                         "(continuous batcher admits each into its length bucket)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="EOS token id; default: no EOS (token 0 is the PAD token, "
+                         "so it is never an implicit terminator)")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "grouped"],
+                    help="continuous = slot refill mid-decode (DESIGN.md §3.6); "
+                         "grouped = legacy equal-length groups, drained")
     ap.add_argument("--calib-batches", type=int, default=2,
                     help="calibration batches for the int8 static-c path")
     ap.add_argument("--path", default="ref",
@@ -76,17 +86,21 @@ def main() -> None:
     path = None if (args.quant != "int8" or args.path == "ref") else args.path
     engine = ServeEngine(cfg, params, batch_size=args.batch_size,
                          max_len=args.max_len, quant=quant, path=path,
-                         kv_cache=args.kv_cache)
+                         kv_cache=args.kv_cache, eos_id=args.eos_id,
+                         scheduler=args.scheduler)
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(1, cfg.vocab, size=args.prompt_len).astype(np.int32)
-               for _ in range(args.n_requests)]
+    lens = ([int(x) for x in args.prompt_lens.split(",")] if args.prompt_lens
+            else [args.prompt_len])
+    prompts = [rng.integers(1, cfg.vocab, size=lens[i % len(lens)]).astype(np.int32)
+               for i in range(args.n_requests)]
     reqs = engine.submit(prompts, max_new=args.max_new)
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s) quant={quant.tag()}")
+          f"({n_tok / dt:.1f} tok/s) quant={quant.tag()} "
+          f"scheduler={args.scheduler} occupancy={engine.occupancy():.2f}")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4].tolist()} -> out={r.out[:8]}")
 

@@ -161,8 +161,11 @@ def blockwise_attention(
             # the causal mask happens to exclude them for suffix queries, but
             # non-causal/windowless paths would include the zero-padding otherwise.
             valid = valid & (k_pos[None, :] < Sk)
+            valid = valid[None, None, None]                       # (1,1,1,Bq,Bk)
             if kv_valid_len is not None:
-                valid = valid & (k_pos[None, :] < kv_valid_len)
+                # scalar or per-slot (B,) valid kv length (right-padded prompts)
+                kvl = jnp.reshape(kv_valid_len, (-1, 1, 1, 1, 1))
+                valid = valid & (k_pos[None, None, None, None, :] < kvl)
             s = jnp.where(valid, s, -1e30)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -211,7 +214,8 @@ def decode_attention(
 ) -> jax.Array:
     """Single-token attention against a (B, T, Hkv, D) cache. The T axis may be
     sequence-sharded over the model mesh axis (flash-decoding via GSPMD partial
-    softmax — see sharding/planner).
+    softmax — see sharding/planner). ``cur_len`` is a scalar or per-slot (B,)
+    vector of valid cache lengths (DESIGN.md §3.6).
 
     With ``k_scale``/``v_scale`` the cache holds int8 codes and per-token f32 scales:
     the QK product runs on raw codes and the scale is applied to the *score column*
@@ -229,9 +233,10 @@ def decode_attention(
         s = s * _scale_to_scores(k_scale)
     s = _softcap(s, softcap)
     t_pos = jnp.arange(k_cache.shape[1])
-    valid = t_pos[None, None, None, :] < cur_len
+    cl = jnp.reshape(cur_len, (-1, 1, 1, 1))                 # (B|1, 1, 1, 1)
+    valid = t_pos[None, None, None, :] < cl
     if window is not None:
-        valid &= (cur_len - 1 - t_pos[None, None, None, :]) < window
+        valid &= (cl - 1 - t_pos[None, None, None, :]) < window
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
@@ -251,6 +256,12 @@ def attention_apply(
 
     cache: {"k": (B,T,Hkv,D), "v": ...} — prefill writes it, decode reads+appends.
     Returns (output, new_cache).
+
+    Per-slot length contract (DESIGN.md §3.6): ``cur_len`` may be a scalar (all
+    slots aligned) or a (B,) int32 vector. Prefill prompts are right-padded —
+    positions start at 0, ``cur_len`` holds the valid prompt length per slot and
+    masks padded keys; decode ``cur_len`` is the per-slot post-append length:
+    the new token scatters into cache position ``cur_len - 1`` of its own slot.
     """
     B, S, d = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -258,58 +269,64 @@ def attention_apply(
     k = ctx.linear(params["wk"], x, "wk").reshape(B, S, Hkv, D)
     v = ctx.linear(params["wv"], x, "wv").reshape(B, S, Hkv, D)
 
+    is_decode = cache is not None and S == 1
     if positions is None:
-        base = cur_len - S if cur_len is not None else 0
-        positions = base + jnp.arange(S)[None, :]
+        if is_decode and cur_len is not None:
+            positions = jnp.reshape(cur_len, (-1, 1)) - 1        # (B|1, 1)
+        else:
+            # train and (right-padded) prefill: absolute positions start at 0
+            positions = jnp.arange(S)[None, :]
     if cfg.use_rope:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
 
     window = cfg.window if local else None
     new_cache = None
-    if ctx.use_pallas and cache is None and S >= 128:
-        # Fused flash-attention kernel (kernels/flash_attention.py): removes the
-        # S²-score-tile HBM traffic that dominates training cells (§Roofline).
-        from repro.kernels import ops as kops
-        out = kops.flash_attention(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), causal=cfg.causal, window=window,
-            softcap=cfg.attn_softcap).transpose(0, 2, 1, 3)
-        y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
-        return y, None
     kv_int8 = cache is not None and "k_scale" in cache
-    if cache is not None and S == 1:
-        # decode: append then attend over the cache (cur_len is a batch-aligned scalar;
-        # the serving batcher aligns request positions — serving/engine.py)
-        idx = cur_len - 1
+    if is_decode:
+        # decode: scatter the new token at each slot's own append position, then
+        # attend over that slot's valid cache prefix.
+        cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))
+        idx = jnp.clip(cl - 1, 0, cache["k"].shape[1] - 1)       # (B,)
+        rows = jnp.arange(B)
         if kv_int8:
             kq, ks = kv_quantize(k)
             vq, vs = kv_quantize(v)
             new_cache = {
-                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, idx, axis=1),
-                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, idx, axis=1),
-                "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                    cache["k_scale"], ks, idx, axis=1),
-                "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                    cache["v_scale"], vs, idx, axis=1),
+                "k": cache["k"].at[rows, idx].set(kq[:, 0]),
+                "v": cache["v"].at[rows, idx].set(vq[:, 0]),
+                "k_scale": cache["k_scale"].at[rows, idx].set(ks[:, 0]),
+                "v_scale": cache["v_scale"].at[rows, idx].set(vs[:, 0]),
             }
             out = decode_attention(q, new_cache["k"], new_cache["v"],
-                                   cur_len=cur_len, window=window,
+                                   cur_len=cl, window=window,
                                    softcap=cfg.attn_softcap,
                                    k_scale=new_cache["k_scale"],
                                    v_scale=new_cache["v_scale"])
         else:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            k_cache = cache["k"].at[rows, idx].set(k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, idx].set(v[:, 0].astype(cache["v"].dtype))
             new_cache = {"k": k_cache, "v": v_cache}
-            out = decode_attention(q, k_cache, v_cache, cur_len=cur_len,
+            out = decode_attention(q, k_cache, v_cache, cur_len=cl,
                                    window=window, softcap=cfg.attn_softcap)
     else:
-        out = blockwise_attention(
-            q, k, v, causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
-            q_block=min(1024, max(S, 16)), kv_block=min(1024, max(S, 16)))
+        seq_lens = None
+        if cache is not None and cur_len is not None:
+            # right-padded prefill: keys beyond each slot's prompt length are pad
+            seq_lens = jnp.reshape(cur_len, (-1,))
+        if ctx.use_pallas and S >= 128:
+            # Fused flash-attention kernel (kernels/flash_attention.py): removes the
+            # S²-score-tile HBM traffic that dominates training cells (§Roofline).
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), kv_len=seq_lens, causal=cfg.causal,
+                window=window, softcap=cfg.attn_softcap).transpose(0, 2, 1, 3)
+        else:
+            out = blockwise_attention(
+                q, k, v, causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+                kv_valid_len=seq_lens,
+                q_block=min(1024, max(S, 16)), kv_block=min(1024, max(S, 16)))
         if cache is not None:
             # prefill: write kv into the cache prefix (in-flight attention above runs
             # on the unquantized k/v; only the *stored* cache is int8)

@@ -155,6 +155,11 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=jnp.bfloat
                *, kv_int8: bool = False) -> dict:
     """Pytree of per-layer caches, stacked (n_blocks, ...) to be scanned.
 
+    The batch axis is a *slot table* (DESIGN.md §3.6): each of the ``batch_size``
+    rows holds one in-flight sequence at its own length (``cur_len`` vector), so a
+    continuous batcher can retire and refill individual slots without touching the
+    others (serving/engine.py::_slot_scatter does the per-slot cache writes).
+
     ``kv_int8=True`` stores attention K/V as int8 codes plus per-token f32 scales
     (layers.kv_quantize) — ~2×/4× less decode HBM traffic vs bf16/f32 caches
     (DESIGN.md §3.3). SSM recurrence state always stays f32.
@@ -241,6 +246,12 @@ def apply(
     """Returns (logits, {"aux_loss": scalar, "caches": updated-or-None}).
 
     mode: train (no caches) | prefill (build caches) | decode (read+update caches).
+
+    ``cur_len`` may be a scalar (all slots aligned) or a per-slot (B,) int32 vector
+    (DESIGN.md §3.6). Prefill: tokens are right-padded, positions start at 0, and
+    ``cur_len`` holds per-slot prompt lengths — the returned logits are taken at
+    each slot's own last valid position. Decode: ``cur_len`` is the per-slot
+    post-append length; the token scatters into cache position ``cur_len - 1``.
     """
     ctx = ctx or QuantContext(cfg.quant)
     spec = block_spec(cfg)
@@ -322,7 +333,15 @@ def apply(
             caches["tail"] = new_tail
 
     if mode == "prefill":
-        logits = _lm_head(params, x[:, -1:], cfg, ctx)
+        if cur_len is None:
+            x = x[:, -1:]
+        else:
+            # per-slot last valid position (right-padded prompts, §3.6)
+            last = jnp.reshape(jnp.asarray(cur_len, jnp.int32), (-1,)) - 1
+            last = jnp.clip(last, 0, x.shape[1] - 1)
+            idx = jnp.broadcast_to(last[:, None, None], (x.shape[0], 1, x.shape[2]))
+            x = jnp.take_along_axis(x, idx, axis=1)
+        logits = _lm_head(params, x, cfg, ctx)
     else:
         logits = _lm_head(params, x, cfg, ctx)
     return logits, {"aux_loss": aux_total, "caches": caches if use_cache else None}

@@ -1,4 +1,4 @@
-"""Serving engine: prefill / decode step builders + a host-side continuous batcher.
+"""Serving engine: prefill / decode step builders + a slot-table continuous batcher.
 
 Step functions are pure and jit/pjit-ready: the dry-run lowers exactly these. The
 engine serves raw-fp params (fp or fake-quant CrossQuant activations — the
@@ -15,11 +15,20 @@ paper-faithful W8A8 evaluation path) or a prepared integer tree from
 
 ``kv_cache="int8"`` additionally stores decode K/V as int8 codes + per-token scales
 (models.layers.kv_quantize), cutting decode-step cache HBM traffic.
+
+Continuous batching (DESIGN.md §3.6): ``ServeEngine`` keeps a fixed slot table of
+``batch_size`` sequences with **per-slot lengths** — ``cur_len`` is a ``(B,)`` int32
+vector all the way down to the attention masks and cache scatter positions. New
+requests are admitted into free slots mid-decode via length-bucketed padded prefill
+(a small static set of prefill shapes bounds recompilation); finished requests retire
+and free their slot immediately. The decode step is a single jit'd function that
+folds greedy/temperature/top-k sampling in on-device, so the host loop only moves
+int32 token ids.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,18 +58,40 @@ def _make_ctx(cfg: ModelConfig, quant: Optional[ql.QuantConfig],
     return QuantContext(quant or cfg.quant, **SERVE_PATHS[path])
 
 
+def _make_sampler(temperature: float, top_k: int):
+    """On-device sampler: greedy at temperature 0, else temperature + top-k.
+
+    Padded vocab ids carry -1e9 logits (models.model._lm_head), so they are never
+    sampled on either branch."""
+
+    def sample(logits: jax.Array, key: jax.Array) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits / temperature
+        if top_k and top_k > 0:
+            kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+    return sample
+
+
 def make_prefill_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
                       *, path: Optional[str] = None):
     ctx = _make_ctx(cfg, quant, path)
 
     def prefill_step(params, batch, caches):
-        """batch tokens (B, S) → (last-position logits (B,1,V), filled caches)."""
+        """batch["tokens"] (B, S) right-padded prompts → (last-valid-position logits
+        (B, 1, V), filled caches). An optional batch["lens"] (B,) int32 gives per-slot
+        prompt lengths (absent → all slots are length S)."""
         S = (batch["frames"].shape[1] if "frames" in batch else batch["tokens"].shape[1])
         if cfg.is_encoder_only:
             logits, _ = M.apply(params, batch, cfg, ctx=ctx, mode="train")
             return logits[:, -1:], caches
+        lens = batch.get("lens")
+        cur = jnp.asarray(S, jnp.int32) if lens is None else lens
         logits, ex = M.apply(params, batch, cfg, ctx=ctx, mode="prefill",
-                             caches=caches, cur_len=jnp.asarray(S, jnp.int32))
+                             caches=caches, cur_len=cur)
         return logits, ex["caches"]
 
     return prefill_step
@@ -71,8 +102,8 @@ def make_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
     ctx = _make_ctx(cfg, quant, path)
 
     def decode_step(params, tokens, caches, cur_len):
-        """tokens (B,1) + caches + cur_len (scalar int32, post-append length)
-        → (logits (B,1,V), updated caches)."""
+        """tokens (B,1) + caches + cur_len (scalar int32 or (B,) vector of per-slot
+        post-append lengths) → (logits (B,1,V), updated caches)."""
         logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx, mode="decode",
                              caches=caches, cur_len=cur_len)
         return logits, ex["caches"]
@@ -81,7 +112,96 @@ def make_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
 
 
 # ======================================================================================
-# Host-side continuous batcher (end-to-end serving example / integration tests)
+# Slot-scatter cache ops (admission into a live batch)
+# ======================================================================================
+
+def _map_batch_axis(caches: dict, fn_stacked, fn_flat) -> dict:
+    """Apply per-leaf fns keyed by where the slot axis sits: scanned leaves
+    (``blocks``/``shared``) are stacked (n_blocks, B, ...) — batch axis 1; hybrid
+    ``tail`` leaves are unstacked (B, ...) — batch axis 0."""
+    out = dict(caches)
+    out["blocks"] = jax.tree_util.tree_map(fn_stacked, caches["blocks"])
+    if "tail" in caches:
+        out["tail"] = jax.tree_util.tree_map(fn_flat, caches["tail"])
+    if "shared" in caches:
+        out["shared"] = jax.tree_util.tree_map(fn_stacked, caches["shared"])
+    return out
+
+
+def _slot_scatter(live: dict, new: dict, slots: jax.Array) -> dict:
+    """Write the (Bp, ...)-batched ``new`` cache rows into the live slot table at
+    ``slots`` (Bp,) int32. Sentinel indices ≥ B (padding rows of the admission
+    batch) are dropped — the live state of every other slot is untouched."""
+    paired_stacked = jax.tree_util.tree_map(
+        lambda l, n: l.at[:, slots].set(n, mode="drop"), live["blocks"],
+        new["blocks"])
+    out = dict(live)
+    out["blocks"] = paired_stacked
+    if "tail" in live:
+        out["tail"] = jax.tree_util.tree_map(
+            lambda l, n: l.at[slots].set(n, mode="drop"), live["tail"], new["tail"])
+    if "shared" in live:
+        out["shared"] = jax.tree_util.tree_map(
+            lambda l, n: l.at[:, slots].set(n, mode="drop"), live["shared"],
+            new["shared"])
+    return out
+
+
+def make_admit_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None, *,
+                    path: Optional[str] = None, temperature: float = 0.0,
+                    top_k: int = 0):
+    """Padded prefill of newly admitted requests into a *live* slot table.
+
+    The returned function prefills a small (Bp, S_bucket) admission batch — Bp is
+    the power-of-two row bucket covering the number of admitted requests, so the
+    set of prefill lowerings is the static (row bucket × length bucket) grid —
+    against a *fresh zero cache* (stateful caches like the SSM recurrence can
+    never leak a retired request's state), then scatters the new cache rows into
+    the live slot table at the admitted slot indices. Mid-decode slots are never
+    touched: a single-slot refill costs a Bp=1 prefill, not a full-batch one.
+    """
+    ctx = _make_ctx(cfg, quant, path)
+    sample = _make_sampler(temperature, top_k)
+
+    def admit_step(params, tokens, lens, slots, caches, key):
+        """tokens (Bp, S) right-padded; lens (Bp,) int32 prompt lengths; slots
+        (Bp,) int32 target slot per row (≥ B ⇒ padding row, dropped); caches =
+        live slot caches. Returns (first sampled token (Bp,) int32, caches with
+        the admitted slots' rows replaced)."""
+        Bp = tokens.shape[0]
+        # fresh zero cache with the admission batch size; dtype/layout (incl. the
+        # int8 KV leaves) comes from the live cache leaves themselves
+        fresh = _map_batch_axis(
+            caches,
+            lambda x: jnp.zeros(x.shape[:1] + (Bp,) + x.shape[2:], x.dtype),
+            lambda x: jnp.zeros((Bp,) + x.shape[1:], x.dtype))
+        logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx,
+                             mode="prefill", caches=fresh, cur_len=lens)
+        merged = _slot_scatter(caches, ex["caches"], slots)
+        return sample(logits[:, -1], key), merged
+
+    return admit_step
+
+
+def make_serve_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
+                           *, path: Optional[str] = None, temperature: float = 0.0,
+                           top_k: int = 0):
+    """One fused decode step: model forward + on-device sampling → token ids only."""
+    ctx = _make_ctx(cfg, quant, path)
+    sample = _make_sampler(temperature, top_k)
+
+    def decode_step(params, tokens, caches, cur_len, key):
+        """tokens (B,) int32 pending inputs; cur_len (B,) int32 post-append lengths
+        → (next token (B,) int32, updated caches)."""
+        logits, ex = M.apply(params, {"tokens": tokens[:, None]}, cfg, ctx=ctx,
+                             mode="decode", caches=caches, cur_len=cur_len)
+        return sample(logits[:, -1], key), ex["caches"]
+
+    return decode_step
+
+
+# ======================================================================================
+# Host-side continuous batcher
 # ======================================================================================
 
 @dataclasses.dataclass
@@ -93,65 +213,188 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
-    """Batched greedy serving over a fixed-size slot table.
+def default_buckets(max_len: int, lo: int = 8) -> List[int]:
+    """Power-of-two padded-prefill lengths up to the cache size: [8, 16, ..., T]."""
+    out, b = [], lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return out
 
-    Requests with equal prompt lengths are prefetched together (the batcher groups by
-    length); decode advances all active slots in lock-step, retiring finished requests
-    and refilling slots — the standard continuous-batching loop, single-host edition.
+
+class ServeEngine:
+    """Continuous batcher over a fixed-size slot table (DESIGN.md §3.6).
+
+    Mixed-length prompts are admitted into free slots via length-bucketed padded
+    prefill; finished requests retire and their slot refills immediately without
+    draining the rest of the batch. Decode advances all slots in lock-step with a
+    per-slot ``cur_len`` vector; sampling (greedy by default, temperature/top-k
+    otherwise) happens on-device inside the jit'd step.
+
+    ``eos_id=None`` (default) disables EOS termination — token 0 is the pad token,
+    so an implicit ``eos=0`` would silently truncate on any pad-token sample; pass
+    the tokenizer's real EOS id explicitly.
+
+    ``scheduler="grouped"`` keeps the admission policy of the pre-§3.6 engine
+    (equal-exact-length groups, drained to completion) as the throughput baseline
+    for ``benchmarks/serving_bench.py``.
+
+    SSM / hybrid families use exact-length buckets: their recurrent state is built
+    by a scan over the whole prefill window, so right-padding would fold garbage
+    tokens into the state (attention caches mask padded positions instead).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int, max_len: int,
-                 quant: Optional[ql.QuantConfig] = None, eos_id: int = 0,
-                 path: Optional[str] = None, kv_cache: str = "fp"):
+                 quant: Optional[ql.QuantConfig] = None,
+                 eos_id: Optional[int] = None,
+                 path: Optional[str] = None, kv_cache: str = "fp",
+                 scheduler: str = "continuous",
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert kv_cache in ("fp", "int8"), kv_cache
+        assert scheduler in ("continuous", "grouped"), scheduler
         self.cfg, self.params = cfg, params
         self.B, self.T = batch_size, max_len
         self.eos = eos_id
         self.kv_int8 = kv_cache == "int8"
-        self.prefill = jax.jit(make_prefill_step(cfg, quant, path=path))
-        self.decode = jax.jit(make_decode_step(cfg, quant, path=path))
+        self.scheduler = scheduler
+        self.pad_prefill = cfg.family not in ("ssm", "hybrid")
+        self.buckets = sorted(b for b in (prefill_buckets or default_buckets(max_len))
+                              if b <= max_len)
+        self._admit_step = jax.jit(make_admit_step(
+            cfg, quant, path=path, temperature=temperature, top_k=top_k))
+        self._decode_step = jax.jit(make_serve_decode_step(
+            cfg, quant, path=path, temperature=temperature, top_k=top_k))
+        self.caches = M.init_cache(cfg, batch_size, max_len, dtype=jnp.float32,
+                                   kv_int8=self.kv_int8)
         self.queue: List[Request] = []
+        self._slots: List[Optional[Request]] = [None] * batch_size
+        self._pos = np.zeros(batch_size, np.int32)       # tokens in cache per slot
+        self._pending = np.zeros(batch_size, np.int32)   # next input token per slot
+        self._key = jax.random.PRNGKey(seed)
+        self._greedy = temperature <= 0.0
+        self._step = 0
+        self._next_rid = 0
+        self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "active_slot_steps": 0, "mid_decode_admissions": 0}
 
-    def submit(self, prompts: List[np.ndarray], max_new: int = 16) -> List[Request]:
-        reqs = [Request(i, np.asarray(p, np.int32), max_new)
-                for i, p in enumerate(prompts)]
+    # ---------------------------------------------------------------- submission
+
+    def submit(self, prompts: List[np.ndarray],
+               max_new: Union[int, Sequence[int]] = 16) -> List[Request]:
+        if isinstance(max_new, int):
+            max_new = [max_new] * len(prompts)
+        reqs = []
+        for p, mn in zip(prompts, max_new):
+            p = np.asarray(p, np.int32)
+            if not 0 < len(p) <= self.T:
+                raise ValueError(f"prompt length {len(p)} not in (0, {self.T}]")
+            reqs.append(Request(self._next_rid, p, mn))
+            self._next_rid += 1
         self.queue.extend(reqs)
         return reqs
 
-    def run(self) -> List[Request]:
-        done: List[Request] = []
-        while self.queue:
-            group_len = len(self.queue[0].prompt)
-            group = [r for r in self.queue if len(r.prompt) == group_len][: self.B]
-            self.queue = [r for r in self.queue if r not in group]
-            done.extend(self._serve_group(group, group_len))
-        return done
+    # ---------------------------------------------------------------- scheduling
 
-    def _serve_group(self, group: List[Request], plen: int) -> List[Request]:
-        B = self.B
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(group):
-            toks[i] = r.prompt
-        caches = M.init_cache(self.cfg, B, self.T, dtype=jnp.float32,
-                              kv_int8=self.kv_int8)
-        logits, caches = self.prefill(self.params, {"tokens": jnp.asarray(toks)}, caches)
-        cur = plen
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        max_new = max(r.max_new for r in group)
-        for step in range(max_new):
-            for i, r in enumerate(group):
-                if not r.done and step < r.max_new:
-                    t = int(next_tok[i])
-                    r.out.append(t)
-                    if t == self.eos:
-                        r.done = True
-            cur += 1
-            if cur >= self.T or all(r.done for r in group):
-                break
-            logits, caches = self.decode(self.params, next_tok[:, None], caches,
-                                         jnp.asarray(cur, jnp.int32))
-            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for r in group:
+    def _bucket(self, plen: int) -> int:
+        if not self.pad_prefill:
+            return plen
+        for b in self.buckets:
+            if b >= plen:
+                return b
+        return self.T
+
+    def occupancy(self) -> float:
+        steps = self.stats["decode_steps"]
+        return self.stats["active_slot_steps"] / (steps * self.B) if steps else 0.0
+
+    def _next_key(self) -> jax.Array:
+        if self._greedy:            # sampler ignores the key: skip the fold_in op
+            return self._key
+        key = jax.random.fold_in(self._key, self._step)
+        self._step += 1
+        return key
+
+    def _emit(self, slot: int, tok: int, finished: List[Request]) -> None:
+        """Record one sampled token for a slot; retire the request when done."""
+        r = self._slots[slot]
+        r.out.append(tok)
+        retire = (len(r.out) >= r.max_new
+                  or (self.eos is not None and tok == self.eos)
+                  or self._pos[slot] >= self.T)    # cache full: no room to append
+        if retire:
             r.done = True
-        return group
+            finished.append(r)
+            self._slots[slot] = None
+            self._pos[slot] = 0
+            self._pending[slot] = 0
+        else:
+            self._pending[slot] = tok
+
+    def _admit(self, finished: List[Request]) -> None:
+        while self.queue:
+            free = [i for i, s in enumerate(self._slots) if s is None]
+            if not free:
+                return
+            if self.scheduler == "grouped":
+                # Legacy batcher: whole-batch groups of one exact length, drained to
+                # completion before the next group starts.
+                if len(free) < self.B:
+                    return
+                bucket = len(self.queue[0].prompt)
+                fits = lambda r: len(r.prompt) == bucket
+            else:
+                bucket = self._bucket(len(self.queue[0].prompt))
+                fits = lambda r: self._bucket(len(r.prompt)) == bucket
+            batch, rest = [], []
+            for r in self.queue:
+                (batch if len(batch) < len(free) and fits(r) else rest).append(r)
+            self.queue = rest
+
+            # admission batch: rows padded to a power-of-two bucket so the set of
+            # prefill lowerings is the static (row bucket × length bucket) grid;
+            # sentinel slot index B marks padding rows (dropped by the scatter)
+            rows = 1 << (len(batch) - 1).bit_length() if len(batch) > 1 else 1
+            tokens = np.zeros((rows, bucket), np.int32)
+            lens = np.ones(rows, np.int32)
+            slot_ids = np.full(rows, self.B, np.int32)
+            mid_decode = any(s is not None for s in self._slots)
+            for j, (slot, r) in enumerate(zip(free, batch)):
+                tokens[j, : len(r.prompt)] = r.prompt
+                lens[j] = len(r.prompt)
+                slot_ids[j] = slot
+                self._slots[slot] = r
+            tok, self.caches = self._admit_step(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens),
+                jnp.asarray(slot_ids), self.caches, self._next_key())
+            tok = np.asarray(tok)
+            self.stats["prefill_calls"] += 1
+            if mid_decode:
+                self.stats["mid_decode_admissions"] += 1
+            for j, (slot, r) in enumerate(zip(free, batch)):
+                self._pos[slot] = len(r.prompt)
+                self._emit(slot, int(tok[j]), finished)
+            if self.scheduler == "grouped":
+                return
+
+    # ---------------------------------------------------------------- main loop
+
+    def run(self) -> List[Request]:
+        finished: List[Request] = []
+        while self.queue or any(s is not None for s in self._slots):
+            self._admit(finished)
+            active = [i for i, s in enumerate(self._slots) if s is not None]
+            if not active:
+                continue   # everything admitted retired at its first token
+            cur = jnp.asarray(self._pos + 1, jnp.int32)   # post-append lengths
+            tok, self.caches = self._decode_step(
+                self.params, jnp.asarray(self._pending), self.caches, cur,
+                self._next_key())
+            tok = np.asarray(tok)
+            self._pos[active] += 1
+            self.stats["decode_steps"] += 1
+            self.stats["active_slot_steps"] += len(active)
+            for i in active:
+                self._emit(i, int(tok[i]), finished)
+        return sorted(finished, key=lambda r: r.rid)

@@ -1,0 +1,273 @@
+"""Continuous batcher (DESIGN.md §3.6): scheduler parity, per-slot cur_len, and the
+per-slot length masking in the attention kernels.
+
+The central property: any mix of prompt lengths and ``max_new`` values served
+through the slot-table batcher yields, per request, exactly the tokens of a
+batch-size-1 greedy decode — on all three integer paths and both KV-cache modes.
+Token-exactness (not approximate) holds because right-padding only adds rows/keys
+whose contributions are exactly masked or exactly zero in the online softmax.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import qlinear as ql
+from repro.models import model as M
+from repro.models.layers import blockwise_attention
+from repro.models.quantize import quantize_tree
+from repro.serving import engine as E
+
+T = 32          # cache length for every engine in this module
+LENS = [4, 7, 12, 9, 5]
+MAX_NEW = [5, 3, 6, 2, 4]
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = dataclasses.replace(get("starcoder2-7b", smoke=True), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_tree(params, ql.W8A8_INT8)
+    return cfg, params, qparams
+
+
+def _mixed_prompts(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=l).astype(np.int32) for l in LENS]
+
+
+def _greedy_single(cfg, params, prompt, max_new, *, quant, path, kv):
+    """Batch-size-1 greedy decode through the raw step builders (exact-length
+    prefill, scalar cur_len — the pre-§3.6 seed-proven path)."""
+    prefill = jax.jit(E.make_prefill_step(cfg, quant, path=path))
+    decode = jax.jit(E.make_decode_step(cfg, quant, path=path))
+    caches = M.init_cache(cfg, 1, T, dtype=jnp.float32, kv_int8=(kv == "int8"))
+    logits, caches = prefill(params, {"tokens": jnp.asarray(prompt[None])}, caches)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    cur = len(prompt)
+    while len(out) < max_new and cur < T:
+        cur += 1
+        logits, caches = decode(params, jnp.asarray([[out[-1]]], jnp.int32),
+                                caches, jnp.asarray(cur, jnp.int32))
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+class TestSchedulerParity:
+    """Mixed lengths + staggered max_new through the continuous batcher ==
+    batch-size-1 greedy decode, token-exact, on every path × KV mode."""
+
+    @pytest.mark.parametrize("path,kv", [("fake", "fp"), ("fake", "int8"),
+                                         ("dequant-fp", "fp"),
+                                         ("dequant-fp", "int8"),
+                                         ("fused-int8", "fp"),
+                                         ("fused-int8", "int8")])
+    def test_mixed_workload_matches_bs1(self, small, path, kv):
+        cfg, params, qparams = small
+        if path == "fake":
+            serve_params, quant = params, ql.W8A8_CROSSQUANT
+        else:
+            serve_params, quant = qparams, ql.W8A8_INT8
+        prompts = _mixed_prompts(cfg)
+        eng = E.ServeEngine(cfg, serve_params, batch_size=2, max_len=T,
+                            quant=quant, path=path, kv_cache=kv)
+        eng.submit(prompts, max_new=MAX_NEW)
+        done = eng.run()
+        # batch_size=2 < 5 requests: slots must have been refilled mid-decode
+        assert eng.stats["mid_decode_admissions"] > 0
+        assert [r.rid for r in done] == list(range(len(prompts)))
+        for r in done:
+            want = _greedy_single(cfg, serve_params, r.prompt, r.max_new,
+                                  quant=quant, path=path, kv=kv)
+            assert r.out == want, (path, kv, r.rid, r.out, want)
+
+    def test_mid_decode_refill_order_independent(self, small):
+        """Same workload, different batch sizes → identical per-request tokens
+        (the slot table may schedule differently, the outputs must not)."""
+        cfg, params, _ = small
+        prompts = _mixed_prompts(cfg, seed=3)
+        outs = {}
+        for B in (1, 2, 4):
+            eng = E.ServeEngine(cfg, params, batch_size=B, max_len=T)
+            eng.submit(prompts, max_new=MAX_NEW)
+            outs[B] = {r.rid: r.out for r in eng.run()}
+        assert outs[1] == outs[2] == outs[4]
+
+
+class TestPerSlotCurLen:
+    def test_vector_cur_len_matches_scalar(self, small):
+        """Aligned slots: (B,) cur_len vector ≡ the legacy scalar contract."""
+        cfg, params, _ = small
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 1, cfg.vocab)
+        outs = {}
+        for tag, pre_len, dec_len in (
+                ("scalar", jnp.asarray(8, jnp.int32), jnp.asarray(9, jnp.int32)),
+                ("vector", jnp.full((2,), 8, jnp.int32), jnp.full((2,), 9, jnp.int32))):
+            caches = M.init_cache(cfg, 2, T, dtype=jnp.float32)
+            logits, ex = M.apply(params, {"tokens": toks}, cfg, mode="prefill",
+                                 caches=caches, cur_len=pre_len)
+            nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            logits_d, _ = M.apply(params, {"tokens": nxt}, cfg, mode="decode",
+                                  caches=ex["caches"], cur_len=dec_len)
+            outs[tag] = (np.asarray(logits), np.asarray(logits_d))
+        np.testing.assert_array_equal(outs["scalar"][0], outs["vector"][0])
+        np.testing.assert_array_equal(outs["scalar"][1], outs["vector"][1])
+
+    def test_padded_prefill_gathers_per_slot_logits(self, small):
+        """Right-padded mixed-length prefill returns each slot's own last-valid
+        logits — identical to exact-length batch-size-1 prefills."""
+        cfg, params, _ = small
+        rng = np.random.default_rng(7)
+        lens = [3, 8, 6]
+        prompts = [rng.integers(1, cfg.vocab, size=l).astype(np.int32) for l in lens]
+        S = max(lens)
+        toks = np.zeros((len(lens), S), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        caches = M.init_cache(cfg, len(lens), T, dtype=jnp.float32)
+        logits, _ = M.apply(params, {"tokens": jnp.asarray(toks)}, cfg,
+                            mode="prefill", caches=caches,
+                            cur_len=jnp.asarray(lens, jnp.int32))
+        for i, p in enumerate(prompts):
+            c1 = M.init_cache(cfg, 1, T, dtype=jnp.float32)
+            want, _ = M.apply(params, {"tokens": jnp.asarray(p[None])}, cfg,
+                              mode="prefill", caches=c1,
+                              cur_len=jnp.asarray(len(p), jnp.int32))
+            np.testing.assert_array_equal(np.asarray(logits[i]),
+                                          np.asarray(want[0]))
+
+    def test_staggered_decode_scatter(self, small):
+        """Slots at different lengths decode in one step: each token lands at its
+        own cache position and attends only its own valid prefix."""
+        cfg, params, _ = small
+        rng = np.random.default_rng(11)
+        lens = [4, 9]
+        prompts = [rng.integers(1, cfg.vocab, size=l).astype(np.int32) for l in lens]
+        toks = np.zeros((2, 9), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        caches = M.init_cache(cfg, 2, T, dtype=jnp.float32)
+        logits, ex = M.apply(params, {"tokens": jnp.asarray(toks)}, cfg,
+                             mode="prefill", caches=caches,
+                             cur_len=jnp.asarray(lens, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        cur = jnp.asarray([l + 1 for l in lens], jnp.int32)
+        logits_d, _ = M.apply(params, {"tokens": nxt}, cfg, mode="decode",
+                              caches=ex["caches"], cur_len=cur)
+        for i, p in enumerate(prompts):
+            c1 = M.init_cache(cfg, 1, T, dtype=jnp.float32)
+            lg, e1 = M.apply(params, {"tokens": jnp.asarray(p[None])}, cfg,
+                             mode="prefill", caches=c1,
+                             cur_len=jnp.asarray(len(p), jnp.int32))
+            n1 = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+            ld, _ = M.apply(params, {"tokens": n1}, cfg, mode="decode",
+                            caches=e1["caches"],
+                            cur_len=jnp.asarray(len(p) + 1, jnp.int32))
+            np.testing.assert_array_equal(np.asarray(logits_d[i]),
+                                          np.asarray(ld[0]))
+
+
+class TestFlashKvLenMasking:
+    def test_kernel_matches_oracle_per_slot(self):
+        """Pallas flash kernel with a per-slot kv_len vector == the jnp blockwise
+        oracle with the same kv_valid_len (right-padded prefill masking)."""
+        from repro.kernels import ops as kops
+        B, H, Hkv, S, D = 2, 4, 2, 128, 32
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(k1, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(k2, (B, S, Hkv, D), jnp.float32)
+        v = jax.random.normal(k3, (B, S, Hkv, D), jnp.float32)
+        kv_len = jnp.asarray([128, 70], jnp.int32)
+        got = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), kv_len=kv_len, causal=True,
+            bq=128, bk=128).transpose(0, 2, 1, 3)
+        want = blockwise_attention(q, k, v, causal=True, window=None, softcap=None,
+                                   kv_valid_len=kv_len, q_block=128, kv_block=128)
+        # only compare rows the serving engine keeps: queries inside the valid len
+        for b, L in enumerate([128, 70]):
+            np.testing.assert_allclose(np.asarray(got[b, :L]),
+                                       np.asarray(want[b, :L]),
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_scalar_kv_len_broadcasts(self):
+        from repro.kernels import ops as kops
+        B, H, S, D = 1, 2, 128, 32
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        q, k, v = (jax.random.normal(kk, (B, H, S, D), jnp.float32) for kk in ks)
+        full = kops.flash_attention(q, k, v, causal=True, bq=128, bk=128)
+        masked = kops.flash_attention(q, k, v, kv_len=jnp.asarray(S, jnp.int32),
+                                      causal=True, bq=128, bk=128)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(masked),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestSamplingAndEos:
+    def test_eos_default_is_none_not_pad(self, small):
+        """eos_id no longer defaults to the pad token: with no EOS every request
+        runs its full token budget even if token 0 is sampled."""
+        cfg, params, _ = small
+        eng = E.ServeEngine(cfg, params, batch_size=2, max_len=T)
+        assert eng.eos is None
+        eng.submit(_mixed_prompts(cfg), max_new=4)
+        assert all(len(r.out) == 4 for r in eng.run())
+
+    def test_eos_terminates(self, small):
+        cfg, params, _ = small
+        prompts = _mixed_prompts(cfg)
+        ref = E.ServeEngine(cfg, params, batch_size=2, max_len=T)
+        ref.submit(prompts, max_new=6)
+        ref_out = {r.rid: r.out for r in ref.run()}
+        eos = ref_out[0][2]        # a token request 0 is known to emit
+        eng = E.ServeEngine(cfg, params, batch_size=2, max_len=T, eos_id=eos)
+        eng.submit(prompts, max_new=6)
+        got = {r.rid: r.out for r in eng.run()}
+        # every request truncates at its first eos occurrence (inclusive)
+        for rid, toks in got.items():
+            want = ref_out[rid]
+            if eos in want:
+                assert toks == want[: want.index(eos) + 1]
+            else:
+                assert toks == want
+
+    def test_top_k_one_equals_greedy(self, small):
+        """temperature>0 with top_k=1 collapses to greedy on-device sampling."""
+        cfg, params, _ = small
+        prompts = _mixed_prompts(cfg)
+        greedy = E.ServeEngine(cfg, params, batch_size=2, max_len=T)
+        greedy.submit(prompts, max_new=4)
+        want = {r.rid: r.out for r in greedy.run()}
+        sampled = E.ServeEngine(cfg, params, batch_size=2, max_len=T,
+                                temperature=0.7, top_k=1, seed=123)
+        sampled.submit(prompts, max_new=4)
+        got = {r.rid: r.out for r in sampled.run()}
+        assert got == want
+
+    def test_temperature_sampling_stays_in_vocab(self, small):
+        cfg, params, _ = small
+        eng = E.ServeEngine(cfg, params, batch_size=2, max_len=T,
+                            temperature=1.5, top_k=8, seed=7)
+        eng.submit(_mixed_prompts(cfg), max_new=4)
+        for r in eng.run():
+            assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+class TestGroupedBaseline:
+    def test_grouped_scheduler_matches_continuous_tokens(self, small):
+        """The legacy grouped scheduler (benchmark baseline) serves the same
+        mixed workload to the same per-request tokens — only the schedule (and
+        the occupancy) differs."""
+        cfg, params, _ = small
+        prompts = _mixed_prompts(cfg, seed=5)
+        outs = {}
+        for scheduler in ("continuous", "grouped"):
+            eng = E.ServeEngine(cfg, params, batch_size=2, max_len=T,
+                                scheduler=scheduler)
+            eng.submit(prompts, max_new=MAX_NEW)
+            outs[scheduler] = {r.rid: r.out for r in eng.run()}
+            if scheduler == "grouped":
+                assert eng.stats["mid_decode_admissions"] == 0
+        assert outs["continuous"] == outs["grouped"]
