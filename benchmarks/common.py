@@ -15,9 +15,8 @@ The trained model is cached under results/bench_model/ so re-runs are fast.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

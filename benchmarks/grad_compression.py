@@ -10,9 +10,6 @@ kernel by an order of magnitude, making int8 DP all-reduce payloads nearly lossl
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks import common as C
 from repro.training import compression as comp_lib
 from repro.training import optimizer as opt_lib, trainer

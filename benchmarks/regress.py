@@ -1,0 +1,139 @@
+"""Bench regression gate: compare a fresh BENCH snapshot against baselines.
+
+CI runs this after the quick bench pass (``.github/workflows/ci.yml``): the fresh
+``results/BENCH_ci.json`` is compared against the committed
+``results/BENCH_run.json`` baseline and, when the artifact download succeeded,
+against the previous main-branch run's snapshot. The gate fails (exit 1) with a
+readable per-row diff when continuous-batching serving throughput (tok/s) or slot
+occupancy drops more than ``--max-drop`` (default 15%) versus a baseline.
+
+What gates, against what:
+
+* Only ``scheduler=continuous`` rows gate; grouped-baseline rows and ``@tpN``
+  sharded twins (emulated-collective-bound wall-clock) are informational.
+* ``--baseline`` gates tok/s *and* occupancy — use it for snapshots from the
+  same runner class (the previous main-branch CI artifact).
+* ``--occupancy-baseline`` gates occupancy only — use it for the committed
+  dev-machine snapshot: occupancy is a scheduling invariant and
+  machine-independent, but comparing a CI runner's wall-clock against a dev
+  box's is a systematic hardware diff no threshold absorbs (its tok/s rows are
+  still printed, informationally).
+
+    PYTHONPATH=src python -m benchmarks.regress results/BENCH_ci.json \
+        --occupancy-baseline results/BENCH_run.json \
+        [--baseline prev/BENCH_ci.json] [--max-drop 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def serving_rows(snapshot: dict) -> dict:
+    """``(path, scheduler) -> {"tok_s": float, "occupancy": float}`` from the
+    ``serving_bench`` CSV lines of a BENCH snapshot."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("serving_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 5 or parts[0] != "serving_bench" or parts[1] == "path":
+            continue
+        rows[(parts[1], parts[2])] = {
+            "tok_s": float(parts[3]),
+            "occupancy": float(parts[4]),
+        }
+    return rows
+
+
+def compare(
+    new: dict, base: dict, max_drop: float, tag: str, wall_clock: bool
+) -> tuple[list, list]:
+    """Readable diff lines + gating failures for one baseline.
+
+    ``wall_clock=False`` reports tok/s but never gates on it (cross-machine
+    baseline). ``@tpN`` rows never gate (sharded twins measure that the path
+    serves, not speed)."""
+    report, failures = [], []
+    for key in sorted(base):
+        path, scheduler = key
+        if key not in new:
+            report.append(f"  {path}/{scheduler}: missing from new snapshot (skip)")
+            continue
+        for metric in ("tok_s", "occupancy"):
+            b, n = base[key][metric], new[key][metric]
+            if b <= 0:
+                continue
+            drop = 1.0 - n / b
+            line = (
+                f"  {path}/{scheduler} {metric}: {b:.2f} -> {n:.2f} "
+                f"({-drop:+.1%} vs {tag})"
+            )
+            gate = (
+                scheduler == "continuous"
+                and "@" not in path
+                and (wall_clock or metric == "occupancy")
+                and drop > max_drop
+            )
+            if gate:
+                line += f"  REGRESSION (>{max_drop:.0%} drop)"
+                failures.append(line)
+            report.append(line)
+    return report, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh BENCH_*.json snapshot")
+    ap.add_argument(
+        "--baseline",
+        action="append",
+        default=[],
+        metavar="PATH",
+        help="same-runner-class baseline (gates tok/s + occupancy); repeatable",
+    )
+    ap.add_argument(
+        "--occupancy-baseline",
+        action="append",
+        default=[],
+        metavar="PATH",
+        help="cross-machine baseline (gates occupancy only); repeatable",
+    )
+    ap.add_argument("--max-drop", type=float, default=0.15)
+    args = ap.parse_args()
+    if not args.baseline and not args.occupancy_baseline:
+        ap.error("need at least one --baseline / --occupancy-baseline")
+
+    with open(args.new) as fh:
+        new = serving_rows(json.load(fh))
+    if not new:
+        print(f"no serving_bench rows in {args.new} — nothing to gate")
+        sys.exit(1)
+
+    all_failures = []
+    baselines = [(p, True) for p in args.baseline] + [
+        (p, False) for p in args.occupancy_baseline
+    ]
+    for path, wall_clock in baselines:
+        try:
+            with open(path) as fh:
+                base = serving_rows(json.load(fh))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"baseline {path}: unreadable ({e}) — skipped")
+            continue
+        scope = "tok/s + occupancy" if wall_clock else "occupancy only"
+        report, failures = compare(new, base, args.max_drop, path, wall_clock)
+        print(f"vs {path} (gating {scope}):")
+        print("\n".join(report) if report else "  (no comparable rows)")
+        all_failures += failures
+
+    if all_failures:
+        print(f"\nFAIL: {len(all_failures)} regression(s) beyond {args.max_drop:.0%}:")
+        print("\n".join(all_failures))
+        sys.exit(1)
+    print("\nbench regression gate: OK")
+
+
+if __name__ == "__main__":
+    main()

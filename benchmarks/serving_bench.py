@@ -15,8 +15,14 @@ the structural win is occupancy; the kernel-level TPU projection lives in
 ``qgemm_bench``. Paths: fp baseline and the fused int8 kernels (+ int8 KV cache
 in the full pass).
 
+On hosts exposing ≥ 2 devices (the CI ``sharded-serving`` job forces 8 via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) every variant also runs
+TP-sharded through a ``(n_dev/2, 2)`` host mesh (DESIGN.md §3.7), reported with
+an ``@tp2`` path suffix — wall-clock is dominated by host-mesh collective
+emulation, so these lines measure *that the sharded path serves*, not speedup.
+
 CSV (after the header row):
-``serving_bench,<path>,<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
+``serving_bench,<path>[@tpN],<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
 """
 from __future__ import annotations
 
@@ -42,14 +48,15 @@ def _workload(cfg, n_req: int, seed: int = 0):
     return prompts, max_new
 
 
-def _serve(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler):
+def _serve(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
+           mesh=None):
     from repro.serving.engine import ServeEngine
     eng = ServeEngine(cfg, params, batch_size=4, max_len=64, quant=quant,
-                      path=path, kv_cache=kv_cache, scheduler=scheduler)
+                      path=path, kv_cache=kv_cache, scheduler=scheduler, mesh=mesh)
     eng.submit([p.copy() for p in prompts], max_new=list(max_new))
     eng.run()                      # warm compile caches (fresh engine re-times)
     eng2 = ServeEngine(cfg, params, batch_size=4, max_len=64, quant=quant,
-                       path=path, kv_cache=kv_cache, scheduler=scheduler)
+                       path=path, kv_cache=kv_cache, scheduler=scheduler, mesh=mesh)
     eng2._admit_step = eng._admit_step
     eng2._decode_step = eng._decode_step
     eng2.submit([p.copy() for p in prompts], max_new=list(max_new))
@@ -77,12 +84,21 @@ def run(quick: bool = False):
         variants += [("fused-int8", qparams, ql.W8A8_INT8, "fused-int8", "fp"),
                      ("fused-int8+kv8", qparams, ql.W8A8_INT8, "fused-int8", "int8")]
 
+    # TP-sharded twins (DESIGN.md §3.7) whenever the host exposes enough devices
+    # (CI: XLA_FLAGS=--xla_force_host_platform_device_count=8 → tp=2 on (4, 2)).
+    meshes = [("", None)]
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_debug_mesh
+        tp = 2
+        meshes.append((f"@tp{tp}", make_debug_mesh(len(jax.devices()) // tp, tp)))
+
     lines = ["serving_bench,path,scheduler,tok_s,occupancy,refills_mid_decode"]
     for tag, p, quant, path, kv in variants:
-        for scheduler in ("grouped", "continuous"):
-            tok_s, occ, refills = _serve(cfg, p, prompts, max_new, quant=quant,
-                                         path=path, kv_cache=kv,
-                                         scheduler=scheduler)
-            lines.append(f"serving_bench,{tag},{scheduler},{tok_s:.1f},"
-                         f"{occ:.2f},{refills}")
+        for mesh_tag, mesh in meshes:
+            for scheduler in ("grouped", "continuous"):
+                tok_s, occ, refills = _serve(cfg, p, prompts, max_new, quant=quant,
+                                             path=path, kv_cache=kv,
+                                             scheduler=scheduler, mesh=mesh)
+                lines.append(f"serving_bench,{tag}{mesh_tag},{scheduler},"
+                             f"{tok_s:.1f},{occ:.2f},{refills}")
     return lines

@@ -16,15 +16,14 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get
 from repro.data import make_train_batches
 from repro.models import model as M
-from repro.runtime import FailureInjector, Supervisor
+from repro.runtime import Supervisor
 from repro.runtime.elastic import make_elastic_mesh
-from repro.sharding import hints, planner
+from repro.sharding import planner
 from repro.training import optimizer as opt_lib, trainer
 
 import dataclasses

@@ -14,9 +14,13 @@ paper's per-layer quantization-kernel proportion (core/kernel_analysis.py) for
 per-token quantization vs CrossQuant — the §4.1 statistic, measured on what the
 engine actually served rather than a calibration set.
 
+``--mesh data,model`` serves TP-sharded on a host mesh (DESIGN.md §3.7) — set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+
     PYTHONPATH=src:. python examples/serve_batch.py [--quant int8|fake|fp]
         [--path ref|dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
         [--prompt-lens 6,10,14] [--eos-id N] [--quant-kernel-stats]
+        [--mesh 4,2]
 """
 import argparse
 import time
@@ -62,18 +66,19 @@ def mixed_workload(cfg, n_requests, prompt_lens, seed=0):
 
 
 def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
-          eos_id=None, tag=""):
+          eos_id=None, tag="", mesh=None):
     engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
-                         eos_id=eos_id, path=path, kv_cache=kv_cache)
+                         eos_id=eos_id, path=path, kv_cache=kv_cache, mesh=mesh)
     engine.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     total = sum(len(r.out) for r in done)
+    shard = f", tp={engine.plan.tp} tier={engine.plan.tier}" if engine.plan else ""
     print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache}, "
           f"occupancy={engine.occupancy():.2f}, "
-          f"refills_mid_decode={engine.stats['mid_decode_admissions']})")
+          f"refills_mid_decode={engine.stats['mid_decode_admissions']}{shard})")
     return done, total / dt
 
 
@@ -138,11 +143,19 @@ def main() -> None:
     ap.add_argument("--quant-kernel-stats", action="store_true",
                     help="replay served traffic and report per-layer "
                          "quantization-kernel proportion (paper §4.1)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve TP-sharded on a (data, model) host mesh "
+                         "(DESIGN.md §3.7), e.g. --mesh 4,2; needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=data*model")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     quant = {"fp": ql.FP, "fake": ql.W8A8_CROSSQUANT, "int8": ql.W8A8_INT8}[args.quant]
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_arg
+        mesh = parse_mesh_arg(args.mesh)
 
     prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
     prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens)
@@ -154,17 +167,18 @@ def main() -> None:
             print(f"note: --path {args.path} only applies to --quant int8; ignored")
         serve_params = params
         done, _ = serve(cfg, params, prompts, max_new, quant=quant,
-                        kv_cache=args.kv_cache, eos_id=args.eos_id, tag=args.quant)
+                        kv_cache=args.kv_cache, eos_id=args.eos_id, tag=args.quant,
+                        mesh=mesh)
     else:
         qparams = calibrate_and_quantize(cfg, params, quant)
         serve_params = qparams
         path = None if args.path == "ref" else args.path
         done, int8_tps = serve(cfg, qparams, prompts, max_new, quant=quant,
                                path=path, kv_cache=args.kv_cache,
-                               eos_id=args.eos_id)
+                               eos_id=args.eos_id, mesh=mesh)
         if args.compare:
             _, fp_tps = serve(cfg, params, prompts, max_new, quant=ql.FP,
-                              eos_id=args.eos_id, tag="fp-baseline")
+                              eos_id=args.eos_id, tag="fp-baseline", mesh=mesh)
             print(f"end-to-end tokens/sec: fp={fp_tps:.1f} "
                   f"{args.path}={int8_tps:.1f} ({int8_tps / fp_tps:.2f}x; "
                   "CPU-interpret numbers — the kernel-level TPU projection is in "

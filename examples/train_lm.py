@@ -14,12 +14,11 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get
 from repro.core import qlinear as ql
-from repro.data import HostDataLoader, make_train_batches
+from repro.data import make_train_batches
 from repro.models import model as M
 from repro.models.layers import QuantContext
 from repro.runtime import FailureInjector, Supervisor

@@ -31,7 +31,7 @@ import os
 import shutil
 import threading
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np

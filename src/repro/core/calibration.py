@@ -97,7 +97,6 @@ def attach_calibration(params, tables: Dict[str, np.ndarray]):
     Params layout convention (see models/): every quantized linear owns a dict
     ``{"w": ...}`` reachable at path ``a/b/c``; the observer key is that joined path.
     """
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
     # Build a mutable nested copy.
     import copy
     out = copy.deepcopy(jax.tree_util.tree_map(lambda x: x, params))

@@ -18,7 +18,6 @@ exposed because Fig. 4 proportions are computed over all elements.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

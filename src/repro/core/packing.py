@@ -1,8 +1,13 @@
 """INT4 nibble packing: two signed 4-bit codes per int8 byte.
 
 Layout: element 2k goes to the low nibble, element 2k+1 to the high nibble, packed
-along the *last* axis (the axis contiguous in HBM), halving weight bytes for the
-W4A8-g128 and W4A4 configurations. The Pallas qgemm_w4 kernel unpacks in VMEM.
+along ``axis`` (default: the last axis, contiguous in HBM), halving weight bytes for
+the W4A8-g128 and W4A4 configurations. The Pallas qgemm_w4 kernel unpacks in VMEM.
+
+Sharding contract (DESIGN.md §3.7): a packed axis may be split over the model mesh
+axis only at byte granularity — the planner checks divisibility against the *packed*
+length (``d_in // 2`` for ``qw4``), so every shard holds whole bytes and unpacking
+is shard-local (no nibble ever straddles two devices).
 """
 from __future__ import annotations
 
@@ -10,17 +15,21 @@ import jax
 import jax.numpy as jnp
 
 
-def pack_int4(codes: jax.Array) -> jax.Array:
-    """Pack int8-held int4 codes (range [-8, 7]) pairwise along the last axis."""
+def pack_int4(codes: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack int8-held int4 codes (range [-8, 7]) pairwise along ``axis``."""
+    codes = jnp.moveaxis(codes, axis, -1)
     assert codes.shape[-1] % 2 == 0, "pack axis must be even"
     lo = codes[..., 0::2]
     hi = codes[..., 1::2]
-    return ((hi.astype(jnp.int8) << 4) | (lo.astype(jnp.int8) & 0x0F)).astype(jnp.int8)
+    packed = ((hi.astype(jnp.int8) << 4) | (lo.astype(jnp.int8) & 0x0F)).astype(jnp.int8)
+    return jnp.moveaxis(packed, -1, axis)
 
 
-def unpack_int4(packed: jax.Array) -> jax.Array:
+def unpack_int4(packed: jax.Array, axis: int = -1) -> jax.Array:
     """Inverse of :func:`pack_int4` (sign-extends both nibbles)."""
+    packed = jnp.moveaxis(packed, axis, -1)
     lo = (packed << 4).astype(jnp.int8) >> 4          # sign-extend low nibble
     hi = packed >> 4                                   # arithmetic shift: high nibble
     out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    out = out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    return jnp.moveaxis(out, -1, axis)

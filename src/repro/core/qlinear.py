@@ -178,9 +178,8 @@ def prepare_int4(params: dict, cfg: QuantConfig, cmax: Optional[jax.Array] = Non
     sw = jnp.maximum(jnp.abs(grouped).max(axis=-2, keepdims=True), Q.EPS) / Q.qmax(4)
     qw = jnp.clip(jnp.round(grouped / sw), -Q.qmax(4), Q.qmax(4)).astype(jnp.int8)
     qw = qw.reshape(*lead, d_in, d_out)
-    packed = packing.pack_int4(jnp.swapaxes(qw, -1, -2))        # pack along d_in
     return {
-        "qw4": jnp.swapaxes(packed, -1, -2),                    # (d_in//2, d_out) int8
+        "qw4": packing.pack_int4(qw, axis=-2),                  # (d_in//2, d_out) int8
         "sw": sw.squeeze(-2).astype(jnp.float32),               # (..., G, d_out)
         "bcol": b.astype(jnp.float32),
         "qalpha": jnp.full(w.shape[:-2], alpha_eff, jnp.float32),
@@ -248,8 +247,7 @@ def _int8_dequant_fp(qx, qw, a, sw):
 
 def unpack_int4_weight(qw4: jax.Array) -> jax.Array:
     """(..., d_in//2, d_out) packed nibbles → (..., d_in, d_out) int8 codes."""
-    qw = packing.unpack_int4(jnp.swapaxes(qw4, -1, -2))
-    return jnp.swapaxes(qw, -1, -2)
+    return packing.unpack_int4(qw4, axis=-2)
 
 
 def dequant_int4_weight(qw4: jax.Array, sw: jax.Array, group: int) -> jax.Array:
@@ -276,13 +274,25 @@ def _int8_matmul_ref(qx, qw, a, sw):
     """Reference int8 GEMM + separable dequant:  y = (qx·qw) * a_i * sw_k.
 
     Handles stacked experts: qx (E, C, d_in) · qw (E, d_in, d_out) batched over E,
-    with sw (E, d_out) broadcast over the capacity axis."""
+    with sw (E, d_out) broadcast over the capacity axis.
+
+    Under a TP-sharded serving plan the contraction dim of row-parallel layers
+    (wo/down/out_proj) is split over the model axis: the accumulator is pinned
+    while still int32 (hints.constrain_gemm_acc) so the cross-shard partial-sum
+    reduction happens on integer values *before* the f32 dequant multiply —
+    bitwise-identical to the single-device contraction (DESIGN.md §3.7)."""
+    # local import: repro.sharding pulls in configs, which imports this module
+    from repro.sharding import hints
     if qw.ndim == 3 and qx.ndim == 3:
         acc = jnp.einsum("eci,eio->eco", qx.astype(jnp.int32), qw.astype(jnp.int32))
+        # expert_tp shards the contraction dim of down-experts: same int32-before-
+        # dequant ordering requirement as the 2-D row-parallel case below
+        acc = hints.constrain_gemm_acc(acc, expert_leading=True)
         return acc.astype(jnp.float32) * a * sw[:, None, :]
     acc = jax.lax.dot_general(
         qx, qw, (((qx.ndim - 1,), (qw.ndim - 2,)), ((), ())),
         preferred_element_type=jnp.int32)
+    acc = hints.constrain_gemm_acc(acc)
     return acc.astype(jnp.float32) * a * sw
 
 
@@ -291,6 +301,7 @@ def _int4_matmul_ref(qx, qw4, a, sw, group: int):
 
     Stacked experts supported: qx (E, C, d_in), qw4 (E, d_in//2, d_out),
     sw (E, G, d_out)."""
+    from repro.sharding import hints
     qw = unpack_int4_weight(qw4)                                 # (..., d_in, d_out)
     d_in = qw.shape[-2]
     ngroups = d_in // group
@@ -300,11 +311,16 @@ def _int4_matmul_ref(qx, qw4, a, sw, group: int):
         qw_g = qw.reshape(E, ngroups, group, qw.shape[-1])
         acc = jnp.einsum("ecgk,egko->ecgo", qx_g.astype(jnp.int32),
                          qw_g.astype(jnp.int32))                 # (E, C, G, d_out)
+        acc = hints.constrain_gemm_acc(acc, expert_leading=True)
         y = (acc.astype(jnp.float32) * sw[:, None]).sum(axis=-2)
         return y * a
     qx_g = qx.reshape(*qx.shape[:-1], ngroups, group)
     qw_g = qw.reshape(ngroups, group, qw.shape[-1])
     acc = jnp.einsum("...gk,gko->...go", qx_g.astype(jnp.int32), qw_g.astype(jnp.int32))
+    # Row-parallel W4 under TP splits the *group* axis: gather the int32 per-group
+    # partials before the f32 group-dequant sum so the reduction order matches the
+    # single-device path exactly (constrain_gemm_acc replicates interior dims).
+    acc = hints.constrain_gemm_acc(acc)
     y = (acc.astype(jnp.float32) * sw).sum(axis=-2)              # group dequant + reduce
     return y * a
 

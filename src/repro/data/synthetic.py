@@ -17,7 +17,7 @@ perplexities):
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator
 
 import numpy as np
 

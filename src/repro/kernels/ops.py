@@ -3,7 +3,14 @@
 Handles (a) padding to block multiples (zero padding is exact for integer GEMMs and
 for row-absmax quantization), (b) backend dispatch: real Mosaic lowering on TPU,
 ``interpret=True`` everywhere else (CPU CI and the correctness tests), (c) block-size
-selection for small shapes.
+selection for small shapes, (d) the custom-kernel boundary under a TP-sharded
+serving plan (DESIGN.md §3.7): each wrapper body runs as a GSPMD-*manual* region
+(``hints.manual_kernel``) so every device computes the exact single-device kernel
+result on gathered operands — a no-op outside a hinted mesh.
+
+The hinted mesh is threaded into the jitted wrappers as a *static* argument: jit's
+trace cache does not key on contextvars, so reading the hint inside the traced body
+would silently reuse whichever of the manual/plain lowerings was traced first.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels import act_quantize as _aq
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qgemm as _qg
+from repro.sharding import hints
 
 
 def _interpret() -> bool:
@@ -37,44 +45,91 @@ def _pick_block(dim: int, preferred: int, align: int = 128) -> int:
     return min(preferred, ((dim + align - 1) // align) * align, preferred)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
-def qgemm_w8a8(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array,
-               *, bm: int = 256, bn: int = 256, bk: int = 512) -> jax.Array:
-    """int8 GEMM + separable dequant. qx (M,K) int8; qw (K,N) int8; a (M,1); sw (N,)."""
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mesh"))
+def _qgemm_w8a8(qx, qw, a, sw, *, bm, bn, bk, mesh):
     M, K = qx.shape
     N = qw.shape[1]
     bm = _pick_block(M, bm)
     bn = _pick_block(N, bn)
     bk = _pick_block(K, bk)
-    qxp = _pad_to(_pad_to(qx, 0, bm), 1, bk)
-    qwp = _pad_to(_pad_to(qw, 0, bk), 1, bn)
-    ap = _pad_to(a.astype(jnp.float32), 0, bm)
-    swp = _pad_to(sw.reshape(1, -1).astype(jnp.float32), 1, bn)
-    out = _qg.qgemm_w8a8_pallas(qxp, qwp, ap, swp, bm=bm, bn=bn, bk=bk,
-                                interpret=_interpret())
-    return out[:M, :N]
+
+    def body(qx, qw, a, sw):
+        qxp = _pad_to(_pad_to(qx, 0, bm), 1, bk)
+        qwp = _pad_to(_pad_to(qw, 0, bk), 1, bn)
+        ap = _pad_to(a.astype(jnp.float32), 0, bm)
+        swp = _pad_to(sw.reshape(1, -1).astype(jnp.float32), 1, bn)
+        out = _qg.qgemm_w8a8_pallas(qxp, qwp, ap, swp, bm=bm, bn=bn, bk=bk,
+                                    interpret=_interpret())
+        return out[:M, :N]
+
+    return hints.manual_kernel(body, (qx, qw, a, sw), mesh=mesh)
 
 
-@functools.partial(jax.jit, static_argnames=("group", "bm", "bn"))
-def qgemm_w4a8(qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array,
-               *, group: int = 128, bm: int = 256, bn: int = 256) -> jax.Array:
-    """W4A8 grouped GEMM. qx (M,K) int8; qw4 (K//2,N) packed; sw (K//group,N)."""
+def qgemm_w8a8(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array,
+               *, bm: int = 256, bn: int = 256, bk: int = 512) -> jax.Array:
+    """int8 GEMM + separable dequant. qx (M,K) int8; qw (K,N) int8; a (M,1); sw (N,)."""
+    return _qgemm_w8a8(qx, qw, a, sw, bm=bm, bn=bn, bk=bk,
+                       mesh=hints.current_mesh())
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bm", "bn", "mesh"))
+def _qgemm_w4a8(qx, qw4, a, sw, *, group, bm, bn, mesh):
     M, K = qx.shape
     N = qw4.shape[1]
     assert K % group == 0, f"K={K} must divide group={group} (pad offline)"
     bm = _pick_block(M, bm)
     bn = _pick_block(N, bn)
-    qxp = _pad_to(qx, 0, bm)
-    qw4p = _pad_to(qw4, 1, bn)
-    ap = _pad_to(a.astype(jnp.float32), 0, bm)
-    swp = _pad_to(sw.astype(jnp.float32), 1, bn)
-    out = _qg.qgemm_w4a8_pallas(qxp, qw4p, ap, swp, group=group, bm=bm, bn=bn,
-                                interpret=_interpret())
-    return out[:M, :N]
+
+    def body(qx, qw4, a, sw):
+        qxp = _pad_to(qx, 0, bm)
+        qw4p = _pad_to(qw4, 1, bn)
+        ap = _pad_to(a.astype(jnp.float32), 0, bm)
+        swp = _pad_to(sw.astype(jnp.float32), 1, bn)
+        out = _qg.qgemm_w4a8_pallas(qxp, qw4p, ap, swp, group=group, bm=bm, bn=bn,
+                                    interpret=_interpret())
+        return out[:M, :N]
+
+    return hints.manual_kernel(body, (qx, qw4, a, sw), mesh=mesh)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "window", "softcap", "bq", "bk"))
+def qgemm_w4a8(qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array,
+               *, group: int = 128, bm: int = 256, bn: int = 256) -> jax.Array:
+    """W4A8 grouped GEMM. qx (M,K) int8; qw4 (K//2,N) packed; sw (K//group,N)."""
+    return _qgemm_w4a8(qx, qw4, a, sw, group=group, bm=bm, bn=bn,
+                       mesh=hints.current_mesh())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "mesh"))
+def _flash_attention(q, k, v, kv_len, *, causal, window, softcap, bq, bk, mesh):
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq = min(bq, max(128, 1 << (Sq - 1).bit_length()))
+    bk = min(bk, max(128, 1 << (Sk - 1).bit_length()))
+    if ((-Sk) % bk) and not causal and kv_len is None:
+        # non-causal paths must not attend to padded keys: window trick can't help,
+        # so mask by giving padded keys a -inf-producing value via a huge negative
+        # bias channel is fragile — instead run causal=False only on block-aligned
+        # inputs (encoder S=4096 aligns; assert keeps this honest). A kv_len bound
+        # subsumes this: it masks the block padding along with the slot padding.
+        raise ValueError("non-causal flash_attention requires Skv % bk == 0")
+
+    def body(q, k, v, kv_len):
+        qp = _pad_to(q, 2, bq)
+        kp = _pad_to(k, 2, bk)
+        vp = _pad_to(v, 2, bk)
+        kvl = None
+        if kv_len is not None:
+            kvl = jnp.broadcast_to(
+                jnp.clip(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), 0, Sk), (B,))
+        out = _fa.flash_attention_pallas(qp, kp, vp, kvl, causal=causal,
+                                         window=window, softcap=softcap,
+                                         bq=bq, bk=bk, interpret=_interpret())
+        return out[:, :, :Sq]
+
+    return hints.manual_kernel(body, (q, k, v, kv_len), mesh=mesh)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len=None, *,
                     causal: bool = True, window=None, softcap=None,
                     bq: int = 512, bk: int = 512) -> jax.Array:
@@ -87,60 +142,47 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len=None, *,
     Pads Sq/Skv to block multiples; padded keys are masked by position (the kernel
     masks k_pos ≥ true Skv via the window/causal machinery — here by pre-masking:
     padded kv rows are zeroed AND excluded through an explicit Skv bound below)."""
-    B, H, Sq, D = q.shape
-    Sk = k.shape[2]
-    bq = min(bq, max(128, 1 << (Sq - 1).bit_length()))
-    bk = min(bk, max(128, 1 << (Sk - 1).bit_length()))
-    qp = _pad_to(q, 2, bq)
-    kp = _pad_to(k, 2, bk)
-    vp = _pad_to(v, 2, bk)
-    pad_k = kp.shape[2] - Sk
-    if pad_k and not causal and kv_len is None:
-        # non-causal paths must not attend to padded keys: window trick can't help,
-        # so mask by giving padded keys a -inf-producing value via a huge negative
-        # bias channel is fragile — instead run causal=False only on block-aligned
-        # inputs (encoder S=4096 aligns; assert keeps this honest). A kv_len bound
-        # subsumes this: it masks the block padding along with the slot padding.
-        raise ValueError("non-causal flash_attention requires Skv % bk == 0")
-    if kv_len is not None:
-        kv_len = jnp.broadcast_to(
-            jnp.clip(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), 0, Sk), (B,))
-    out = _fa.flash_attention_pallas(qp, kp, vp, kv_len, causal=causal,
-                                     window=window, softcap=softcap, bq=bq, bk=bk,
-                                     interpret=_interpret())
-    return out[:, :, :Sq]
+    return _flash_attention(q, k, v, kv_len, causal=causal, window=window,
+                            softcap=softcap, bq=bq, bk=bk,
+                            mesh=hints.current_mesh())
 
 
-def _act_quantize_padded(x, bcol, alpha, bits, bm, bk):
+@functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk", "mesh"))
+def _act_quantize_padded(x, bcol, dyn_alpha, *, bits, alpha, bm, bk, mesh):
     """Shared pad → kernel → slice for the static- and traced-alpha wrappers.
 
     Zero row padding is exact (padded rows produce a = eps^alpha scale, sliced
-    away); K padding pads bcol with 1 to avoid division by zero.
+    away); K padding pads bcol with 1 to avoid division by zero. Exactly one of
+    ``alpha`` (static float) and ``dyn_alpha`` (traced scalar) is set.
     """
     M, K = x.shape
     bm = _pick_block(M, bm)
     bk = _pick_block(K, bk)
-    xp = _pad_to(x, 0, bm)
-    xp = _pad_to(xp, 1, bk)
-    pad_k = xp.shape[1] - K
-    bcolp = jnp.concatenate([bcol.astype(jnp.float32),
-                             jnp.ones((pad_k,), jnp.float32)]) if pad_k else bcol
-    q, a = _aq.act_quantize_pallas(xp, bcolp, bits=bits, alpha=alpha, bm=bm, bk=bk,
-                                   interpret=_interpret())
-    return q[:M, :K], a[:M]
+
+    def body(x, bcol, dyn_alpha):
+        xp = _pad_to(x, 0, bm)
+        xp = _pad_to(xp, 1, bk)
+        pad_k = xp.shape[1] - K
+        bcolp = jnp.concatenate([bcol.astype(jnp.float32),
+                                 jnp.ones((pad_k,), jnp.float32)]) if pad_k else bcol
+        al = alpha if dyn_alpha is None else dyn_alpha
+        q, a = _aq.act_quantize_pallas(xp, bcolp, bits=bits, alpha=al, bm=bm, bk=bk,
+                                       interpret=_interpret())
+        return q[:M, :K], a[:M]
+
+    return hints.manual_kernel(body, (x, bcol, dyn_alpha), mesh=mesh)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk"))
 def act_quantize(x: jax.Array, bcol: jax.Array, *, bits: int = 8,
                  alpha: float = 0.15, bm: int = 256, bk: int = 512):
     """Fused CrossQuant activation quantization. x (M,K); bcol (K,) = c^(1-alpha).
 
     Returns (codes (M,K) int8, a (M,1) f32).
     """
-    return _act_quantize_padded(x, bcol, alpha, bits, bm, bk)
+    return _act_quantize_padded(x, bcol, None, bits=bits, alpha=alpha, bm=bm, bk=bk,
+                                mesh=hints.current_mesh())
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "bm", "bk"))
 def act_quantize_dyn(x: jax.Array, bcol: jax.Array, alpha: jax.Array, *,
                      bits: int = 8, bm: int = 256, bk: int = 512):
     """:func:`act_quantize` with a *traced* CrossQuant exponent.
@@ -150,4 +192,5 @@ def act_quantize_dyn(x: jax.Array, bcol: jax.Array, alpha: jax.Array, *,
     baked into the lowering (one compiled kernel for all layers, DESIGN.md §3.3).
     """
     return _act_quantize_padded(x, bcol, jnp.asarray(alpha, jnp.float32),
-                                bits, bm, bk)
+                                bits=bits, alpha=None, bm=bm, bk=bk,
+                                mesh=hints.current_mesh())

@@ -36,8 +36,7 @@ def qgemm_w4a8_ref(qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array,
     Per-group int32 partial sums dequantized by sw[g] then reduced over groups.
     """
     K = qx.shape[-1]
-    qw = packing.unpack_int4(jnp.swapaxes(qw4, -1, -2))
-    qw = jnp.swapaxes(qw, -1, -2)                       # (K, N) int8 in [-8, 7]
+    qw = packing.unpack_int4(qw4, axis=-2)              # (K, N) int8 in [-8, 7]
     ngroups = K // group
     qx_g = qx.reshape(*qx.shape[:-1], ngroups, group)
     qw_g = qw.reshape(ngroups, group, qw.shape[-1])

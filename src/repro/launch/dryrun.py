@@ -25,7 +25,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,6 @@ from repro.launch import hlo_analysis as H
 from repro.launch import hlo_static as HS
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
-from repro.models import model as M
 from repro.serving import engine
 from repro.sharding import hints, planner
 from repro.training import optimizer as opt_lib, trainer

@@ -44,7 +44,6 @@ def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     """Per collective kind: op count + summed operand bytes (per-device view)."""
     stats: Dict[str, Dict[str, float]] = {
         k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
-    seen_done = set()
     for m in _OP_RE.finditer(hlo_text):
         out_type, kind, operands = m.group(1), m.group(2), m.group(3)
         # async pairs appear as -start/-done; count the start only

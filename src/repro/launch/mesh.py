@@ -27,8 +27,30 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many devices exist (tests)."""
+    """Small (data, model) mesh for tests and host-mesh sharded serving (§3.7).
+
+    Raises — with the same ``--xla_force_host_platform_device_count`` hint as
+    :func:`make_production_mesh` — when the host is short of ``data*model``
+    devices, instead of dying in a cryptic reshape (or, for a short prefix that
+    happens to reshape, silently building a wrong-shaped mesh)."""
     import numpy as np
     n = data * model
-    devices = jax.devices()[:n]
-    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for a (data={data}, model={model}) debug mesh, have "
+            f"{len(devices)} — set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before any jax import (see launch/dryrun.py), or shrink the mesh")
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(data, model),
+                             ("data", "model"))
+
+
+def parse_mesh_arg(spec: str):
+    """``"data,model"`` CLI string (e.g. ``"4,2"``) → debug mesh. Shared by the
+    serving launchers' ``--mesh`` flags."""
+    try:
+        data, model = (int(x) for x in spec.split(","))
+    except ValueError:
+        raise SystemExit(
+            f"--mesh expects DATA,MODEL (e.g. --mesh 4,2), got {spec!r}")
+    return make_debug_mesh(data, model)

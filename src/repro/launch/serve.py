@@ -58,6 +58,12 @@ def main() -> None:
                     choices=["ref", "dequant-fp", "fused-int8"],
                     help="integer execution backend (int8 quant, DESIGN.md §3.3)")
     ap.add_argument("--kv-cache", default="fp", choices=["fp", "int8"])
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve TP-sharded on a (data, model) host mesh "
+                         "(DESIGN.md §3.7), e.g. --mesh 4,2. Needs data*model "
+                         "devices: set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launching (token-exact vs the "
+                         "default single-device path)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -83,17 +89,25 @@ def main() -> None:
         print(f"quantized weights: {base_bytes / 2**20:.1f} MiB -> "
               f"{q_bytes / 2**20:.1f} MiB ({base_bytes / q_bytes:.2f}x smaller)")
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_arg
+        mesh = parse_mesh_arg(args.mesh)
+
     path = None if (args.quant != "int8" or args.path == "ref") else args.path
     engine = ServeEngine(cfg, params, batch_size=args.batch_size,
                          max_len=args.max_len, quant=quant, path=path,
                          kv_cache=args.kv_cache, eos_id=args.eos_id,
-                         scheduler=args.scheduler)
+                         scheduler=args.scheduler, mesh=mesh)
+    if engine.plan is not None:
+        print(f"sharded serving: mesh={dict(mesh.shape)} "
+              f"plan={engine.plan.describe()}")
     rng = np.random.default_rng(args.seed)
     lens = ([int(x) for x in args.prompt_lens.split(",")] if args.prompt_lens
             else [args.prompt_len])
     prompts = [rng.integers(1, cfg.vocab, size=lens[i % len(lens)]).astype(np.int32)
                for i in range(args.n_requests)]
-    reqs = engine.submit(prompts, max_new=args.max_new)
+    engine.submit(prompts, max_new=args.max_new)
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0

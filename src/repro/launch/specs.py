@@ -4,7 +4,7 @@ weak-type-correct, shardable, zero device allocation. The dry-run lowers against
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,11 +18,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get
-from repro.data import HostDataLoader, make_train_batches
+from repro.data import make_train_batches
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import model as M
 from repro.runtime import FailureInjector, Supervisor

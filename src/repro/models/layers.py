@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import qlinear as ql
 from repro.configs.base import ModelConfig
+from repro.sharding import hints
 
 
 @dataclasses.dataclass
@@ -344,6 +345,12 @@ def attention_apply(
                     "k": jnp.pad(k.astype(cache["k"].dtype), pad),
                     "v": jnp.pad(v.astype(cache["v"].dtype), pad),
                 }
+    if new_cache is not None:
+        # Keep the slot table's (B→dp, T→model) placement on the freshly written
+        # cache leaves (codes AND int8-KV per-token scales): the decode-step scatter
+        # otherwise loses the spec and GSPMD reshards the whole cache every step
+        # (no-op outside a sharded serving plan — DESIGN.md §3.7).
+        new_cache = {kk: hints.constrain_kv_cache(vv) for kk, vv in new_cache.items()}
     y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
     return y, new_cache
 

@@ -229,6 +229,11 @@ def _lm_head(params, x, cfg: ModelConfig, ctx: QuantContext):
     else:
         logits = ctx.linear(params["lm_head"], x, "lm_head")
     logits = logits.astype(jnp.float32)
+    # vocab_padded divides every production TP degree by construction: pin the
+    # logits' padded-vocab dim to the model axis (and batch to dp) so the softcap /
+    # pad-mask / sampling ops below run sharded instead of replicating a (B, S, V)
+    # stack per device. No-op without sharding hints.
+    logits = hints.constrain_vocab(logits)
     if cfg.final_softcap is not None:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
     if cfg.vocab_padded != cfg.vocab:

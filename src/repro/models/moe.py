@@ -10,7 +10,7 @@ geometry per expert) — DESIGN.md §4.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.checkpoint import CheckpointManager

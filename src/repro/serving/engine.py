@@ -34,10 +34,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
 from repro.configs.base import ModelConfig
 from repro.core import qlinear as ql
 from repro.models import model as M
 from repro.models.layers import QuantContext
+from repro.sharding import hints, planner
 
 #: serving path → QuantContext wiring (DESIGN.md §3.3). ``None`` keeps the legacy
 #: behaviour: whatever the params tree + quant config imply, on the jnp ref backend.
@@ -201,6 +204,36 @@ def make_serve_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = N
 
 
 # ======================================================================================
+# Tensor-parallel sharded serving (DESIGN.md §3.7)
+# ======================================================================================
+
+def _hinted(fn, plan: "planner.Plan", mesh: Mesh):
+    """Wrap a step function so it traces under the plan's sharding hints: batch /
+    vocab / KV-cache constraints and the row-parallel int32-accumulator pin
+    (qlinear) all read these contextvars at trace time."""
+
+    def wrapped(*args):
+        with hints.sharding_hints(
+                dp_axes=plan.dp_axes, tp_axis=plan.tp_axis, mesh=mesh,
+                kv_seq_axis=plan.tp_axis if plan.seq_shard_kv else None):
+            return fn(*args)
+
+    return wrapped
+
+
+def shard_serving_state(params, caches, cfg: ModelConfig, plan: "planner.Plan",
+                        mesh: Mesh):
+    """Planner specs for a serving step's carried state: (param shardings, cache
+    shardings, replicated). Params cover raw-fp *and* prepared integer trees —
+    qw/qw4 split over the model axis with their sw/bcol scale leaves following the
+    same dim, qalpha replicated; caches cover fp and int8-with-per-token-scales KV
+    plus SSM state (planner.cache_shardings)."""
+    param_sh = planner.param_shardings(params, cfg, plan, mesh)
+    cache_sh = planner.cache_shardings(caches, cfg, plan, mesh)
+    return param_sh, cache_sh, NamedSharding(mesh, P())
+
+
+# ======================================================================================
 # Host-side continuous batcher
 # ======================================================================================
 
@@ -240,6 +273,12 @@ class ServeEngine:
     (equal-exact-length groups, drained to completion) as the throughput baseline
     for ``benchmarks/serving_bench.py``.
 
+    ``mesh=`` (+ optional ``plan=``, default ``planner.make_serve_plan``) serves
+    TP-sharded (DESIGN.md §3.7): params/caches are placed per the plan's
+    ``NamedSharding`` pytrees and both steps are jit'd with matching in/out
+    shardings. Token-exact vs single-device serving on every path × KV mode
+    (tests/test_sharded_serving.py).
+
     SSM / hybrid families use exact-length buckets: their recurrent state is built
     by a scan over the whole prefill window, so right-padding would fold garbage
     tokens into the state (attention caches mask padded positions instead).
@@ -251,6 +290,8 @@ class ServeEngine:
                  path: Optional[str] = None, kv_cache: str = "fp",
                  scheduler: str = "continuous",
                  prefill_buckets: Optional[Sequence[int]] = None,
+                 mesh: Optional[Mesh] = None,
+                 plan: Optional["planner.Plan"] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert kv_cache in ("fp", "int8"), kv_cache
         assert scheduler in ("continuous", "grouped"), scheduler
@@ -262,12 +303,37 @@ class ServeEngine:
         self.pad_prefill = cfg.family not in ("ssm", "hybrid")
         self.buckets = sorted(b for b in (prefill_buckets or default_buckets(max_len))
                               if b <= max_len)
-        self._admit_step = jax.jit(make_admit_step(
-            cfg, quant, path=path, temperature=temperature, top_k=top_k))
-        self._decode_step = jax.jit(make_serve_decode_step(
-            cfg, quant, path=path, temperature=temperature, top_k=top_k))
+        admit = make_admit_step(cfg, quant, path=path, temperature=temperature,
+                                top_k=top_k)
+        decode = make_serve_decode_step(cfg, quant, path=path,
+                                        temperature=temperature, top_k=top_k)
         self.caches = M.init_cache(cfg, batch_size, max_len, dtype=jnp.float32,
                                    kv_int8=self.kv_int8)
+        self.mesh = mesh
+        self.plan = None
+        if mesh is None:
+            self._admit_step = jax.jit(admit)
+            self._decode_step = jax.jit(decode)
+        else:
+            # TP-sharded serving (DESIGN.md §3.7): place the prepared integer tree
+            # (weights + scale leaves), the slot-table caches (incl. int8-KV
+            # per-token scales) and jit the steps with NamedSharding-constrained
+            # in/out shardings so GSPMD partitions prefill/decode. Host tokens,
+            # lens, slots, cur_len and the PRNG key stay replicated. Cache in/out
+            # shardings match, so the carried slot table never reshard-pingpongs.
+            self.plan = plan or planner.make_serve_plan(cfg, mesh)
+            param_sh, cache_sh, repl = shard_serving_state(
+                params, self.caches, cfg, self.plan, mesh)
+            self.params = jax.device_put(params, param_sh)
+            self.caches = jax.device_put(self.caches, cache_sh)
+            self._admit_step = jax.jit(
+                _hinted(admit, self.plan, mesh),
+                in_shardings=(param_sh, repl, repl, repl, cache_sh, repl),
+                out_shardings=(repl, cache_sh))
+            self._decode_step = jax.jit(
+                _hinted(decode, self.plan, mesh),
+                in_shardings=(param_sh, repl, cache_sh, repl, repl),
+                out_shardings=(repl, cache_sh))
         self.queue: List[Request] = []
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._pos = np.zeros(batch_size, np.int32)       # tokens in cache per slot

@@ -28,18 +28,24 @@ _TP_AXIS: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
     "tp_axis", default=None)
 _AXIS_SIZES: contextvars.ContextVar[Dict[str, int]] = contextvars.ContextVar(
     "axis_sizes", default={})
+_MESH: contextvars.ContextVar = contextvars.ContextVar("hint_mesh", default=None)
+_KV_SEQ_AXIS: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "kv_seq_axis", default=None)
 
 
 @contextlib.contextmanager
 def sharding_hints(ep_axis: Optional[str] = None,
                    dp_axes: Optional[Tuple[str, ...]] = None,
                    tp_axis: Optional[str] = None,
-                   mesh=None):
+                   mesh=None,
+                   kv_seq_axis: Optional[str] = None):
     sizes = dict(mesh.shape) if mesh is not None else {}
     t1 = _EP_AXIS.set(ep_axis)
     t2 = _DP_AXES.set(dp_axes)
     t3 = _TP_AXIS.set(tp_axis)
     t4 = _AXIS_SIZES.set(sizes)
+    t5 = _MESH.set(mesh)
+    t6 = _KV_SEQ_AXIS.set(kv_seq_axis)
     try:
         yield
     finally:
@@ -47,6 +53,20 @@ def sharding_hints(ep_axis: Optional[str] = None,
         _DP_AXES.reset(t2)
         _TP_AXIS.reset(t3)
         _AXIS_SIZES.reset(t4)
+        _MESH.reset(t5)
+        _KV_SEQ_AXIS.reset(t6)
+
+
+def _constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that does not require an ambient mesh context:
+    when the hints carry a concrete mesh (serving engine, launchers), the spec is
+    bound to it as a NamedSharding; otherwise the plain-spec form is used (the
+    dry-run already traces under ``with mesh:``)."""
+    mesh = _MESH.get()
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
 
 
 def _axis_size(axes) -> int:
@@ -77,7 +97,7 @@ def constrain_experts(x: jax.Array) -> jax.Array:
         spec[1] = dp
     if all(s is None for s in spec):
         return x
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return _constrain(x, P(*spec))
 
 
 def constrain_batch(x: jax.Array) -> jax.Array:
@@ -92,7 +112,7 @@ def constrain_batch(x: jax.Array) -> jax.Array:
         return x
     if x.ndim == 0 or x.shape[0] % _axis_size(axes) != 0:
         return x
-    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))
+    return _constrain(x, P(axes, *([None] * (x.ndim - 1))))
 
 
 def constrain_tokens(x: jax.Array) -> jax.Array:
@@ -102,7 +122,7 @@ def constrain_tokens(x: jax.Array) -> jax.Array:
         return x
     if x.shape[0] % _axis_size(axes) != 0:
         return x
-    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))
+    return _constrain(x, P(axes, *([None] * (x.ndim - 1))))
 
 
 def token_group_count(n_tokens: int) -> int:
@@ -129,7 +149,7 @@ def constrain_token_groups(x: jax.Array) -> jax.Array:
         return x
     if x.shape[0] % _axis_size(axes) != 0:
         return x
-    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))
+    return _constrain(x, P(axes, *([None] * (x.ndim - 1))))
 
 
 def constrain_grouped_experts(x: jax.Array) -> jax.Array:
@@ -143,7 +163,7 @@ def constrain_grouped_experts(x: jax.Array) -> jax.Array:
         spec[1] = ep
     if all(s is None for s in spec):
         return x
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return _constrain(x, P(*spec))
 
 
 def constrain_microbatches(x: jax.Array) -> jax.Array:
@@ -154,4 +174,111 @@ def constrain_microbatches(x: jax.Array) -> jax.Array:
         return x
     if x.ndim < 2 or x.shape[1] % _axis_size(axes) != 0:
         return x
-    return jax.lax.with_sharding_constraint(x, P(None, axes, *([None] * (x.ndim - 2))))
+    return _constrain(x, P(None, axes, *([None] * (x.ndim - 2))))
+
+
+def constrain_gemm_acc(acc: jax.Array, expert_leading: bool = False) -> jax.Array:
+    """int32 GEMM accumulator of a quantized linear (DESIGN.md §3.7) — pin to the
+    natural output layout (batch → dp, d_out → model, everything else replicated)
+    *while still int32*.
+
+    For a row-parallel weight (contraction dim sharded over the model axis) this
+    forces the cross-shard partial-sum reduction to happen on the integer
+    accumulator BEFORE the f32 dequant multiply. Without the pin the partitioner
+    is free to sink the all-reduce past the elementwise dequant, summing partially
+    dequantized f32 shards — numerically close, but no longer the bitwise-exact
+    integer contraction the single-device path computes, and exactly the
+    per-channel/per-token scale-handling trap ZeroQuant-V2 documents for
+    quantized-TP serving.
+
+    ``expert_leading=True`` marks stacked-expert accumulators ((E, C, d_out) or
+    (E, C, G, d_out)): dim 0 is the expert axis (pinned to the EP axis when
+    hinted and divisible — the expert_tp case leaves it replicated) and dim 1 the
+    capacity axis (→ dp), mirroring constrain_experts."""
+    tp = _TP_AXIS.get()
+    dp = _DP_AXES.get()
+    if tp is None and dp is None:
+        return acc
+    spec = [None] * acc.ndim
+    if expert_leading:
+        ep = _EP_AXIS.get()
+        if ep is not None and acc.shape[0] % _axis_size(ep) == 0:
+            spec[0] = ep
+        if dp is not None and acc.ndim >= 3 and acc.shape[1] % _axis_size(dp) == 0:
+            spec[1] = dp
+    elif dp is not None and acc.ndim >= 2 and acc.shape[0] % _axis_size(dp) == 0:
+        spec[0] = dp
+    used = {a for s in spec if s is not None
+            for a in ((s,) if isinstance(s, str) else s)}
+    if tp is not None and tp not in used and acc.shape[-1] % _axis_size(tp) == 0:
+        spec[-1] = tp
+    return _constrain(acc, P(*spec))
+
+
+def constrain_kv_cache(x: jax.Array) -> jax.Array:
+    """(B, T, Hkv, D|1) attention-cache leaf (codes or int8-KV per-token scales) —
+    pin B to the data axes and, when the plan sequence-shards decode caches, T to
+    the model axis. Applied to freshly written cache leaves so the per-step scatter
+    output keeps the slot table's placement instead of GSPMD resharding the whole
+    cache every decode step."""
+    dp = _DP_AXES.get()
+    kv_seq = _KV_SEQ_AXIS.get()
+    if (dp is None and kv_seq is None) or x.ndim < 2:
+        return x
+    spec = [None] * x.ndim
+    if dp is not None and x.shape[0] % _axis_size(dp) == 0:
+        spec[0] = dp
+    if kv_seq is not None and x.shape[1] % _axis_size(kv_seq) == 0:
+        spec[1] = kv_seq
+    if all(s is None for s in spec):
+        return x
+    return _constrain(x, P(*spec))
+
+
+def constrain_vocab(logits: jax.Array) -> jax.Array:
+    """(B, S, V_padded) logits — batch to dp, padded vocab to the model axis (the
+    whole point of vocab_padded: logits shard over model instead of replicating)."""
+    tp = _TP_AXIS.get()
+    dp = _DP_AXES.get()
+    if tp is None and dp is None:
+        return logits
+    spec = [None] * logits.ndim
+    if dp is not None and logits.shape[0] % _axis_size(dp) == 0:
+        spec[0] = dp
+    if tp is not None and logits.shape[-1] % _axis_size(tp) == 0:
+        spec[-1] = tp
+    if all(s is None for s in spec):
+        return logits
+    return _constrain(logits, P(*spec))
+
+
+def current_mesh():
+    """The hinted concrete mesh, or None. Kernel wrappers thread this into their
+    jitted bodies as a *static* argument: jit's trace cache does not key on
+    contextvars, so reading the hint inside a traced body would silently reuse
+    whichever lowering (manual-region or plain) happened to be traced first."""
+    return _MESH.get()
+
+
+def manual_kernel(fn, args: tuple, mesh=None):
+    """Run a Pallas kernel wrapper body as a GSPMD-*manual* region (DESIGN.md
+    §3.7): ``shard_map`` over ``mesh`` with fully replicated in/out specs, so
+    every device computes the exact single-device result on gathered operands.
+
+    Why not sharding constraints: off-TPU the kernels run in interpret mode — the
+    "kernel" is ordinary HLO emulating the grid (fori over blocks + dynamic
+    slices), and this XLA version miscompiles parts of that emulation once
+    operand shardings propagate into it (observed: concatenating a model-sharded
+    ``bcol`` with its block padding multiplies the values by the data-axis size —
+    a partitioner bug, reproduced standalone). A manual region takes the
+    partitioner out of the loop entirely. Weights stay *stored* sharded — the
+    per-device HBM win — and are gathered at this boundary; partitioning the
+    kernel grid itself over the mesh (Mosaic) is future work. No-op when ``mesh``
+    is None."""
+    if mesh is None:
+        return fn(*args)
+    from jax.experimental.shard_map import shard_map
+
+    replicated = jax.tree_util.tree_map(lambda _: P(), args)
+    return shard_map(fn, mesh=mesh, in_specs=replicated, out_specs=P(),
+                     check_rep=False)(*args)

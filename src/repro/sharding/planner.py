@@ -20,8 +20,7 @@ all-gather per scanned layer).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
@@ -49,6 +48,17 @@ def _axis_size(mesh: Mesh, axes) -> int:
     if isinstance(axes, str):
         axes = (axes,)
     return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def make_serve_plan(cfg: ModelConfig, mesh: Mesh,
+                    force_tier: Optional[str] = None) -> Plan:
+    """Serving-mode plan for ``ServeEngine`` (DESIGN.md §3.7): a decode-kind plan
+    whose specs also cover *prepared integer* trees — int8/packed-int4 weights and
+    their scale leaves (``sw``, ``bcol``, ``qalpha``) follow the same model-axis
+    split as the weight they dequantize — and slot-table KV caches including the
+    int8-KV per-token scale leaves."""
+    shape = ShapeConfig(name="serve", seq_len=0, global_batch=0, kind="decode")
+    return make_plan(cfg, shape, mesh, force_tier=force_tier)
 
 
 def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
@@ -141,10 +151,12 @@ def _param_spec(pathstr: str, shape: Tuple[int, ...], cfg: ModelConfig,
                     break
         return P(*spec)
 
-    # ---- scalars / vectors: norms, biases, A_log, D, dt_bias, conv, router, scales --
+    # ---- scalars / vectors: norms, biases, A_log, D, dt_bias, conv, router ----------
+    # (quantization-metadata leaves — sw/bcol/qalpha — are handled with their weight
+    # below: scale vectors must split along the same model axis as the weight dim
+    # they dequantize, or every sharded serving step pays a per-layer reshard.)
     if parent in ("router",) or leaf in ("scale", "bias", "conv_w", "conv_b", "A_log",
-                                         "D", "dt_bias", "norm_scale", "bcol",
-                                         "qalpha"):
+                                         "D", "dt_bias", "norm_scale"):
         return P(*([None] * nd))
 
     # ---- dp_only: pure FSDP over the folded (data+model) mesh, no TP placement -------
@@ -209,11 +221,32 @@ def _param_spec(pathstr: str, shape: Tuple[int, ...], cfg: ModelConfig,
         ax, ok, fa = table[parent]
         return build(out_axis=ax, model_ok=ok, fsdp_axis=fa)
     if parent in table and leaf == "sw":
-        # dequant scale vector(s): shard like the output dim when it is last
+        # Dequant scale vector(s) follow the weight's model-axis split. Column-
+        # parallel (d_out last on the weight): shard sw's d_out. Row-parallel int4
+        # (d_in sharded): sw is (..., G, d_out) with G = d_in/group — shard the
+        # group axis, which stays aligned with the weight's d_in shard exactly when
+        # tp divides G (whole groups per shard). Anything else replicates. The
+        # group axis only exists when the per-layer rank is 2: a scanned int8 sw is
+        # (n_blocks, d_out) — its leading dim is the layer-stack axis, which must
+        # never shard (XLA all-gathers the whole stack outside the scan otherwise).
         ax, ok, _ = table[parent]
-        if ax == -1 and ok and _maybe(tp, shape[-1], mesh):
+        rank = nd - (1 if names[0] == "blocks" else 0)
+        if ok and ax == -1 and _maybe(tp, shape[-1], mesh):
+            return P(*([None] * (nd - 1) + [tp]))
+        if ok and ax == -2 and rank == 2 and _maybe(tp, shape[-2], mesh):
+            return P(*([None] * (nd - 2) + [tp, None]))
+        return P(*([None] * nd))
+    if parent in table and leaf == "bcol":
+        # Per-input-channel b = c^(1-α) divides the activation before the GEMM:
+        # shard along d_in exactly when the weight is row-parallel (its d_in is the
+        # model-sharded contraction dim), so the act-quantize divide runs on the
+        # shard each device already holds.
+        ax, ok, _ = table[parent]
+        if ok and ax == -2 and _maybe(tp, shape[-1], mesh):
             return P(*([None] * (nd - 1) + [tp]))
         return P(*([None] * nd))
+    # qalpha (effective-alpha scalar, leading stack dims only) and anything else
+    # unrecognized: replicate
     return P(*([None] * nd))
 
 
@@ -240,6 +273,9 @@ def batch_shardings(batch_tree, plan: Plan, mesh: Mesh):
 
 def cache_shardings(cache_tree, cfg: ModelConfig, plan: Plan, mesh: Mesh):
     """KV caches (B,T,Hkv,D) [+ leading n_blocks when stacked]: B→dp, T→model (decode).
+    int8 KV per-token scale leaves (``k_scale``/``v_scale``, (B,T,Hkv,1)) carry the
+    same (B→dp, T→model) split as the codes they dequantize — a slot's scale row
+    must live with its code row or every decode-step scatter pays a reshard.
     SSM caches: B→dp, heads→model when divisible."""
     def one(path, leaf):
         pathstr = _path_str(path)
@@ -249,7 +285,7 @@ def cache_shardings(cache_tree, cfg: ModelConfig, plan: Plan, mesh: Mesh):
         off = 1 if stacked else 0
         spec: list = [None] * nd
         last = names[-1]
-        if last in ("k", "v"):
+        if last in ("k", "v", "k_scale", "v_scale"):
             if _maybe(plan.dp_axes, leaf.shape[off + 0], mesh):
                 spec[off + 0] = plan.dp_axes
             if plan.seq_shard_kv and _maybe(plan.tp_axis, leaf.shape[off + 1], mesh):

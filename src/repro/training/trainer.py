@@ -4,7 +4,6 @@ for ``jax.jit`` with sharded params/opt/batch (see launch/dryrun.py and launch/t
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import awq, qlinear as ql, quantizers as Q
+from repro.core import awq, qlinear as ql
 from repro.data.synthetic import OPT_LIKE, outlier_activations
 
 

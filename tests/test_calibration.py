@@ -3,7 +3,6 @@ end-to-end quantize_tree flow."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get
 from repro.core import calibration, qlinear as ql

@@ -1,7 +1,5 @@
 """Checkpoint manager: roundtrip, atomicity, integrity, GC, async writes."""
-import json
 import os
-import shutil
 
 import jax.numpy as jnp
 import numpy as np

@@ -3,7 +3,6 @@ shrinkage on gradients (the beyond-paper transplant, DESIGN.md §3.5)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.synthetic import OPT_LIKE, outlier_activations
 from repro.training import compression as comp

@@ -1,6 +1,5 @@
 """Data substrate: determinism, loader ordering, planted outlier statistics."""
 import numpy as np
-import pytest
 
 from repro.data import HostDataLoader, make_train_batches
 from repro.data.synthetic import (LLAMA_LIKE, OPT_LIKE, OutlierSpec, markov_corpus,

@@ -3,7 +3,6 @@ programs with analytically known FLOP counts — including the nested-scan case 
 XLA's own cost_analysis undercounts by the trip product."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_static import analyze_hlo
 

@@ -1,5 +1,4 @@
 """Unit + property tests for the paper's core numerics (core/quantizers.py)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

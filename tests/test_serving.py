@@ -41,7 +41,7 @@ class TestServeEngine:
         rng = np.random.default_rng(0)
         prompts = [rng.integers(1, cfg.vocab, size=8).astype(np.int32)
                    for _ in range(2)]
-        reqs = engine.submit(prompts, max_new=6)
+        engine.submit(prompts, max_new=6)
         done = engine.run()
         for r in done:
             want = _greedy_reference(cfg, params, r.prompt.tolist(), 6)

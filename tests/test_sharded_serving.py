@@ -1,0 +1,110 @@
+"""TP-sharded serving (DESIGN.md §3.7): token-exact parity vs single-device.
+
+One subprocess with a forced 8-device CPU host platform serves a mixed-length
+continuous-batching workload through ``ServeEngine(mesh=...)`` at tp=2 (tier
+tp_full for the smoke config) and tp=4 (tier tp_kv_rep: 4 q heads divide, 2 kv
+heads degrade to replication) across the full path × KV-cache matrix —
+fake / dequant-fp / fused-int8 × fp / int8 — and asserts the emitted tokens are
+identical to the single-device engine, per request. The same subprocess pins the
+row-parallel int32-accumulator ordering (qlinear ref path bitwise vs
+single-device: the cross-shard reduction must happen on integer values before
+the f32 dequant multiply — hints.constrain_gemm_acc).
+
+The CI ``sharded-serving`` job runs this file; it also runs under tier-1 by
+default (the top-level pytest process stays on the real single CPU device —
+only the subprocess forces 8). The tier-1 CI matrix sets
+``REPRO_SKIP_SHARDED=1`` to skip it there: the dedicated job already runs it,
+and the ~2-minute 8-device subprocess × the python-version matrix buys no extra
+coverage.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import dataclasses
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get
+    from repro.core import qlinear as ql
+    from repro.models import model as M
+    from repro.models.quantize import quantize_tree
+    from repro.serving import engine as E
+    from repro.sharding import hints
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg = dataclasses.replace(get("starcoder2-7b", smoke=True), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_tree(params, ql.W8A8_INT8)
+    rng = np.random.default_rng(0)
+    LENS = [4, 7, 12, 9]
+    MAX_NEW = [4, 3, 5, 2]
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32) for n in LENS]
+    COMBOS = [("fake", "fp"), ("fake", "int8"),
+              ("dequant-fp", "fp"), ("dequant-fp", "int8"),
+              ("fused-int8", "fp"), ("fused-int8", "int8")]
+
+    def serve(mesh, path, kv):
+        p, quant = ((params, ql.W8A8_CROSSQUANT) if path == "fake"
+                    else (qparams, ql.W8A8_INT8))
+        eng = E.ServeEngine(cfg, p, batch_size=2, max_len=32, quant=quant,
+                            path=path, kv_cache=kv, mesh=mesh)
+        eng.submit([x.copy() for x in prompts], max_new=list(MAX_NEW))
+        done = eng.run()
+        assert eng.stats["mid_decode_admissions"] > 0   # 4 requests, 2 slots
+        return {r.rid: r.out for r in done}
+
+    fails = []
+    base = {c: serve(None, *c) for c in COMBOS}
+    for tp in (2, 4):
+        mesh = make_debug_mesh(8 // tp, tp)
+        for c in COMBOS:
+            got = serve(mesh, *c)
+            ok = got == base[c]
+            print(f"tp={tp} path={c[0]} kv={c[1]}: "
+                  f"{'OK' if ok else 'MISMATCH ' + repr((got, base[c]))}",
+                  flush=True)
+            if not ok:
+                fails.append((tp, c))
+
+    # row-parallel int32-accumulator ordering (ref backend, bitwise)
+    mesh = make_debug_mesh(4, 2)
+    node = jax.tree_util.tree_map(lambda a: a[0], qparams["blocks"][0])["mlp"]["down"]
+    x = jnp.asarray(rng.standard_normal((16, node["qw"].shape[0])), jnp.float32)
+    repl = NamedSharding(mesh, P())
+    sh = {"qw": NamedSharding(mesh, P("model", None)), "sw": repl,
+          "bcol": NamedSharding(mesh, P("model")), "qalpha": repl}
+
+    def row_parallel(p, x):
+        with hints.sharding_hints(dp_axes=("data",), tp_axis="model", mesh=mesh):
+            return ql.apply(p, x, ql.W8A8_INT8, int_exec="ref")
+
+    y_sharded = jax.jit(row_parallel, in_shardings=(sh, repl),
+                        out_shardings=repl)(jax.device_put(node, sh), x)
+    y_single = jax.jit(
+        lambda p, x: ql.apply(p, x, ql.W8A8_INT8, int_exec="ref"))(node, x)
+    bitwise = bool((np.asarray(y_sharded) == np.asarray(y_single)).all())
+    print(f"row-parallel ref int8 bitwise: {bitwise}", flush=True)
+    if not bitwise:
+        fails.append(("row-parallel-bitwise",))
+
+    print("FAILURES: " + repr(fails) if fails else "ALL-PARITY-OK", flush=True)
+""")
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_SKIP_SHARDED") == "1",
+                    reason="sharded-serving CI job runs this file")
+def test_sharded_serving_matrix_subprocess():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                       text=True, timeout=1800,
+                       env={**os.environ, "PYTHONPATH": src})
+    assert "ALL-PARITY-OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])

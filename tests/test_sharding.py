@@ -1,6 +1,7 @@
 """Sharding planner: tier selection, divisibility degradation (never errors),
 head-padding functional equivalence, and spec construction on a real multi-device
 mesh (subprocess with forced host device count)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -9,11 +10,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, all_archs, get, with_padded_heads
+from repro.core import qlinear as ql
 from repro.models import model as M
-from repro.models.quantize import pad_head_params
+from repro.models.quantize import pad_head_params, quantize_tree
 from repro.sharding import planner
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 class FakeMesh:
@@ -111,8 +116,7 @@ class TestParamSpecs:
         """)
         r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                            text=True, timeout=600,
-                           env={**__import__("os").environ, "PYTHONPATH": "src"},
-                           cwd="/root/repo")
+                           env={**os.environ, "PYTHONPATH": SRC})
         assert "OK" in r.stdout, r.stderr[-2000:]
 
     def test_param_shardings_cover_tree(self, key):
@@ -130,3 +134,157 @@ class TestParamSpecs:
             used = [a for s in spec if s is not None
                     for a in ((s,) if isinstance(s, str) else s)]
             assert len(used) == len(set(used)), (path, spec)
+
+
+class TestQuantizedServingSpecs:
+    """Serving plans for prepared integer trees (DESIGN.md §3.7): scale leaves
+    follow their weight's model-axis split; non-dividing shapes degrade to
+    replication, never error."""
+
+    def _plan(self, model=2):
+        mesh = FakeMesh(data=8 // model, model=model)
+        cfg = get("starcoder2-7b", smoke=True)
+        return cfg, planner.make_serve_plan(cfg, mesh), mesh
+
+    def test_scale_leaves_follow_weight_model_axis(self):
+        cfg, plan, mesh = self._plan()
+        d, f = cfg.d_model, cfg.d_ff
+        # column-parallel up: qw shards d_out over model, sw follows d_out
+        assert planner._param_spec("blocks/0/mlp/up/qw", (d, f), cfg, plan,
+                                   mesh)[-1] == "model"
+        assert planner._param_spec("blocks/0/mlp/up/sw", (f,), cfg, plan,
+                                   mesh)[-1] == "model"
+        # row-parallel down: qw shards d_in, bcol follows d_in, sw (d_out) replicates
+        assert planner._param_spec("blocks/0/mlp/down/qw", (f, d), cfg, plan,
+                                   mesh)[-2] == "model"
+        assert planner._param_spec("blocks/0/mlp/down/bcol", (f,), cfg, plan,
+                                   mesh)[-1] == "model"
+        assert planner._param_spec("blocks/0/mlp/down/sw", (d,), cfg, plan,
+                                   mesh) == P(None)
+        # qalpha (effective-alpha scalar leaf): always replicated
+        assert planner._param_spec("blocks/0/mlp/down/qalpha", (), cfg, plan,
+                                   mesh) == P()
+
+    def test_int4_group_scales_follow_row_parallel_shard(self):
+        cfg, plan, mesh = self._plan()
+        # row-parallel W4: per-layer sw is (G, d_out); the group axis follows the
+        # weight's d_in shard when tp divides G (whole groups per shard). Scanned
+        # leaves carry a leading layer-stack dim: (n_blocks, G, d_out).
+        spec = planner._param_spec("tail/0/mlp/down/sw", (4, cfg.d_model), cfg,
+                                   plan, mesh)
+        assert spec[-2] == "model" and spec[-1] is None
+        spec = planner._param_spec("blocks/0/mlp/down/sw", (2, 4, cfg.d_model),
+                                   cfg, plan, mesh)
+        assert spec == P(None, "model", None)
+        # ... and replicates when tp does not divide G (G=3 vs tp=2)
+        spec = planner._param_spec("blocks/0/mlp/down/sw", (2, 3, cfg.d_model),
+                                   cfg, plan, mesh)
+        assert all(s is None for s in spec)
+
+    def test_stacked_int8_row_parallel_sw_never_shards_layer_axis(self):
+        """A scanned int8 sw is (n_blocks, d_out): its dim -2 is the layer-stack
+        axis, not a group axis — sharding it would make XLA all-gather the whole
+        stack outside the decode scan. Must replicate even when n_blocks divides
+        tp."""
+        cfg, plan, mesh = self._plan()
+        spec = planner._param_spec("blocks/0/mlp/down/sw", (2, cfg.d_model), cfg,
+                                   plan, mesh)
+        assert all(s is None for s in spec)
+
+    def test_prepared_tree_covered_and_degrades_to_replication(self):
+        """Every leaf of a fully quantized tree gets a rank-matching spec with each
+        mesh axis used at most once; a mesh nothing divides (model=7) yields pure
+        replication — never an error (the planner's §3.4 contract, extended to
+        quantization metadata)."""
+        cfg = get("starcoder2-7b", smoke=True)
+        qsds = jax.eval_shape(
+            lambda: quantize_tree(M.init_params(jax.random.PRNGKey(0), cfg),
+                                  ql.W8A8_INT8))
+        for mesh, expect_replicated in ((FakeMesh(data=4, model=2), False),
+                                        (FakeMesh(data=1, model=7), True)):
+            plan = planner.make_serve_plan(cfg, mesh)
+            n_model_sharded = 0
+            for path, leaf in jax.tree_util.tree_flatten_with_path(qsds)[0]:
+                spec = planner._param_spec(planner._path_str(path), leaf.shape,
+                                           cfg, plan, mesh)
+                assert len(spec) == len(leaf.shape)
+                used = [a for s in spec if s is not None
+                        for a in ((s,) if isinstance(s, str) else s)]
+                assert len(used) == len(set(used)), (path, spec)
+                n_model_sharded += "model" in used
+                if expect_replicated:
+                    assert all(s is None for s in spec), (path, spec)
+            if not expect_replicated:
+                assert n_model_sharded > 0
+
+    def test_int8_kv_cache_scale_leaves_follow_codes(self):
+        """cache_shardings: k_scale/v_scale carry the same (B→dp, T→model) split
+        as the int8 codes they dequantize."""
+        import numpy as _np
+        mesh = jax.sharding.Mesh(
+            _np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        cfg = get("starcoder2-7b", smoke=True)
+        plan = planner.make_serve_plan(cfg, mesh)
+        assert plan.seq_shard_kv
+        caches = jax.eval_shape(
+            lambda: M.init_cache(cfg, 4, 32, dtype=jnp.float32, kv_int8=True))
+        sh = planner.cache_shardings(caches, cfg, plan, mesh)
+        blk = sh["blocks"][0]
+        # stacked leaves: (n_blocks, B, T, ...) — B on dp, T on model
+        assert blk["k"].spec[1] == ("data",) and blk["k"].spec[2] == "model"
+        assert blk["k_scale"].spec[:3] == blk["k"].spec[:3]
+        assert blk["v_scale"].spec[:3] == blk["v"].spec[:3]
+
+
+class TestDebugMesh:
+    def test_make_debug_mesh_raises_with_device_count_hint(self):
+        """A short host must raise with the XLA_FLAGS hint (like
+        make_production_mesh), not silently build a wrong-shaped mesh."""
+        from repro.launch.mesh import make_debug_mesh
+        with pytest.raises(RuntimeError,
+                           match="xla_force_host_platform_device_count"):
+            make_debug_mesh(64, 64)
+
+
+class TestTp2TokenParity:
+    def test_tp2_decode_matches_single_device_subprocess(self):
+        """tp=2 host-mesh serving emits token-identical greedy output to
+        single-device decode on a *pure-TP* (1, 2) mesh — the degenerate-dp
+        layout the tp=2/tp=4 matrix of tests/test_sharded_serving.py (which runs
+        on (4, 2)/(2, 4) meshes) does not cover. Two forced devices only, so
+        this stays cheap under tier-1."""
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+            os.environ["JAX_PLATFORMS"] = "cpu"
+            import dataclasses
+            import jax, numpy as np
+            from repro.configs import get
+            from repro.core import qlinear as ql
+            from repro.models import model as M
+            from repro.serving import engine as E
+            from repro.launch.mesh import make_debug_mesh
+
+            cfg = dataclasses.replace(get("starcoder2-7b", smoke=True),
+                                      dtype="float32")
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            rng = np.random.default_rng(0)
+            prompts = [rng.integers(1, cfg.vocab, size=l).astype(np.int32)
+                       for l in (5, 9)]
+
+            def serve(mesh):
+                eng = E.ServeEngine(cfg, params, batch_size=2, max_len=32,
+                                    quant=ql.W8A8_CROSSQUANT, path="fake",
+                                    mesh=mesh)
+                eng.submit([p.copy() for p in prompts], max_new=4)
+                return {r.rid: r.out for r in eng.run()}
+
+            base = serve(None)
+            got = serve(make_debug_mesh(1, 2))
+            assert got == base, (got, base)
+            print("TP2-PARITY-OK")
+        """)
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=600,
+                           env={**os.environ, "PYTHONPATH": SRC})
+        assert "TP2-PARITY-OK" in r.stdout, r.stderr[-2000:]

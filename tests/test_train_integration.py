@@ -1,7 +1,5 @@
 """End-to-end training integration: loss goes down, microbatching is exact,
 checkpoint-resume reproduces, gradient compression trains."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
