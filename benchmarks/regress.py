@@ -11,6 +11,10 @@ What gates, against what:
 
 * Only ``scheduler=continuous`` rows gate; grouped-baseline rows and ``@tpN``
   sharded twins (emulated-collective-bound wall-clock) are informational.
+* Shared-prefix rows (``serving_bench_prefix`` — DESIGN.md §3.8): paged-layout
+  rows gate on prefix **hit rate** against every baseline (a deterministic
+  indexing invariant, like occupancy) and on paged **tok/s** against
+  same-runner baselines; dense rows are informational.
 * ``--baseline`` gates tok/s *and* occupancy — use it for snapshots from the
   same runner class (the previous main-branch CI artifact).
 * ``--occupancy-baseline`` gates occupancy only — use it for the committed
@@ -45,6 +49,56 @@ def serving_rows(snapshot: dict) -> dict:
             "occupancy": float(parts[4]),
         }
     return rows
+
+
+def prefix_rows(snapshot: dict) -> dict:
+    """``(path, layout) -> {"tok_s", "hit_rate"}`` from the shared-prefix
+    section (``serving_bench_prefix`` lines — DESIGN.md §3.8)."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("serving_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 5 or parts[0] != "serving_bench_prefix" or parts[1] == "path":
+            continue
+        rows[(parts[1], parts[2])] = {
+            "tok_s": float(parts[3]),
+            "hit_rate": float(parts[4]),
+        }
+    return rows
+
+
+def compare_prefix(
+    new: dict, base: dict, max_drop: float, tag: str, wall_clock: bool
+) -> tuple[list, list]:
+    """Shared-prefix gates: paged-layout rows gate on prefix hit rate (a
+    scheduling/indexing invariant, machine-independent — gated against every
+    baseline) and on paged tok/s (wall-clock baselines only). Dense rows are
+    informational."""
+    report, failures = [], []
+    for key in sorted(base):
+        path, layout = key
+        if key not in new:
+            report.append(f"  prefix {path}/{layout}: missing from new snapshot (skip)")
+            continue
+        for metric in ("hit_rate", "tok_s"):
+            b, n = base[key][metric], new[key][metric]
+            if b <= 0:
+                continue
+            drop = 1.0 - n / b
+            line = (
+                f"  prefix {path}/{layout} {metric}: {b:.2f} -> {n:.2f} "
+                f"({-drop:+.1%} vs {tag})"
+            )
+            gate = (
+                layout == "paged"
+                and (wall_clock or metric == "hit_rate")
+                and drop > max_drop
+            )
+            if gate:
+                line += f"  REGRESSION (>{max_drop:.0%} drop)"
+                failures.append(line)
+            report.append(line)
+    return report, failures
 
 
 def compare(
@@ -106,7 +160,9 @@ def main() -> None:
         ap.error("need at least one --baseline / --occupancy-baseline")
 
     with open(args.new) as fh:
-        new = serving_rows(json.load(fh))
+        new_snapshot = json.load(fh)
+    new = serving_rows(new_snapshot)
+    new_prefix = prefix_rows(new_snapshot)
     if not new:
         print(f"no serving_bench rows in {args.new} — nothing to gate")
         sys.exit(1)
@@ -118,12 +174,18 @@ def main() -> None:
     for path, wall_clock in baselines:
         try:
             with open(path) as fh:
-                base = serving_rows(json.load(fh))
+                base_snapshot = json.load(fh)
         except (OSError, json.JSONDecodeError) as e:
             print(f"baseline {path}: unreadable ({e}) — skipped")
             continue
-        scope = "tok/s + occupancy" if wall_clock else "occupancy only"
+        base = serving_rows(base_snapshot)
+        scope = "tok/s + occupancy + prefix" if wall_clock else "occupancy + prefix"
         report, failures = compare(new, base, args.max_drop, path, wall_clock)
+        p_report, p_failures = compare_prefix(
+            new_prefix, prefix_rows(base_snapshot), args.max_drop, path, wall_clock
+        )
+        report += p_report
+        failures += p_failures
         print(f"vs {path} (gating {scope}):")
         print("\n".join(report) if report else "  (no comparable rows)")
         all_failures += failures

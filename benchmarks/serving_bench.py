@@ -21,8 +21,18 @@ TP-sharded through a ``(n_dev/2, 2)`` host mesh (DESIGN.md §3.7), reported with
 an ``@tp2`` path suffix — wall-clock is dominated by host-mesh collective
 emulation, so these lines measure *that the sharded path serves*, not speedup.
 
-CSV (after the header row):
+A second section serves a **shared-system-prompt** workload (one common prefix,
+per-request suffixes — the fleet-traffic shape) through the dense layout and
+the paged pool + radix prefix index (DESIGN.md §3.8), measuring what paging
+buys beyond scheduling: prefix hit rate (prompt tokens mapped copy-free from
+cached pages / total prompt tokens), prefill tokens actually computed vs
+saved, and the peak page footprint against the dense-equivalent capacity —
+``capacity_x = dense_pages / peak_pages`` is how many times more concurrent
+sequences the same HBM could hold at the observed sharing.
+
+CSV (after the header rows):
 ``serving_bench,<path>[@tpN],<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
+``serving_bench_prefix,<path>,<layout>,<tok_s>,<hit_rate>,<prefill_tokens>,<prefill_saved>,<peak_pages>,<capacity_x>``
 """
 from __future__ import annotations
 
@@ -32,6 +42,9 @@ import jax
 import numpy as np
 
 PROMPT_LENS = (6, 10, 14)
+BATCH_SIZE = 4
+MAX_LEN = 64
+PAGE_SIZE = 8
 
 
 def _workload(cfg, n_req: int, seed: int = 0):
@@ -48,23 +61,60 @@ def _workload(cfg, n_req: int, seed: int = 0):
     return prompts, max_new
 
 
+def _prefix_workload(cfg, n_req: int, shared_len: int = 24, seed: int = 1):
+    """One shared system prompt + short per-request suffixes: the prefix-reuse
+    case the paged layout (DESIGN.md §3.8) exists for."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, cfg.vocab, size=shared_len).astype(np.int32)
+    prompts = [np.concatenate([
+        shared, rng.integers(1, cfg.vocab, size=3 + (i % 4)).astype(np.int32)])
+        for i in range(n_req)]
+    max_new = [10 + 4 * (i % 3) for i in range(n_req)]
+    return prompts, max_new
+
+
 def _serve(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
-           mesh=None):
+           mesh=None, cache_layout="dense"):
     from repro.serving.engine import ServeEngine
-    eng = ServeEngine(cfg, params, batch_size=4, max_len=64, quant=quant,
-                      path=path, kv_cache=kv_cache, scheduler=scheduler, mesh=mesh)
+    kw = dict(batch_size=BATCH_SIZE, max_len=MAX_LEN, quant=quant, path=path,
+              kv_cache=kv_cache, scheduler=scheduler, mesh=mesh,
+              cache_layout=cache_layout, page_size=PAGE_SIZE)
+    eng = ServeEngine(cfg, params, **kw)
     eng.submit([p.copy() for p in prompts], max_new=list(max_new))
     eng.run()                      # warm compile caches (fresh engine re-times)
-    eng2 = ServeEngine(cfg, params, batch_size=4, max_len=64, quant=quant,
-                       path=path, kv_cache=kv_cache, scheduler=scheduler, mesh=mesh)
-    eng2._admit_step = eng._admit_step
+    eng2 = ServeEngine(cfg, params, **kw)
     eng2._decode_step = eng._decode_step
+    if cache_layout == "paged":
+        eng2._admit_cold = eng._admit_cold
+        eng2._admit_warm = eng._admit_warm
+    else:
+        eng2._admit_step = eng._admit_step
     eng2.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.perf_counter()
     done = eng2.run()
     dt = time.perf_counter() - t0
     tok_s = sum(len(r.out) for r in done) / dt
-    return tok_s, eng2.occupancy(), eng2.stats["mid_decode_admissions"]
+    return tok_s, eng2
+
+
+def _prefix_lines(cfg, variants, n_req: int):
+    """The shared-prefix section: dense vs paged per serving variant."""
+    prompts, max_new = _prefix_workload(cfg, n_req)
+    lines = ["serving_bench_prefix,path,layout,tok_s,hit_rate,prefill_tokens,"
+             "prefill_saved,peak_pages,capacity_x"]
+    dense_pages = BATCH_SIZE * MAX_LEN // PAGE_SIZE
+    for tag, p, quant, path, kv in variants:
+        for layout in ("dense", "paged"):
+            tok_s, eng = _serve(cfg, p, prompts, max_new, quant=quant, path=path,
+                                kv_cache=kv, scheduler="continuous",
+                                cache_layout=layout)
+            saved = eng.stats["prefix_tokens_reused"]
+            peak = eng.stats["peak_pages_in_use"] or dense_pages
+            lines.append(
+                f"serving_bench_prefix,{tag},{layout},{tok_s:.1f},"
+                f"{eng.prefix_hit_rate():.3f},{eng.stats['prefill_tokens']},"
+                f"{saved},{peak},{dense_pages / peak:.2f}")
+    return lines
 
 
 def run(quick: bool = False):
@@ -75,7 +125,11 @@ def run(quick: bool = False):
 
     cfg = get("starcoder2-7b", smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    n_req = 6 if quick else 10
+    # one workload size for quick AND full passes: occupancy is a deterministic
+    # scheduling invariant gated across runs (benchmarks/regress.py), so the
+    # quick-CI snapshot must serve the exact workload of the committed full-run
+    # baseline — quick only trims the variant grid below
+    n_req = 10
     prompts, max_new = _workload(cfg, n_req)
 
     variants = [("fp", params, ql.FP, None, "fp")]
@@ -96,9 +150,16 @@ def run(quick: bool = False):
     for tag, p, quant, path, kv in variants:
         for mesh_tag, mesh in meshes:
             for scheduler in ("grouped", "continuous"):
-                tok_s, occ, refills = _serve(cfg, p, prompts, max_new, quant=quant,
-                                             path=path, kv_cache=kv,
-                                             scheduler=scheduler, mesh=mesh)
+                tok_s, eng = _serve(cfg, p, prompts, max_new, quant=quant,
+                                    path=path, kv_cache=kv,
+                                    scheduler=scheduler, mesh=mesh)
                 lines.append(f"serving_bench,{tag}{mesh_tag},{scheduler},"
-                             f"{tok_s:.1f},{occ:.2f},{refills}")
+                             f"{tok_s:.1f},{eng.occupancy():.2f},"
+                             f"{eng.stats['mid_decode_admissions']}")
+
+    # shared-system-prompt workload: dense vs paged prefix reuse (§3.8);
+    # single-device only — the paged capacity story is layout, not TP. Like
+    # occupancy, the hit rate is a gated deterministic invariant: quick and
+    # full passes must serve the same workload (quick trims variants only).
+    lines += _prefix_lines(cfg, variants, n_req=12)
     return lines

@@ -14,6 +14,12 @@ paper's per-layer quantization-kernel proportion (core/kernel_analysis.py) for
 per-token quantization vs CrossQuant — the §4.1 statistic, measured on what the
 engine actually served rather than a calibration set.
 
+``--cache-layout paged`` serves through the paged KV pool with radix prefix
+reuse (DESIGN.md §3.8); with ``--shared-prefix N`` every prompt carries an
+N-token shared system prompt, so admissions past the first map the cached
+prefix pages copy-free and only prefill their suffix (the printed
+``prefix_hit_rate`` / ``prefill_saved`` stats).
+
 ``--mesh data,model`` serves TP-sharded on a host mesh (DESIGN.md §3.7) — set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 
@@ -55,30 +61,43 @@ def calibrate_and_quantize(cfg, params, quant):
     return qparams
 
 
-def mixed_workload(cfg, n_requests, prompt_lens, seed=0):
-    """Mixed prompt lengths + staggered max_new: the continuous-batching case."""
+def mixed_workload(cfg, n_requests, prompt_lens, seed=0, shared_prefix=0):
+    """Mixed prompt lengths + staggered max_new: the continuous-batching case.
+    ``shared_prefix`` prepends that many identical tokens to every prompt (a
+    shared system prompt) — the paged layout's prefix-reuse case."""
     rng = np.random.default_rng(seed)
-    prompts = [rng.integers(1, cfg.vocab,
-                            size=prompt_lens[i % len(prompt_lens)]).astype(np.int32)
-               for i in range(n_requests)]
+    shared = rng.integers(1, cfg.vocab, size=shared_prefix).astype(np.int32)
+    prompts = [np.concatenate([
+        shared, rng.integers(1, cfg.vocab,
+                             size=prompt_lens[i % len(prompt_lens)]).astype(np.int32)])
+        for i in range(n_requests)]
     max_new = [8 + 4 * (i % 3) for i in range(n_requests)]
     return prompts, max_new
 
 
 def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
-          eos_id=None, tag="", mesh=None):
+          eos_id=None, tag="", mesh=None, cache_layout="dense", page_size=8,
+          n_pages=None):
     engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
-                         eos_id=eos_id, path=path, kv_cache=kv_cache, mesh=mesh)
+                         eos_id=eos_id, path=path, kv_cache=kv_cache, mesh=mesh,
+                         cache_layout=cache_layout, page_size=page_size,
+                         n_pages=n_pages)
     engine.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     total = sum(len(r.out) for r in done)
     shard = f", tp={engine.plan.tp} tier={engine.plan.tier}" if engine.plan else ""
+    paged = ""
+    if cache_layout == "paged":
+        paged = (f", prefix_hit_rate={engine.prefix_hit_rate():.2f}, "
+                 f"prefill_saved={engine.stats['prefix_tokens_reused']}, "
+                 f"peak_pages={engine.stats['peak_pages_in_use']}"
+                 f"/{engine.pool.n_pages}")
     print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache}, "
           f"occupancy={engine.occupancy():.2f}, "
-          f"refills_mid_decode={engine.stats['mid_decode_admissions']}{shard})")
+          f"refills_mid_decode={engine.stats['mid_decode_admissions']}{paged}{shard})")
     return done, total / dt
 
 
@@ -130,6 +149,17 @@ def main() -> None:
                     choices=["ref", "dequant-fp", "fused-int8"],
                     help="integer execution backend (int8 quant only)")
     ap.add_argument("--kv-cache", default="fp", choices=["fp", "int8"])
+    ap.add_argument("--cache-layout", default="dense", choices=["dense", "paged"],
+                    help="dense slot table (§3.6) or paged pool + radix prefix "
+                         "reuse (§3.8)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool capacity; default = dense-equivalent "
+                         "batch_size*max_len/page_size")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend N identical tokens to every prompt (shared "
+                         "system prompt — exercises paged prefix reuse)")
     ap.add_argument("--compare", action="store_true",
                     help="also serve the fp baseline and report both tok/s")
     ap.add_argument("--arch", default="starcoder2-7b")
@@ -158,7 +188,10 @@ def main() -> None:
         mesh = parse_mesh_arg(args.mesh)
 
     prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
-    prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens)
+    prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens,
+                                      shared_prefix=args.shared_prefix)
+    layout_kw = dict(cache_layout=args.cache_layout, page_size=args.page_size,
+                     n_pages=args.n_pages)
 
     if args.quant != "int8":
         # The int8 KV cache is independent of weight quantization and applies to
@@ -168,17 +201,18 @@ def main() -> None:
         serve_params = params
         done, _ = serve(cfg, params, prompts, max_new, quant=quant,
                         kv_cache=args.kv_cache, eos_id=args.eos_id, tag=args.quant,
-                        mesh=mesh)
+                        mesh=mesh, **layout_kw)
     else:
         qparams = calibrate_and_quantize(cfg, params, quant)
         serve_params = qparams
         path = None if args.path == "ref" else args.path
         done, int8_tps = serve(cfg, qparams, prompts, max_new, quant=quant,
                                path=path, kv_cache=args.kv_cache,
-                               eos_id=args.eos_id, mesh=mesh)
+                               eos_id=args.eos_id, mesh=mesh, **layout_kw)
         if args.compare:
             _, fp_tps = serve(cfg, params, prompts, max_new, quant=ql.FP,
-                              eos_id=args.eos_id, tag="fp-baseline", mesh=mesh)
+                              eos_id=args.eos_id, tag="fp-baseline", mesh=mesh,
+                              **layout_kw)
             print(f"end-to-end tokens/sec: fp={fp_tps:.1f} "
                   f"{args.path}={int8_tps:.1f} ({int8_tps / fp_tps:.2f}x; "
                   "CPU-interpret numbers — the kernel-level TPU projection is in "

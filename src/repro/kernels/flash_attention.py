@@ -95,6 +95,112 @@ def _fa_kernel(q_ref, k_ref, v_ref, *refs,
         o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         ps: int, n_pages_max: int, scale: float,
+                         window: Optional[int], softcap: Optional[float]):
+    """Single-token decode attention through a page table (DESIGN.md §3.8).
+
+    grid = (B, Hkv, max_pages), page axis innermost. ``tab_ref`` is the
+    flattened (B·max_pages,) page table and ``kvlen_ref`` the (B,) valid
+    lengths — both scalar-prefetch inputs, so the k/v BlockSpecs gather each
+    logical page's physical tile straight from the pool (no (B, T, Hkv, D)
+    materialization). Online softmax state lives in VMEM scratch across the
+    page axis; pages at or beyond the valid length are dead (skipped), and the
+    in-page tail past ``kv_len`` masks by absolute position."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kvl = kvlen_ref[b]
+
+    @pl.when(j * ps < kvl)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (ps, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kvl
+        if window is not None:
+            # decode window semantics (layers.decode_attention): the newest
+            # token sits at kvl - 1
+            mask &= (kvl - 1 - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32)            # (ps, D)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_pages_max - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, kv_len: jax.Array, *,
+    window: Optional[int] = None, softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hkv, G, D); k/v pages: (P, ps, Hkv, D); page_table: (B, maxP)
+    int32 (entries ≥ P are invalid — clamped in the index map and masked by
+    ``kv_len``); kv_len: (B,) int32 → (B, Hkv, G, D).
+
+    TPU notes: ps should be a multiple of 8 and D of 128 for native tiling;
+    CI and the oracle-parity tests run ``interpret=True`` on any backend.
+    """
+    B, Hkv, G, D = q.shape
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    maxP = page_table.shape[1]
+    assert page_table.shape == (B, maxP) and kv_len.shape == (B,)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, ps=ps, n_pages_max=maxP, scale=D ** -0.5,
+        window=window, softcap=softcap)
+    # scalar-prefetch index maps: (grid..., *scalar_refs); clamp sentinel
+    # entries to a valid page — they are masked by kv_len inside the kernel
+    page_of = lambda b, j, tab: jnp.minimum(tab[b * maxP + j], P - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, maxP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, tab, kvl: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, tab, kvl: (page_of(b, j, tab), 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, tab, kvl: (page_of(b, j, tab), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, tab, kvl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.reshape(-1).astype(jnp.int32), kv_len.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
 def flash_attention_pallas(
     q: jax.Array, k: jax.Array, v: jax.Array,
     kv_len: Optional[jax.Array] = None, *,

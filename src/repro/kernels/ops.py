@@ -147,6 +147,41 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len=None, *,
                             mesh=hints.current_mesh())
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh"))
+def _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, *,
+                            window, softcap, mesh):
+    B, S, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+
+    def body(q, k_pages, v_pages, page_table, kv_len):
+        qg = q.reshape(B, Hkv, G, D)
+        out = _fa.paged_decode_attention_pallas(
+            qg, k_pages, v_pages, page_table,
+            jnp.broadcast_to(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+            window=window, softcap=softcap, interpret=_interpret())
+        return out.reshape(B, 1, H, D)
+
+    return hints.manual_kernel(body, (q, k_pages, v_pages, page_table, kv_len),
+                               mesh=mesh)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           page_table: jax.Array, kv_len: jax.Array, *,
+                           window=None, softcap=None) -> jax.Array:
+    """Paged single-token decode attention (DESIGN.md §3.8): q (B,1,H,D) against
+    (P, ps, Hkv, D) pools addressed through a (B, maxP) int32 page table with
+    per-slot valid lengths ``kv_len`` (scalar or (B,)) → (B,1,H,D).
+
+    The kernel gathers each logical page's physical K/V tile via scalar-prefetch
+    page indices — the dense (B, T, Hkv, D) view is never materialized. fp pools
+    only: the int8-KV paged path applies its per-token scales at the score level
+    in layers.decode_attention instead."""
+    return _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
+                                   window=window, softcap=softcap,
+                                   mesh=hints.current_mesh())
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk", "mesh"))
 def _act_quantize_padded(x, bcol, dyn_alpha, *, bits, alpha, bm, bk, mesh):
     """Shared pad → kernel → slice for the static- and traced-alpha wrappers.

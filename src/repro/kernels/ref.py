@@ -61,6 +61,38 @@ def act_quantize_ref(x: jax.Array, bcol: jax.Array, bits: int = 8,
     return q.astype(jnp.int8), a
 
 
+def paged_decode_attention_ref(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, kv_len: jax.Array, *,
+    window: int | None = None, softcap: float | None = None) -> jax.Array:
+    """Paged single-token decode attention oracle (DESIGN.md §3.8).
+
+    q: (B, Hkv, G, D) grouped query heads; k/v pages: (P, ps, Hkv, D) physical
+    pools; page_table: (B, maxP) int32 logical→physical map (entries ≥ P are
+    invalid: clamped here, masked by kv_len); kv_len: (B,) valid lengths with
+    the newest token at kv_len - 1. Gathers the logical (B, maxP·ps, Hkv, D)
+    view and runs plain-softmax attention in f32 → (B, Hkv, G, D).
+    """
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    B, maxP = page_table.shape
+    D = q.shape[-1]
+    gidx = jnp.clip(page_table[:, :, None] * ps + jnp.arange(ps)[None, None, :],
+                    0, P * ps - 1).reshape(B, maxP * ps)
+    kf = k_pages.reshape(P * ps, *k_pages.shape[2:])[gidx].astype(jnp.float32)
+    vf = v_pages.reshape(P * ps, *v_pages.shape[2:])[gidx].astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32), kf) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    t_pos = jnp.arange(maxP * ps)[None, None, None, :]
+    cl = kv_len.reshape(-1, 1, 1, 1)
+    valid = t_pos < cl
+    if window is not None:
+        valid &= (cl - 1 - t_pos) < window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", p, vf).astype(q.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, softcap: float | None = None) -> jax.Array:
     """Plain softmax attention oracle. q: (B,H,S,D); k/v: (B,H,S,D). f32 math."""

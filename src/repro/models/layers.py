@@ -208,6 +208,85 @@ def _scale_to_scores(scale: jax.Array) -> jax.Array:
     return jnp.transpose(scale[..., 0], (0, 2, 1))[:, :, None, :]
 
 
+# --------------------------------------------------------------------- paged KV
+
+def _pool_flat(pool: jax.Array) -> jax.Array:
+    """(P, ps, Hkv, D|1) page pool → (P·ps, Hkv, D|1) flat-position view."""
+    return pool.reshape((pool.shape[0] * pool.shape[1],) + pool.shape[2:])
+
+
+def _pool_scatter(pool: jax.Array, flat_idx: jax.Array, rows: jax.Array) -> jax.Array:
+    """Write ``rows`` (N, Hkv, D|1) at flat page positions ``flat_idx`` (N,) into
+    a (P, ps, Hkv, D|1) pool. Indices ≥ P·ps (sentinel page-table entries, padded
+    batch rows) are dropped — pages of other sequences are never touched because
+    the engine hands every live position exactly one page slot."""
+    flat = _pool_flat(pool).at[flat_idx].set(rows.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def _pool_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize the logical (B, max_pages·ps, Hkv, D|1) view of a pool through
+    the page table. Sentinel entries clamp to an arbitrary valid page — callers
+    mask those positions by ``cur_len`` before the softmax. With
+    ``max_pages·ps == max_len`` the result is positionally identical to a dense
+    (B, T, ...) cache row, which is what makes paged↔dense decode bit-exact."""
+    P, ps = pool.shape[0], pool.shape[1]
+    gidx = page_table[:, :, None] * ps + jnp.arange(ps)[None, None, :]
+    gidx = jnp.clip(gidx, 0, P * ps - 1).reshape(page_table.shape[0], -1)
+    return _pool_flat(pool)[gidx]
+
+
+def paged_prefill_attention(
+    q: jax.Array, k_new: jax.Array, v_new: jax.Array, cache: dict,
+    page_table: jax.Array, *, prefix_len: jax.Array, suffix_len: jax.Array,
+    window: Optional[int], softcap: Optional[float],
+) -> jax.Array:
+    """Suffix prefill against a shared paged prefix (DESIGN.md §3.8).
+
+    q/k_new/v_new: (B, S, H|Hkv, D) — the *suffix* tokens only, right-padded to
+    S with per-slot valid count ``suffix_len``; ``prefix_len`` tokens per slot
+    already live in the pool (mapped by ``page_table``). Prefix keys/values are
+    read back from the pool (int8 codes dequantized with their per-token scale
+    pages); suffix keys use the in-flight fp k/v — the same dense-prefill
+    semantics as the cold path, so a zero-prefix row computes the cold result.
+    Absolute positions: suffix query i sits at ``prefix_len[b] + i``.
+    """
+    B, S, H, D = q.shape
+    Hkv = k_new.shape[2]
+    G = H // Hkv
+    kv_int8 = "k_scale_pages" in cache
+
+    kf = _pool_gather(cache["k_pages"], page_table).astype(jnp.float32)
+    vf = _pool_gather(cache["v_pages"], page_table).astype(jnp.float32)
+    if kv_int8:
+        kf = kf * _pool_gather(cache["k_scale_pages"], page_table)
+        vf = vf * _pool_gather(cache["v_scale_pages"], page_table)
+    T = kf.shape[1]
+
+    pl_ = jnp.reshape(prefix_len, (-1,)).astype(jnp.int32)
+    sl = jnp.reshape(suffix_len, (-1,)).astype(jnp.int32)
+    abs_pos = pl_[:, None] + jnp.arange(S)[None, :]                  # (B, S)
+    row_valid = jnp.arange(S)[None, :] < sl[:, None]
+    # overlay the in-flight suffix at its absolute positions (invalid rows drop)
+    tgt = jnp.where(row_valid, jnp.clip(abs_pos, 0, T), T)
+    rows = jnp.arange(B)[:, None]
+    kf = kf.at[rows, tgt].set(k_new.astype(jnp.float32), mode="drop")
+    vf = vf.at[rows, tgt].set(v_new.astype(jnp.float32), mode="drop")
+
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, kf) * (D ** -0.5)
+    s = _softcap(s, softcap)
+    k_pos = jnp.arange(T)[None, None, :]                             # (1, 1, T)
+    valid = k_pos <= abs_pos[:, :, None]                             # causal
+    valid &= k_pos < (pl_ + sl)[:, None, None]                       # total length
+    if window is not None:
+        valid &= (abs_pos[:, :, None] - k_pos) < window
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
 def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
     cur_len: jax.Array, window: Optional[int], softcap: Optional[float],
@@ -248,21 +327,134 @@ def decode_attention(
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def _prefill_attention(q, k, v, cfg: ModelConfig, ctx: QuantContext, *,
+                       window: Optional[int], seq_lens: Optional[jax.Array]):
+    """Self-attention over a (right-padded) prefill window — the one codepath
+    shared by the dense layout and the cold (no-prefix) paged layout, so the two
+    stay bitwise-identical (DESIGN.md §3.8 parity argument)."""
+    S = q.shape[1]
+    if ctx.use_pallas and S >= 128:
+        # Fused flash-attention kernel (kernels/flash_attention.py): removes the
+        # S²-score-tile HBM traffic that dominates training cells (§Roofline).
+        from repro.kernels import ops as kops
+        return kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), kv_len=seq_lens, causal=cfg.causal,
+            window=window, softcap=cfg.attn_softcap).transpose(0, 2, 1, 3)
+    return blockwise_attention(
+        q, k, v, causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
+        kv_valid_len=seq_lens,
+        q_block=min(1024, max(S, 16)), kv_block=min(1024, max(S, 16)))
+
+
+def _paged_attention(q, k, v, cache: dict, page_table: Optional[jax.Array],
+                     cfg: ModelConfig, ctx: QuantContext, *,
+                     cur_len, prefix_len, window: Optional[int], decode: bool):
+    """Attention against a paged pool (DESIGN.md §3.8): scatter the new K/V
+    through the page table, then attend. Decode reads the pool back into the
+    dense (B, max_pages·ps, ...) layout and reuses ``decode_attention`` (the
+    per-token int8 scale handling included) so paged decode is bit-identical to
+    the dense slot table; with ``ctx.use_pallas`` and an fp pool the gather-free
+    Pallas paged kernel serves instead. Returns (out, new_cache)."""
+    if page_table is None:
+        raise ValueError("paged cache without a page_table")
+    B, S = q.shape[0], q.shape[1]
+    kv_int8 = "k_scale_pages" in cache
+    P, ps = cache["k_pages"].shape[0], cache["k_pages"].shape[1]
+
+    if decode:
+        cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))
+        pos = jnp.clip(cl - 1, 0, page_table.shape[1] * ps - 1)
+        entry = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+        flat = entry * ps + pos % ps           # sentinel entry (==P) ⇒ dropped
+        if kv_int8:
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            new_cache = {
+                "k_pages": _pool_scatter(cache["k_pages"], flat, kq[:, 0]),
+                "v_pages": _pool_scatter(cache["v_pages"], flat, vq[:, 0]),
+                "k_scale_pages": _pool_scatter(cache["k_scale_pages"], flat, ks[:, 0]),
+                "v_scale_pages": _pool_scatter(cache["v_scale_pages"], flat, vs[:, 0]),
+            }
+        else:
+            new_cache = {
+                "k_pages": _pool_scatter(cache["k_pages"], flat, k[:, 0]),
+                "v_pages": _pool_scatter(cache["v_pages"], flat, v[:, 0]),
+            }
+        new_cache = {kk: hints.constrain_kv_pages(vv) for kk, vv in new_cache.items()}
+        if ctx.use_pallas and not kv_int8:
+            from repro.kernels import ops as kops
+            out = kops.paged_decode_attention(
+                q, new_cache["k_pages"], new_cache["v_pages"], page_table, cl,
+                window=window, softcap=cfg.attn_softcap)
+        else:
+            out = decode_attention(
+                q, _pool_gather(new_cache["k_pages"], page_table),
+                _pool_gather(new_cache["v_pages"], page_table), cur_len=cl,
+                window=window, softcap=cfg.attn_softcap,
+                k_scale=(_pool_gather(new_cache["k_scale_pages"], page_table)
+                         if kv_int8 else None),
+                v_scale=(_pool_gather(new_cache["v_scale_pages"], page_table)
+                         if kv_int8 else None))
+        return out, new_cache
+
+    # ---- prefill: scatter the (suffix) window through the table, then attend
+    sl = (jnp.full((B,), S, jnp.int32) if cur_len is None
+          else jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,)))
+    pl_ = (jnp.zeros((B,), jnp.int32) if prefix_len is None
+           else jnp.broadcast_to(jnp.reshape(prefix_len, (-1,)).astype(jnp.int32),
+                                 (B,)))
+    abs_pos = pl_[:, None] + jnp.arange(S)[None, :]                  # (B, S)
+    row_valid = jnp.arange(S)[None, :] < sl[:, None]
+    entry = jnp.take_along_axis(
+        page_table, jnp.clip(abs_pos // ps, 0, page_table.shape[1] - 1), axis=1)
+    flat = jnp.where(row_valid, entry * ps + abs_pos % ps, P * ps).reshape(-1)
+    merge = lambda t: t.reshape((B * S,) + t.shape[2:])
+    if kv_int8:
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+        new_cache = {
+            "k_pages": _pool_scatter(cache["k_pages"], flat, merge(kq)),
+            "v_pages": _pool_scatter(cache["v_pages"], flat, merge(vq)),
+            "k_scale_pages": _pool_scatter(cache["k_scale_pages"], flat, merge(ks)),
+            "v_scale_pages": _pool_scatter(cache["v_scale_pages"], flat, merge(vs)),
+        }
+    else:
+        new_cache = {
+            "k_pages": _pool_scatter(cache["k_pages"], flat, merge(k)),
+            "v_pages": _pool_scatter(cache["v_pages"], flat, merge(v)),
+        }
+    new_cache = {kk: hints.constrain_kv_pages(vv) for kk, vv in new_cache.items()}
+    if prefix_len is None:
+        # cold admission: exactly the dense prefill attention (bitwise parity)
+        out = _prefill_attention(q, k, v, cfg, ctx, window=window,
+                                 seq_lens=None if cur_len is None else sl)
+    else:
+        out = paged_prefill_attention(
+            q, k, v, new_cache, page_table, prefix_len=pl_, suffix_len=sl,
+            window=window, softcap=cfg.attn_softcap)
+    return out, new_cache
+
+
 def attention_apply(
     params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext, *,
     local: bool = False, positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None, prefix_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sublayer (pre-norm residual is handled by the caller).
 
     cache: {"k": (B,T,Hkv,D), "v": ...} — prefill writes it, decode reads+appends.
-    Returns (output, new_cache).
+    Paged caches (``k_pages``/``v_pages`` pools + ``page_table``, DESIGN.md §3.8)
+    scatter through the table instead; ``prefix_len`` marks suffix prefill
+    against a shared paged prefix. Returns (output, new_cache).
 
     Per-slot length contract (DESIGN.md §3.6): ``cur_len`` may be a scalar (all
     slots aligned) or a (B,) int32 vector. Prefill prompts are right-padded —
-    positions start at 0, ``cur_len`` holds the valid prompt length per slot and
-    masks padded keys; decode ``cur_len`` is the per-slot post-append length:
-    the new token scatters into cache position ``cur_len - 1`` of its own slot.
+    positions start at 0 (at ``prefix_len[b]`` on the paged suffix path),
+    ``cur_len`` holds the valid prompt length per slot and masks padded keys;
+    decode ``cur_len`` is the per-slot post-append length: the new token
+    scatters into cache position ``cur_len - 1`` of its own slot.
     """
     B, S, d = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -271,9 +463,15 @@ def attention_apply(
     v = ctx.linear(params["wv"], x, "wv").reshape(B, S, Hkv, D)
 
     is_decode = cache is not None and S == 1
+    paged = cache is not None and "k_pages" in cache
     if positions is None:
         if is_decode and cur_len is not None:
             positions = jnp.reshape(cur_len, (-1, 1)) - 1        # (B|1, 1)
+        elif paged and prefix_len is not None:
+            # paged suffix prefill: suffix token i of slot b is absolute
+            # position prefix_len[b] + i
+            positions = (jnp.reshape(prefix_len, (-1, 1))
+                         + jnp.arange(S)[None, :])
         else:
             # train and (right-padded) prefill: absolute positions start at 0
             positions = jnp.arange(S)[None, :]
@@ -283,6 +481,12 @@ def attention_apply(
 
     window = cfg.window if local else None
     new_cache = None
+    if paged:
+        out, new_cache = _paged_attention(
+            q, k, v, cache, page_table, cfg, ctx, cur_len=cur_len,
+            prefix_len=prefix_len, window=window, decode=is_decode)
+        y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
+        return y, new_cache
     kv_int8 = cache is not None and "k_scale" in cache
     if is_decode:
         # decode: scatter the new token at each slot's own append position, then
@@ -315,19 +519,8 @@ def attention_apply(
         if cache is not None and cur_len is not None:
             # right-padded prefill: keys beyond each slot's prompt length are pad
             seq_lens = jnp.reshape(cur_len, (-1,))
-        if ctx.use_pallas and S >= 128:
-            # Fused flash-attention kernel (kernels/flash_attention.py): removes the
-            # S²-score-tile HBM traffic that dominates training cells (§Roofline).
-            from repro.kernels import ops as kops
-            out = kops.flash_attention(
-                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-                v.transpose(0, 2, 1, 3), kv_len=seq_lens, causal=cfg.causal,
-                window=window, softcap=cfg.attn_softcap).transpose(0, 2, 1, 3)
-        else:
-            out = blockwise_attention(
-                q, k, v, causal=cfg.causal, window=window, softcap=cfg.attn_softcap,
-                kv_valid_len=seq_lens,
-                q_block=min(1024, max(S, 16)), kv_block=min(1024, max(S, 16)))
+        out = _prefill_attention(q, k, v, cfg, ctx, window=window,
+                                 seq_lens=seq_lens)
         if cache is not None:
             # prefill: write kv into the cache prefix (in-flight attention above runs
             # on the unquantized k/v; only the *stored* cache is int8)

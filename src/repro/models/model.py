@@ -118,7 +118,8 @@ def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
 # ======================================================================================
 
 def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
-                    cache=None, cur_len=None, decode=False):
+                    cache=None, cur_len=None, decode=False, page_table=None,
+                    prefix_len=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -128,7 +129,8 @@ def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, 
     local = kind == "attn_local"
     h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
                                    ctx.sub("attn"), local=local, cache=cache,
-                                   cur_len=cur_len)
+                                   cur_len=cur_len, page_table=page_table,
+                                   prefix_len=prefix_len)
     x = x + h
     if kind == "attn_moe":
         h, aux = moe_lib.moe_apply(p["moe"], norm_apply(p["norm2"], x, cfg), cfg,
@@ -152,19 +154,61 @@ def _shared_block(p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
 # ======================================================================================
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=jnp.bfloat16,
-               *, kv_int8: bool = False) -> dict:
+               *, kv_int8: bool = False, layout: str = "dense",
+               page_size: int = 16, n_pages: Optional[int] = None) -> dict:
     """Pytree of per-layer caches, stacked (n_blocks, ...) to be scanned.
 
-    The batch axis is a *slot table* (DESIGN.md §3.6): each of the ``batch_size``
-    rows holds one in-flight sequence at its own length (``cur_len`` vector), so a
-    continuous batcher can retire and refill individual slots without touching the
-    others (serving/engine.py::_slot_scatter does the per-slot cache writes).
+    ``layout="dense"`` (default): the batch axis is a *slot table* (DESIGN.md
+    §3.6): each of the ``batch_size`` rows holds one in-flight sequence at its
+    own length (``cur_len`` vector), so a continuous batcher can retire and
+    refill individual slots without touching the others
+    (serving/engine.py::_slot_scatter does the per-slot cache writes).
+
+    ``layout="paged"`` (DESIGN.md §3.8): instead of a dense ``(B, max_len)`` row
+    per slot, every layer holds one physical page pool
+    ``(n_pages, page_size, kv_heads, head_dim)`` and slots address it through a
+    top-level ``page_table`` of shape ``(batch_size, max_len // page_size)``
+    int32 — entry value ``n_pages`` is the *invalid* sentinel (reads clamp, the
+    flat-index scatter drops). ``n_pages`` defaults to the dense-equivalent
+    capacity ``batch_size * max_len / page_size``; serving engines pass less and
+    rely on prefix sharing. Attention-only families — the SSM recurrence has no
+    sequence axis to page.
 
     ``kv_int8=True`` stores attention K/V as int8 codes plus per-token f32 scales
     (layers.kv_quantize) — ~2×/4× less decode HBM traffic vs bf16/f32 caches
     (DESIGN.md §3.3). SSM recurrence state always stays f32.
     """
     spec = block_spec(cfg)
+    if layout == "paged":
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(f"paged KV cache needs attention-only caches; "
+                             f"family {cfg.family!r} carries SSM state")
+        if max_len % page_size:
+            raise ValueError(f"page_size {page_size} must divide "
+                             f"max_len {max_len}")
+        n_pages = n_pages or batch_size * (max_len // page_size)
+
+        def one_paged(kind):
+            pool = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+            if kv_int8:
+                return {
+                    "k_pages": jnp.zeros(pool, jnp.int8),
+                    "v_pages": jnp.zeros(pool, jnp.int8),
+                    "k_scale_pages": jnp.zeros(pool[:3] + (1,), jnp.float32),
+                    "v_scale_pages": jnp.zeros(pool[:3] + (1,), jnp.float32),
+                }
+            return {"k_pages": jnp.zeros(pool, dtype),
+                    "v_pages": jnp.zeros(pool, dtype)}
+
+        return {
+            "blocks": [jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape),
+                one_paged(kind)) for kind in spec.sublayers],
+            "page_table": jnp.full((batch_size, max_len // page_size), n_pages,
+                                   jnp.int32),
+        }
+    if layout != "dense":
+        raise ValueError(f"unknown cache layout {layout!r}")
 
     def one(kind):
         if kind == "ssm":
@@ -246,6 +290,7 @@ def apply(
     params: dict, batch: dict, cfg: ModelConfig, *,
     ctx: Optional[QuantContext] = None, mode: str = "train",
     caches: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
+    prefix_len: Optional[jax.Array] = None,
     unroll: bool = False, remat: bool = False,
 ) -> Tuple[jax.Array, dict]:
     """Returns (logits, {"aux_loss": scalar, "caches": updated-or-None}).
@@ -257,6 +302,13 @@ def apply(
     ``cur_len`` holds per-slot prompt lengths — the returned logits are taken at
     each slot's own last valid position. Decode: ``cur_len`` is the per-slot
     post-append length; the token scatters into cache position ``cur_len - 1``.
+
+    Paged caches (``init_cache(layout="paged")``, DESIGN.md §3.8) carry their
+    ``page_table`` inside the cache pytree; it is threaded to every attention
+    layer unchanged (the serving engine owns its contents). ``prefix_len`` (B,)
+    marks prefill batches whose slots already hold a shared prefix of that many
+    tokens in their pages: the batch tokens are the *suffix*, positions start at
+    ``prefix_len[b]``, and ``cur_len`` counts suffix tokens only.
     """
     ctx = ctx or QuantContext(cfg.quant)
     spec = block_spec(cfg)
@@ -267,6 +319,10 @@ def apply(
     use_cache = mode in ("prefill", "decode")
     if use_cache and caches is None:
         raise ValueError("prefill/decode need caches (init_cache)")
+    page_table = caches.get("page_table") if use_cache else None
+    if prefix_len is not None and page_table is None:
+        raise ValueError("prefix_len needs a paged cache (its page_table routes "
+                         "the shared prefix)")
 
     def block_fn(x, block_params, block_caches, shared_cache, cur_len, bctx=None):
         bctx = bctx or ctx
@@ -277,7 +333,9 @@ def apply(
             c = block_caches[i] if use_cache else None
             x, nc, aux = _apply_sublayer(kind, block_params[i], x, cfg,
                                          bctx.sub(f"S{i}"),
-                                         cache=c, cur_len=cur_len, decode=decode)
+                                         cache=c, cur_len=cur_len, decode=decode,
+                                         page_table=page_table,
+                                         prefix_len=prefix_len)
             aux_sum += aux
             new_caches.append(nc if nc is not None else c)
         new_shared = shared_cache

@@ -24,6 +24,14 @@ requests are admitted into free slots mid-decode via length-bucketed padded pref
 and free their slot immediately. The decode step is a single jit'd function that
 folds greedy/temperature/top-k sampling in on-device, so the host loop only moves
 int32 token ids.
+
+Paged KV cache + radix prefix reuse (DESIGN.md §3.8): ``cache_layout="paged"``
+swaps the dense per-slot cache rows for a physical page pool addressed through a
+page table, with a host-side ref-counted allocator and a radix index over prompt
+chunks (serving/paging.py). Previously prefilled prefixes map into new requests
+copy-free (CrossQuant codes+scales are deterministic, so int8 pages share
+bit-exactly), partial tail pages copy-on-write, only the suffix prefills, and
+LRU-unreferenced cached prefixes evict under pool pressure.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ from repro.configs.base import ModelConfig
 from repro.core import qlinear as ql
 from repro.models import model as M
 from repro.models.layers import QuantContext
+from repro.serving import paging
 from repro.sharding import hints, planner
 
 #: serving path → QuantContext wiring (DESIGN.md §3.3). ``None`` keeps the legacy
@@ -186,6 +195,59 @@ def make_admit_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None, *,
     return admit_step
 
 
+def make_paged_admit_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
+                          *, path: Optional[str] = None, temperature: float = 0.0,
+                          top_k: int = 0, warm: bool = False):
+    """Admission prefill straight into the live page pool (DESIGN.md §3.8).
+
+    Unlike the dense slot table (fresh zero cache + ``_slot_scatter``), paged
+    admission writes K/V through each admitted row's page table into pages the
+    allocator handed it exclusively — other slots' pages are untouched by
+    construction, so no scatter-merge step is needed. ``warm=False`` traces the
+    cold path: plain right-padded prefill attention, bitwise-identical to the
+    dense layout. ``warm=True`` traces the shared-prefix path: the batch rows
+    are prompt *suffixes*, ``prefix`` (Bp,) counts tokens already present in the
+    mapped pages, and attention reads the prefix back from the pool
+    (layers.paged_prefill_attention). The engine dispatches per admission batch,
+    so cold batches never pay the warm lowering (or its gather).
+    """
+    ctx = _make_ctx(cfg, quant, path)
+    sample = _make_sampler(temperature, top_k)
+
+    def admit_step(params, tokens, lens, prefix, row_tables, caches, key):
+        """tokens (Bp, S) right-padded suffixes; lens (Bp,) suffix lengths;
+        prefix (Bp,) shared-prefix lengths (ignored on the cold lowering);
+        row_tables (Bp, maxP) per-row page tables (sentinel-filled padding rows
+        write nowhere). Returns (first sampled token (Bp,), updated caches with
+        the live page table restored)."""
+        c = dict(caches)
+        c["page_table"] = row_tables
+        logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx,
+                             mode="prefill", caches=c, cur_len=lens,
+                             prefix_len=prefix if warm else None)
+        out = dict(ex["caches"])
+        out["page_table"] = caches["page_table"]
+        return sample(logits[:, -1], key), out
+
+    return admit_step
+
+
+def _page_copy(caches: dict, src, dst, n_tok):
+    """Copy-on-write of a partially shared tail page (DESIGN.md §3.8): duplicate
+    the first ``n_tok`` token rows of physical page ``src`` into the freshly
+    allocated ``dst`` across every layer's pools (codes and int8 scale pages
+    alike); rows ≥ n_tok stay zero, exactly as a cold prefill would leave them
+    before writing the suffix."""
+    def cp(leaf):                       # (n_blocks, P, ps, Hkv, D|1)
+        row = leaf[:, src]
+        mask = jnp.arange(leaf.shape[2])[None, :, None, None] < n_tok
+        return leaf.at[:, dst].set(jnp.where(mask, row, jnp.zeros_like(row)))
+
+    out = dict(caches)
+    out["blocks"] = jax.tree_util.tree_map(cp, caches["blocks"])
+    return out
+
+
 def make_serve_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
                            *, path: Optional[str] = None, temperature: float = 0.0,
                            top_k: int = 0):
@@ -269,6 +331,21 @@ class ServeEngine:
     so an implicit ``eos=0`` would silently truncate on any pad-token sample; pass
     the tokenizer's real EOS id explicitly.
 
+    ``cache_layout="paged"`` (DESIGN.md §3.8) replaces the dense per-slot rows
+    with a page pool + page table: a ref-counted block allocator
+    (serving/paging.py) maps each sequence onto ``page_size``-token pages, a
+    radix index over prompt chunks maps previously prefilled prefixes into new
+    requests **copy-free** (partial tail pages copy-on-write), only the prompt
+    suffix is prefilled, and retirement decrefs pages with LRU eviction of
+    unreferenced cached prefixes under pool pressure. ``n_pages`` defaults to
+    the dense-equivalent capacity ``batch_size · max_len / page_size``; smaller
+    pools trade on sharing. Token-exact vs the dense layout on every path × KV
+    mode (tests/test_paged_serving.py). ``prefix_reuse=False`` keeps the paged
+    layout but always cold-prefills (the parity baseline).
+
+    ``cache_dtype`` sets the fp KV-cache dtype, defaulting to the params dtype
+    (a bf16 model serves a bf16 cache); ``kv_cache="int8"`` is unaffected.
+
     ``scheduler="grouped"`` keeps the admission policy of the pre-§3.6 engine
     (equal-exact-length groups, drained to completion) as the throughput baseline
     for ``benchmarks/serving_bench.py``.
@@ -288,13 +365,22 @@ class ServeEngine:
                  quant: Optional[ql.QuantConfig] = None,
                  eos_id: Optional[int] = None,
                  path: Optional[str] = None, kv_cache: str = "fp",
+                 cache_layout: str = "dense",
+                 page_size: int = 8, n_pages: Optional[int] = None,
+                 prefix_reuse: bool = True,
+                 cache_dtype=None,
                  scheduler: str = "continuous",
                  prefill_buckets: Optional[Sequence[int]] = None,
                  mesh: Optional[Mesh] = None,
                  plan: Optional["planner.Plan"] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert kv_cache in ("fp", "int8"), kv_cache
+        assert cache_layout in ("dense", "paged"), cache_layout
         assert scheduler in ("continuous", "grouped"), scheduler
+        self.paged = cache_layout == "paged"
+        if self.paged and scheduler != "continuous":
+            raise ValueError("the paged layout serves through the continuous "
+                             "scheduler (the grouped baseline stays dense)")
         self.cfg, self.params = cfg, params
         self.B, self.T = batch_size, max_len
         self.eos = eos_id
@@ -303,37 +389,89 @@ class ServeEngine:
         self.pad_prefill = cfg.family not in ("ssm", "hybrid")
         self.buckets = sorted(b for b in (prefill_buckets or default_buckets(max_len))
                               if b <= max_len)
-        admit = make_admit_step(cfg, quant, path=path, temperature=temperature,
-                                top_k=top_k)
+        if cache_dtype is None:
+            # fp KV caches follow the params dtype (a bf16 model serves a bf16
+            # cache) instead of silently promoting the whole pool to f32
+            flt = [leaf for leaf in jax.tree_util.tree_leaves(params)
+                   if hasattr(leaf, "dtype")
+                   and jnp.issubdtype(leaf.dtype, jnp.floating)]
+            cache_dtype = flt[0].dtype if flt else jnp.float32
+        self.cache_dtype = np.dtype(cache_dtype)
         decode = make_serve_decode_step(cfg, quant, path=path,
                                         temperature=temperature, top_k=top_k)
-        self.caches = M.init_cache(cfg, batch_size, max_len, dtype=jnp.float32,
-                                   kv_int8=self.kv_int8)
+        if self.paged:
+            # Paged pool + page table (DESIGN.md §3.8): the pool defaults to the
+            # dense-equivalent capacity; passing less relies on prefix sharing +
+            # eviction for the capacity win the benchmark measures.
+            self.ps = page_size
+            self.maxP = max_len // page_size
+            self.n_pages = n_pages or batch_size * self.maxP
+            self.pool = paging.PagePool(self.n_pages)
+            self.radix = paging.RadixIndex(page_size) if prefix_reuse else None
+            self._table = np.full((batch_size, self.maxP), self.n_pages, np.int32)
+            self._table_dirty = False
+            self._seq_pages: List[List[int]] = [[] for _ in range(batch_size)]
+            self.caches = M.init_cache(cfg, batch_size, max_len,
+                                       dtype=self.cache_dtype,
+                                       kv_int8=self.kv_int8, layout="paged",
+                                       page_size=page_size, n_pages=self.n_pages)
+            admit_cold = make_paged_admit_step(cfg, quant, path=path,
+                                               temperature=temperature,
+                                               top_k=top_k, warm=False)
+            admit_warm = make_paged_admit_step(cfg, quant, path=path,
+                                               temperature=temperature,
+                                               top_k=top_k, warm=True)
+        else:
+            self.caches = M.init_cache(cfg, batch_size, max_len,
+                                       dtype=self.cache_dtype,
+                                       kv_int8=self.kv_int8)
+            admit = make_admit_step(cfg, quant, path=path, temperature=temperature,
+                                    top_k=top_k)
         self.mesh = mesh
         self.plan = None
         if mesh is None:
-            self._admit_step = jax.jit(admit)
             self._decode_step = jax.jit(decode)
+            if self.paged:
+                self._admit_cold = jax.jit(admit_cold)
+                self._admit_warm = jax.jit(admit_warm)
+                self._copy_step = jax.jit(_page_copy)
+            else:
+                self._admit_step = jax.jit(admit)
         else:
             # TP-sharded serving (DESIGN.md §3.7): place the prepared integer tree
             # (weights + scale leaves), the slot-table caches (incl. int8-KV
-            # per-token scales) and jit the steps with NamedSharding-constrained
-            # in/out shardings so GSPMD partitions prefill/decode. Host tokens,
-            # lens, slots, cur_len and the PRNG key stay replicated. Cache in/out
-            # shardings match, so the carried slot table never reshard-pingpongs.
+            # per-token scales — and on the paged layout the page pools + their
+            # replicated page table) and jit the steps with NamedSharding-
+            # constrained in/out shardings so GSPMD partitions prefill/decode.
+            # Host tokens, lens, slots, cur_len and the PRNG key stay replicated.
+            # Cache in/out shardings match, so the carried state never
+            # reshard-pingpongs.
             self.plan = plan or planner.make_serve_plan(cfg, mesh)
             param_sh, cache_sh, repl = shard_serving_state(
                 params, self.caches, cfg, self.plan, mesh)
+            self._repl_sh = repl
             self.params = jax.device_put(params, param_sh)
             self.caches = jax.device_put(self.caches, cache_sh)
-            self._admit_step = jax.jit(
-                _hinted(admit, self.plan, mesh),
-                in_shardings=(param_sh, repl, repl, repl, cache_sh, repl),
-                out_shardings=(repl, cache_sh))
             self._decode_step = jax.jit(
                 _hinted(decode, self.plan, mesh),
                 in_shardings=(param_sh, repl, cache_sh, repl, repl),
                 out_shardings=(repl, cache_sh))
+            if self.paged:
+                admit_sh = dict(in_shardings=(param_sh, repl, repl, repl, repl,
+                                              cache_sh, repl),
+                                out_shardings=(repl, cache_sh))
+                self._admit_cold = jax.jit(_hinted(admit_cold, self.plan, mesh),
+                                           **admit_sh)
+                self._admit_warm = jax.jit(_hinted(admit_warm, self.plan, mesh),
+                                           **admit_sh)
+                self._copy_step = jax.jit(
+                    _page_copy, in_shardings=(cache_sh, repl, repl, repl),
+                    out_shardings=cache_sh)
+            else:
+                self._admit_step = jax.jit(
+                    _hinted(admit, self.plan, mesh),
+                    in_shardings=(param_sh, repl, repl, repl, cache_sh, repl),
+                    out_shardings=(repl, cache_sh))
         self.queue: List[Request] = []
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._pos = np.zeros(batch_size, np.int32)       # tokens in cache per slot
@@ -343,7 +481,12 @@ class ServeEngine:
         self._step = 0
         self._next_rid = 0
         self.stats = {"prefill_calls": 0, "decode_steps": 0,
-                      "active_slot_steps": 0, "mid_decode_admissions": 0}
+                      "active_slot_steps": 0, "mid_decode_admissions": 0,
+                      # paged layout (DESIGN.md §3.8); zero on dense engines
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "prompt_tokens": 0, "prefill_tokens": 0,
+                      "cow_copies": 0, "pages_evicted": 0,
+                      "peak_pages_in_use": 0}
 
     # ---------------------------------------------------------------- submission
 
@@ -375,6 +518,12 @@ class ServeEngine:
         steps = self.stats["decode_steps"]
         return self.stats["active_slot_steps"] / (steps * self.B) if steps else 0.0
 
+    def prefix_hit_rate(self) -> float:
+        """Fraction of submitted prompt tokens served from shared prefix pages
+        instead of being re-prefilled (paged layout; 0.0 on dense)."""
+        total = self.stats["prompt_tokens"]
+        return self.stats["prefix_tokens_reused"] / total if total else 0.0
+
     def _next_key(self) -> jax.Array:
         if self._greedy:            # sampler ignores the key: skip the fold_in op
             return self._key
@@ -383,7 +532,13 @@ class ServeEngine:
         return key
 
     def _emit(self, slot: int, tok: int, finished: List[Request]) -> None:
-        """Record one sampled token for a slot; retire the request when done."""
+        """Record one sampled token for a slot; retire the request when done.
+
+        Capacity headroom: a prompt of length ``max_len`` fills its cache row at
+        admission, so it is admitted-and-retired immediately with the single
+        token its prefill logits produced — the decode step never scatters past
+        the cache (the ``_pos >= T`` retire fires before any decode for that
+        slot; pinned by tests/test_paged_serving.py)."""
         r = self._slots[slot]
         r.out.append(tok)
         retire = (len(r.out) >= r.max_new
@@ -395,8 +550,183 @@ class ServeEngine:
             self._slots[slot] = None
             self._pos[slot] = 0
             self._pending[slot] = 0
+            if self.paged:
+                # drop this sequence's page references; pages retained by the
+                # radix index as cached prefixes survive (theirs is a separate
+                # reference), everything else returns to the free list
+                self.pool.decref(self._seq_pages[slot])
+                self._seq_pages[slot] = []
+                self._table[slot, :] = self.n_pages
+                self._table_dirty = True
         else:
             self._pending[slot] = tok
+
+    # ------------------------------------------------------------ paged planning
+
+    def _match_prefix(self, prompt: np.ndarray):
+        """Radix walk + the prefix-usability caps shared by planning and
+        bucketing: a request keeps ≥ 1 suffix token (the first sampled token
+        comes from the suffix prefill logits), so the usable full-page match is
+        clamped to ``(plen-1)//ps`` pages — and a clamped match invalidates the
+        partial tail hit (it hangs off the *unclamped* depth). Returns
+        ``(shared_pages, matched_tokens, cow_src_page_or_None, j)``."""
+        plen, ps = len(prompt), self.ps
+        if self.radix is None:
+            return [], 0, None, 0
+        pages, _, partial = self.radix.match(prompt)
+        n_full = min(len(pages), (plen - 1) // ps)
+        if n_full < len(pages):                # truncated ⇒ tail hit is invalid
+            partial = None
+        j = min(partial.length, plen - 1 - n_full * ps) if partial else 0
+        return (pages[:n_full], n_full * ps,
+                partial.page if j > 0 else None, j)
+
+    def _plan_paged(self, r: Request) -> Optional[dict]:
+        """Page plan for one request: walk the radix index for a shared prefix,
+        then reserve this sequence's worst-case page count (prompt + decode
+        budget, capped at the cache length — so decode never allocates, and an
+        admission either owns every page it will ever touch or stays queued).
+        Evicts LRU cached prefixes under pool pressure; returns None when the
+        pool cannot cover the request even after eviction.
+
+        Reference order matters: the shared pages (and the COW source page) are
+        incref'd *before* evict/alloc — a matched prefix held only by the index
+        has refs == 1 and would otherwise be evicted under pressure and handed
+        straight back as a writable own page of the very plan that matched it.
+        """
+        plen, ps = len(r.prompt), self.ps
+        shared, matched, cow_src, j = self._match_prefix(r.prompt)
+        self.pool.incref(shared)
+        if cow_src is not None:                # pin the COW source over evict
+            self.pool.incref([cow_src])
+        prefix = matched + j
+        # worst-case cache footprint: the prompt plus every *appended* decode
+        # token — the final sampled token retires the request without ever
+        # being scattered (see _emit), so the budget contributes max_new - 1
+        need = -(-min(plen + max(r.max_new - 1, 0), self.T) // ps)
+        own_n = need - len(shared)
+        own = self.pool.alloc(own_n)
+        if own is None and self.radix is not None:
+            self.stats["pages_evicted"] += self.radix.evict(self.pool, own_n)
+            own = self.pool.alloc(own_n)
+        if cow_src is not None:                # copy is issued before any write
+            self.pool.decref([cow_src])
+        if own is None:
+            self.pool.decref(shared)
+            return None
+        cow = (cow_src, own[0], j) if cow_src is not None else None
+        return {"prefix": prefix, "suffix": plen - prefix,
+                "pages": shared + own, "n_shared": len(shared), "cow": cow}
+
+    def _suffix_estimate(self, r: Request) -> int:
+        """Prefill-window estimate for bucketing (continuous, paged): prompt
+        minus the currently cached shared prefix (same capping rules as
+        ``_plan_paged`` via ``_match_prefix``). Commit-time replanning may
+        shrink the suffix further (new prefixes inserted this round) — still
+        fits the bucket; growth (eviction raced the estimate) defers the
+        request to the next admission round."""
+        if not self.paged:
+            return len(r.prompt)
+        _, matched, _, j = self._match_prefix(r.prompt)
+        return len(r.prompt) - matched - j
+
+    def _admit_paged_batch(self, batch: List[Request], bucket: int,
+                           free: List[int], finished: List[Request]) -> int:
+        """Admit up to ``len(free)`` paged requests in one suffix-prefill call.
+        Returns the number admitted; the rest rejoin the queue head."""
+        plans, deferred = [], []
+        for r in batch:
+            plan = self._plan_paged(r)
+            if plan is None or plan["suffix"] > bucket:
+                if plan is not None:       # un-reserve: replanned next round
+                    self.pool.decref(plan["pages"])
+                deferred.append(r)
+            else:
+                plans.append((r, plan))
+        if deferred:
+            self.queue = deferred + self.queue
+        if not plans:
+            return 0
+
+        rows = 1 << (len(plans) - 1).bit_length() if len(plans) > 1 else 1
+        tokens = np.zeros((rows, bucket), np.int32)
+        lens = np.ones(rows, np.int32)
+        prefixes = np.zeros(rows, np.int32)
+        row_tables = np.full((rows, self.maxP), self.n_pages, np.int32)
+        mid_decode = any(s is not None for s in self._slots)
+        warm = False
+        for j, (slot, (r, plan)) in enumerate(zip(free, plans)):
+            suffix = r.prompt[plan["prefix"]:]
+            tokens[j, : len(suffix)] = suffix
+            lens[j] = len(suffix)
+            prefixes[j] = plan["prefix"]
+            row_tables[j, : len(plan["pages"])] = plan["pages"]
+            if plan["cow"] is not None:
+                src, dst, ncopy = plan["cow"]
+                self.caches = self._copy_step(
+                    self.caches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32), jnp.asarray(ncopy, jnp.int32))
+                self.stats["cow_copies"] += 1
+            self._slots[slot] = r
+            self._seq_pages[slot] = plan["pages"]
+            self._table[slot, :] = self.n_pages
+            self._table[slot, : len(plan["pages"])] = plan["pages"]
+            warm = warm or plan["prefix"] > 0
+            self.stats["prompt_tokens"] += len(r.prompt)
+            self.stats["prefill_tokens"] += plan["suffix"]
+            self.stats["prefix_tokens_reused"] += plan["prefix"]
+            self.stats["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
+        self._table_dirty = True
+        step = self._admit_warm if warm else self._admit_cold
+        tok, self.caches = step(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(prefixes), jnp.asarray(row_tables), self.caches,
+            self._next_key())
+        tok = np.asarray(tok)
+        self.stats["prefill_calls"] += 1
+        if mid_decode:
+            self.stats["mid_decode_admissions"] += 1
+        self.stats["peak_pages_in_use"] = max(self.stats["peak_pages_in_use"],
+                                              self.pool.used_count)
+        for j, (slot, (r, plan)) in enumerate(zip(free, plans)):
+            if self.radix is not None:
+                # register the full prompt pages as a cached prefix (content is
+                # on-device once the admit step above retires)
+                self.radix.insert(r.prompt,
+                                  plan["pages"][: len(r.prompt) // self.ps],
+                                  self.pool)
+            self._pos[slot] = len(r.prompt)
+            self._emit(slot, int(tok[j]), finished)
+        return len(plans)
+
+    def _admit_dense_batch(self, batch: List[Request], bucket: int,
+                           free: List[int], finished: List[Request]) -> int:
+        # admission batch: rows padded to a power-of-two bucket so the set of
+        # prefill lowerings is the static (row bucket × length bucket) grid;
+        # sentinel slot index B marks padding rows (dropped by the scatter)
+        rows = 1 << (len(batch) - 1).bit_length() if len(batch) > 1 else 1
+        tokens = np.zeros((rows, bucket), np.int32)
+        lens = np.ones(rows, np.int32)
+        slot_ids = np.full(rows, self.B, np.int32)
+        mid_decode = any(s is not None for s in self._slots)
+        for j, (slot, r) in enumerate(zip(free, batch)):
+            tokens[j, : len(r.prompt)] = r.prompt
+            lens[j] = len(r.prompt)
+            slot_ids[j] = slot
+            self._slots[slot] = r
+            self.stats["prompt_tokens"] += len(r.prompt)
+            self.stats["prefill_tokens"] += len(r.prompt)
+        tok, self.caches = self._admit_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(slot_ids), self.caches, self._next_key())
+        tok = np.asarray(tok)
+        self.stats["prefill_calls"] += 1
+        if mid_decode:
+            self.stats["mid_decode_admissions"] += 1
+        for j, (slot, r) in enumerate(zip(free, batch)):
+            self._pos[slot] = len(r.prompt)
+            self._emit(slot, int(tok[j]), finished)
+        return len(batch)
 
     def _admit(self, finished: List[Request]) -> None:
         while self.queue:
@@ -409,42 +739,50 @@ class ServeEngine:
                 if len(free) < self.B:
                     return
                 bucket = len(self.queue[0].prompt)
-                fits = lambda r: len(r.prompt) == bucket
-            else:
-                bucket = self._bucket(len(self.queue[0].prompt))
-                fits = lambda r: self._bucket(len(r.prompt)) == bucket
-            batch, rest = [], []
-            for r in self.queue:
-                (batch if len(batch) < len(free) and fits(r) else rest).append(r)
-            self.queue = rest
-
-            # admission batch: rows padded to a power-of-two bucket so the set of
-            # prefill lowerings is the static (row bucket × length bucket) grid;
-            # sentinel slot index B marks padding rows (dropped by the scatter)
-            rows = 1 << (len(batch) - 1).bit_length() if len(batch) > 1 else 1
-            tokens = np.zeros((rows, bucket), np.int32)
-            lens = np.ones(rows, np.int32)
-            slot_ids = np.full(rows, self.B, np.int32)
-            mid_decode = any(s is not None for s in self._slots)
-            for j, (slot, r) in enumerate(zip(free, batch)):
-                tokens[j, : len(r.prompt)] = r.prompt
-                lens[j] = len(r.prompt)
-                slot_ids[j] = slot
-                self._slots[slot] = r
-            tok, self.caches = self._admit_step(
-                self.params, jnp.asarray(tokens), jnp.asarray(lens),
-                jnp.asarray(slot_ids), self.caches, self._next_key())
-            tok = np.asarray(tok)
-            self.stats["prefill_calls"] += 1
-            if mid_decode:
-                self.stats["mid_decode_admissions"] += 1
-            for j, (slot, r) in enumerate(zip(free, batch)):
-                self._pos[slot] = len(r.prompt)
-                self._emit(slot, int(tok[j]), finished)
-            if self.scheduler == "grouped":
+                batch, rest = [], []
+                for r in self.queue:
+                    (batch if len(batch) < len(free)
+                     and len(r.prompt) == bucket else rest).append(r)
+                self.queue = rest
+                self._admit_dense_batch(batch, bucket, free, finished)
                 return
+            # Continuous: pick the *largest admittable same-bucket group* over
+            # the whole queue, not queue[0]'s bucket — one odd-length
+            # head-of-line request must not split the majority bucket behind it
+            # into extra (smaller) prefill calls. Ties go to the bucket whose
+            # first request arrived earliest (FIFO fairness); the loop keeps
+            # admitting remaining buckets while slots stay free.
+            groups: dict = {}
+            first: dict = {}
+            for i, r in enumerate(self.queue):
+                b = self._bucket(self._suffix_estimate(r))
+                groups.setdefault(b, []).append(r)
+                first.setdefault(b, i)
+            bucket = max(groups,
+                         key=lambda b: (min(len(groups[b]), len(free)), -first[b]))
+            batch = groups[bucket][: len(free)]
+            taken = {id(r) for r in batch}
+            self.queue = [r for r in self.queue if id(r) not in taken]
+            if self.paged:
+                admitted = self._admit_paged_batch(batch, bucket, free, finished)
+            else:
+                admitted = self._admit_dense_batch(batch, bucket, free, finished)
+            if admitted == 0:
+                return                     # pool exhausted: wait for retirements
 
     # ---------------------------------------------------------------- main loop
+
+    def _push_table(self) -> None:
+        """Sync the host page table to the device cache pytree. Retired slots'
+        rows are sentinel-cleared *before* the next decode step: a free slot
+        still decodes (lock-step shapes) and its garbage token must scatter
+        nowhere — a stale table row would corrupt a page the allocator may have
+        already handed to another sequence or the prefix index."""
+        table = jnp.asarray(self._table)
+        if self.mesh is not None:
+            table = jax.device_put(table, self._repl_sh)
+        self.caches = {**self.caches, "page_table": table}
+        self._table_dirty = False
 
     def run(self) -> List[Request]:
         finished: List[Request] = []
@@ -452,7 +790,18 @@ class ServeEngine:
             self._admit(finished)
             active = [i for i, s in enumerate(self._slots) if s is not None]
             if not active:
+                if self.queue and self.paged:
+                    # nothing in flight yet the queue head could not be
+                    # admitted — no retirement will ever free enough pages
+                    raise RuntimeError(
+                        f"page pool too small: {self.n_pages} pages of "
+                        f"{self.ps} cannot hold request {self.queue[0].rid} "
+                        f"(prompt {len(self.queue[0].prompt)} + budget "
+                        f"{self.queue[0].max_new})")
+                assert not self.queue, "scheduler stalled with queued requests"
                 continue   # everything admitted retired at its first token
+            if self.paged and self._table_dirty:
+                self._push_table()
             cur = jnp.asarray(self._pos + 1, jnp.int32)   # post-append lengths
             tok, self.caches = self._decode_step(
                 self.params, jnp.asarray(self._pending), self.caches, cur,

@@ -235,6 +235,27 @@ def constrain_kv_cache(x: jax.Array) -> jax.Array:
     return _constrain(x, P(*spec))
 
 
+def constrain_kv_pages(x: jax.Array) -> jax.Array:
+    """(P, ps, Hkv, D|1) paged-KV pool leaf (codes, fp pages or int8 per-token
+    scale pages — DESIGN.md §3.8) — pin the physical page axis to the data axes
+    and the kv-head axis to the model axis when they divide, mirroring
+    planner.cache_shardings so the per-step page scatter keeps the pool's
+    placement instead of GSPMD resharding the whole pool every decode step.
+    The page table itself stays replicated (tiny, host-owned)."""
+    dp = _DP_AXES.get()
+    tp = _TP_AXIS.get()
+    if (dp is None and tp is None) or x.ndim < 4:
+        return x
+    spec = [None] * x.ndim
+    if dp is not None and x.shape[0] % _axis_size(dp) == 0:
+        spec[0] = dp
+    if tp is not None and x.shape[2] % _axis_size(tp) == 0:
+        spec[2] = tp
+    if all(s is None for s in spec):
+        return x
+    return _constrain(x, P(*spec))
+
+
 def constrain_vocab(logits: jax.Array) -> jax.Array:
     """(B, S, V_padded) logits — batch to dp, padded vocab to the model axis (the
     whole point of vocab_padded: logits shard over model instead of replicating)."""

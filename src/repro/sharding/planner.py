@@ -276,7 +276,11 @@ def cache_shardings(cache_tree, cfg: ModelConfig, plan: Plan, mesh: Mesh):
     int8 KV per-token scale leaves (``k_scale``/``v_scale``, (B,T,Hkv,1)) carry the
     same (B→dp, T→model) split as the codes they dequantize — a slot's scale row
     must live with its code row or every decode-step scatter pays a reshard.
-    SSM caches: B→dp, heads→model when divisible."""
+    Paged pools (``*_pages``, (P,ps,Hkv,D|1) — DESIGN.md §3.8): physical page
+    axis→dp, kv heads→model when divisible (there is no contiguous T axis to
+    sequence-shard; capacity scales with the dp-split page axis instead), with
+    the int8 scale pools following their code pools; the ``page_table`` and any
+    unrecognized leaf replicate. SSM caches: B→dp, heads→model when divisible."""
     def one(path, leaf):
         pathstr = _path_str(path)
         names = pathstr.split("/")
@@ -285,7 +289,12 @@ def cache_shardings(cache_tree, cfg: ModelConfig, plan: Plan, mesh: Mesh):
         off = 1 if stacked else 0
         spec: list = [None] * nd
         last = names[-1]
-        if last in ("k", "v", "k_scale", "v_scale"):
+        if last in ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages"):
+            if _maybe(plan.dp_axes, leaf.shape[off + 0], mesh):
+                spec[off + 0] = plan.dp_axes
+            if _maybe(plan.tp_axis, leaf.shape[off + 2], mesh):
+                spec[off + 2] = plan.tp_axis
+        elif last in ("k", "v", "k_scale", "v_scale"):
             if _maybe(plan.dp_axes, leaf.shape[off + 0], mesh):
                 spec[off + 0] = plan.dp_axes
             if plan.seq_shard_kv and _maybe(plan.tp_axis, leaf.shape[off + 1], mesh):

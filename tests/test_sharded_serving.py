@@ -5,7 +5,9 @@ continuous-batching workload through ``ServeEngine(mesh=...)`` at tp=2 (tier
 tp_full for the smoke config) and tp=4 (tier tp_kv_rep: 4 q heads divide, 2 kv
 heads degrade to replication) across the full path × KV-cache matrix —
 fake / dequant-fp / fused-int8 × fp / int8 — and asserts the emitted tokens are
-identical to the single-device engine, per request. The same subprocess pins the
+identical to the single-device engine, per request. The same matrix then runs
+the paged cache layout (DESIGN.md §3.8) at tp=2 on a shared-prefix workload:
+paged@tp2 with radix prefix hits must equal dense single-device, token-exact. The same subprocess pins the
 row-parallel int32-accumulator ordering (qlinear ref path bitwise vs
 single-device: the cross-shard reduction must happen on integer values before
 the f32 dequant multiply — hints.constrain_gemm_acc).
@@ -74,6 +76,39 @@ CODE = textwrap.dedent("""
                   flush=True)
             if not ok:
                 fails.append((tp, c))
+
+    # Paged layout (DESIGN.md §3.8) at tp=2: the page pool + radix prefix reuse
+    # must emit exactly the single-device *dense* tokens on a workload with
+    # shared-prefix admissions (warm suffix prefill, page-table-routed decode,
+    # pool sharded kv-heads-over-model / pages-over-data).
+    sharedp = rng.integers(1, cfg.vocab, size=16).astype(np.int32)
+    pprompts = prompts[:2] + [
+        np.concatenate([sharedp,
+                        rng.integers(1, cfg.vocab, size=4 + i).astype(np.int32)])
+        for i in range(2)]
+    PMAX_NEW = [4, 3, 5, 4]
+
+    def serve_paged(mesh, path, kv, layout):
+        p, quant = ((params, ql.W8A8_CROSSQUANT) if path == "fake"
+                    else (qparams, ql.W8A8_INT8))
+        eng = E.ServeEngine(cfg, p, batch_size=2, max_len=32, quant=quant,
+                            path=path, kv_cache=kv, mesh=mesh,
+                            cache_layout=layout, page_size=8)
+        eng.submit([x.copy() for x in pprompts], max_new=list(PMAX_NEW))
+        done = eng.run()
+        return {r.rid: r.out for r in done}, eng
+
+    mesh2 = make_debug_mesh(4, 2)
+    for c in COMBOS:
+        dense_base, _ = serve_paged(None, *c, "dense")
+        got, eng = serve_paged(mesh2, *c, "paged")
+        ok = got == dense_base and eng.stats["prefix_hits"] > 0
+        print(f"paged tp=2 path={c[0]} kv={c[1]} "
+              f"hits={eng.stats['prefix_hits']}: "
+              f"{'OK' if ok else 'MISMATCH ' + repr((got, dense_base))}",
+              flush=True)
+        if not ok:
+            fails.append(("paged", c))
 
     # row-parallel int32-accumulator ordering (ref backend, bitwise)
     mesh = make_debug_mesh(4, 2)
