@@ -14,7 +14,22 @@ What gates, against what:
 * Shared-prefix rows (``serving_bench_prefix`` — DESIGN.md §3.8): paged-layout
   rows gate on prefix **hit rate** against every baseline (a deterministic
   indexing invariant, like occupancy) and on paged **tok/s** against
-  same-runner baselines; dense rows are informational.
+  same-runner baselines; dense rows are informational. The **paged/dense
+  tok/s ratio** per path also gates, on same-runner baselines: it catches the
+  paged layout sliding back toward the gather-per-step regime the in-kernel
+  paged decode removed. Against cross-machine baselines the ratio reports
+  informationally — it is same-run relative, but both its noise floor and the
+  interpret-mode kernel overhead are machine-dependent.
+* Scheduler invariant (new snapshot only, no baseline needed): continuous
+  tok/s must be ≥ grouped tok/s for every non-``@tpN`` path — the slot-table
+  batcher exists to beat drain-to-completion grouping, and the one measured
+  inversion (fused-int8+kv8) came from the decode step copying the whole
+  4-leaf int8-KV cache every token (fixed by buffer donation,
+  ``serving/engine.py``).
+* A snapshot without usable ``serving_bench`` rows — module missing, its
+  subprocess failed (``ok: false``), or no data lines — is an **error**, for
+  baselines too: a partial ``--only`` run that dropped the serving module must
+  fail the gate, not pass it silently.
 * ``--baseline`` gates tok/s *and* occupancy — use it for snapshots from the
   same runner class (the previous main-branch CI artifact).
 * ``--occupancy-baseline`` gates occupancy only — use it for the committed
@@ -51,6 +66,37 @@ def serving_rows(snapshot: dict) -> dict:
     return rows
 
 
+def check_complete(snapshot: dict, label: str) -> list:
+    """Errors that make a snapshot unusable for serving gates: a missing /
+    failed / empty ``serving_bench`` module. Returned as failure lines."""
+    mod = snapshot.get("modules", {}).get("serving_bench")
+    if mod is None:
+        return [f"  {label}: incomplete snapshot — no serving_bench module"]
+    if not mod.get("ok", False):
+        return [f"  {label}: incomplete snapshot — serving_bench failed (ok: false)"]
+    if not serving_rows(snapshot):
+        return [f"  {label}: incomplete snapshot — serving_bench has no data rows"]
+    return []
+
+
+def scheduler_invariant(rows: dict) -> tuple[list, list]:
+    """continuous tok/s ≥ grouped tok/s per path (new snapshot only; ``@tpN``
+    twins are emulated-collective-bound and never gate)."""
+    report, failures = [], []
+    for path in sorted({p for p, _ in rows}):
+        if "@" in path:
+            continue
+        g, c = rows.get((path, "grouped")), rows.get((path, "continuous"))
+        if not g or not c:
+            continue
+        line = f"  {path}: continuous {c['tok_s']:.1f} vs grouped {g['tok_s']:.1f} tok/s"
+        if c["tok_s"] < g["tok_s"]:
+            line += "  REGRESSION (continuous < grouped)"
+            failures.append(line)
+        report.append(line)
+    return report, failures
+
+
 def prefix_rows(snapshot: dict) -> dict:
     """``(path, layout) -> {"tok_s", "hit_rate"}`` from the shared-prefix
     section (``serving_bench_prefix`` lines — DESIGN.md §3.8)."""
@@ -73,8 +119,30 @@ def compare_prefix(
     """Shared-prefix gates: paged-layout rows gate on prefix hit rate (a
     scheduling/indexing invariant, machine-independent — gated against every
     baseline) and on paged tok/s (wall-clock baselines only). Dense rows are
-    informational."""
+    informational. The paged/dense tok/s *ratio* per path also gates on
+    wall-clock (same-runner) baselines — it is same-run relative, but its
+    noise floor tracks the machine's interference profile and the interpret
+    overhead differs systematically across hardware, so against cross-machine
+    baselines it reports informationally like absolute tok/s."""
     report, failures = [], []
+    for path in sorted({p for p, _ in base}):
+        pairs = []
+        for rows in (base, new):
+            d, pg = rows.get((path, "dense")), rows.get((path, "paged"))
+            ratio = pg["tok_s"] / d["tok_s"] if d and pg and d["tok_s"] > 0 else None
+            pairs.append(ratio)
+        b_ratio, n_ratio = pairs
+        if b_ratio is None or n_ratio is None:
+            continue
+        drop = 1.0 - n_ratio / b_ratio
+        line = (
+            f"  prefix {path} paged/dense ratio: {b_ratio:.2f} -> {n_ratio:.2f} "
+            f"({-drop:+.1%} vs {tag})"
+        )
+        if wall_clock and drop > max_drop:
+            line += f"  REGRESSION (>{max_drop:.0%} drop)"
+            failures.append(line)
+        report.append(line)
     for key in sorted(base):
         path, layout = key
         if key not in new:
@@ -163,11 +231,16 @@ def main() -> None:
         new_snapshot = json.load(fh)
     new = serving_rows(new_snapshot)
     new_prefix = prefix_rows(new_snapshot)
-    if not new:
-        print(f"no serving_bench rows in {args.new} — nothing to gate")
+    all_failures = check_complete(new_snapshot, args.new)
+    if all_failures:
+        print("\n".join(all_failures))
         sys.exit(1)
 
-    all_failures = []
+    inv_report, inv_failures = scheduler_invariant(new)
+    print("scheduler invariant (continuous >= grouped):")
+    print("\n".join(inv_report) if inv_report else "  (no paired rows)")
+    all_failures += inv_failures
+
     baselines = [(p, True) for p in args.baseline] + [
         (p, False) for p in args.occupancy_baseline
     ]
@@ -176,7 +249,17 @@ def main() -> None:
             with open(path) as fh:
                 base_snapshot = json.load(fh)
         except (OSError, json.JSONDecodeError) as e:
-            print(f"baseline {path}: unreadable ({e}) — skipped")
+            # an unreadable baseline is the same failure mode as a partial one
+            # (check_complete below): it must fail the gate, not shrink it
+            line = f"  {path}: unreadable baseline ({e})"
+            print(line)
+            all_failures.append(line)
+            continue
+        incomplete = check_complete(base_snapshot, path)
+        if incomplete:
+            # an overwritten/partial baseline must fail the gate, not skip it
+            print("\n".join(incomplete))
+            all_failures += incomplete
             continue
         base = serving_rows(base_snapshot)
         scope = "tok/s + occupancy + prefix" if wall_clock else "occupancy + prefix"

@@ -11,7 +11,12 @@ Prints CSV sections; each line is ``<bench>,<key...>,<value...>``. The mapping t
 the paper's tables/figures is in DESIGN.md §7 and benchmarks/README.md; EXPERIMENTS.md
 quotes these outputs. ``--json PATH`` additionally writes the machine-readable
 ``BENCH_*.json`` snapshot (schema in benchmarks/README.md) used for cross-PR
-trajectory tracking.
+trajectory tracking. A partial run (``--only``) *merges* into an existing
+snapshot at PATH — modules not re-run keep their previous entries — and
+``total_seconds`` is always recomputed as the sum of the per-module seconds, so
+an ``--only`` pass can never shrink the committed baseline to its own runtime
+(the staleness the pre-merge writer produced: modules summing to 177.7s under a
+``total_seconds`` of 25.0).
 """
 from __future__ import annotations
 
@@ -39,7 +44,16 @@ def main() -> None:
     mods = args.only.split(",") if args.only else MODULES
     t_all = time.time()
     failures = []
-    snapshot = {"schema": 1, "quick": args.quick, "modules": {}}
+    snapshot = {"schema": 2, "quick": args.quick, "modules": {}}
+    if args.json and args.only and os.path.exists(args.json):
+        # partial run: merge into the existing snapshot so the modules this run
+        # skips keep their entries (and their seconds) instead of vanishing
+        try:
+            with open(args.json) as fh:
+                prev = json.load(fh)
+            snapshot["modules"].update(prev.get("modules", {}))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# existing snapshot {args.json} unreadable ({e}); rewriting")
     env = {**os.environ, "PYTHONPATH": os.environ.get("PYTHONPATH", "src")}
     for name in mods:
         t0 = time.time()
@@ -57,17 +71,21 @@ def main() -> None:
             sys.stderr.write(r.stderr[-2000:])
         dt = time.time() - t0
         snapshot["modules"][name] = {
-            "ok": ok, "seconds": round(dt, 1),
+            "ok": ok, "seconds": round(dt, 1), "quick": args.quick,
             "lines": [ln for ln in r.stdout.splitlines() if ln.strip()],
         }
         print(f"# {name} took {dt:.0f}s", flush=True)
-    snapshot["total_seconds"] = round(time.time() - t_all, 1)
+    # total = sum over *recorded* modules (merged entries included), never this
+    # invocation's wall clock alone
+    snapshot["total_seconds"] = round(
+        sum(m.get("seconds", 0.0) for m in snapshot["modules"].values()), 1)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as fh:
             json.dump(snapshot, fh, indent=1)
         print(f"# wrote {args.json}")
-    print(f"# total {snapshot['total_seconds']:.0f}s")
+    print(f"# this run {time.time() - t_all:.0f}s; "
+          f"snapshot modules total {snapshot['total_seconds']:.0f}s")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

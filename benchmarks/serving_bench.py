@@ -13,7 +13,11 @@ Reported per (path × scheduler): tokens/sec, slot occupancy (active-slot decode
 steps / total decode-step slots) and mid-decode refill count. CPU wall-clock —
 the structural win is occupancy; the kernel-level TPU projection lives in
 ``qgemm_bench``. Paths: fp baseline and the fused int8 kernels (+ int8 KV cache
-in the full pass).
+in the full pass). Every tok/s figure is the best of ``TIMED_PASSES``
+interleaved serves (grouped/continuous, and dense/paged in the prefix section,
+alternate passes) — the gated comparisons are ratios between rows, and on a
+shared runner a single ~1 s serve is hostage to whichever interference window
+it lands in.
 
 On hosts exposing ≥ 2 devices (the CI ``sharded-serving`` job forces 8 via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) every variant also runs
@@ -45,6 +49,13 @@ PROMPT_LENS = (6, 10, 14)
 BATCH_SIZE = 4
 MAX_LEN = 64
 PAGE_SIZE = 8
+#: timed passes per row (best-of): one pass of this workload serves in ~1 s,
+#: which on a shared CI runner is hostage to scheduler interference — observed
+#: 5× tok/s swings between identical runs. Max-of-5 estimates the uncontended
+#: throughput; the compile caches are shared (``_prep``) so extra passes cost
+#: serve time only, and the gated occupancy/hit-rate invariants are
+#: deterministic per pass anyway.
+TIMED_PASSES = 5
 
 
 def _workload(cfg, n_req: int, seed: int = 0):
@@ -73,45 +84,85 @@ def _prefix_workload(cfg, n_req: int, shared_len: int = 24, seed: int = 1):
     return prompts, max_new
 
 
-def _serve(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
-           mesh=None, cache_layout="dense"):
+def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
+          mesh=None, cache_layout="dense", steps=None, key=None):
+    """Warm the compile caches on one throwaway serve, then return a
+    ``one_pass()`` closure that serves the workload on a fresh engine and
+    returns ``(tok_s, engine)``. ``steps``/``key`` share the jit'd step
+    objects — and therefore their compile caches — across engines of the same
+    (variant, mesh, layout): the step functions do not depend on the scheduler
+    or on which bench section runs them, so grouped/continuous and the
+    main/shared-prefix sections compile each lowering once per process instead
+    of once per engine (the quick-CI wall-clock was dominated by those
+    recompiles)."""
     from repro.serving.engine import ServeEngine
     kw = dict(batch_size=BATCH_SIZE, max_len=MAX_LEN, quant=quant, path=path,
               kv_cache=kv_cache, scheduler=scheduler, mesh=mesh,
               cache_layout=cache_layout, page_size=PAGE_SIZE)
+
+    def extract(eng):
+        if cache_layout == "paged":
+            return {"decode": eng._decode_step, "cold": eng._admit_cold,
+                    "warm": eng._admit_warm, "copy": eng._copy_step}
+        return {"decode": eng._decode_step, "admit": eng._admit_step}
+
+    def attach(eng, shared):
+        eng._decode_step = shared["decode"]
+        if cache_layout == "paged":
+            eng._admit_cold = shared["cold"]
+            eng._admit_warm = shared["warm"]
+            eng._copy_step = shared["copy"]
+        else:
+            eng._admit_step = shared["admit"]
+
+    shared = steps.get(key) if steps is not None and key is not None else None
     eng = ServeEngine(cfg, params, **kw)
+    if shared is not None:
+        attach(eng, shared)
     eng.submit([p.copy() for p in prompts], max_new=list(max_new))
-    eng.run()                      # warm compile caches (fresh engine re-times)
-    eng2 = ServeEngine(cfg, params, **kw)
-    eng2._decode_step = eng._decode_step
-    if cache_layout == "paged":
-        eng2._admit_cold = eng._admit_cold
-        eng2._admit_warm = eng._admit_warm
-    else:
-        eng2._admit_step = eng._admit_step
-    eng2.submit([p.copy() for p in prompts], max_new=list(max_new))
-    t0 = time.perf_counter()
-    done = eng2.run()
-    dt = time.perf_counter() - t0
-    tok_s = sum(len(r.out) for r in done) / dt
-    return tok_s, eng2
+    eng.run()                      # warm compile caches (fresh engines re-time)
+    if steps is not None and key is not None and shared is None:
+        steps[key] = extract(eng)
+
+    def one_pass():
+        eng2 = ServeEngine(cfg, params, **kw)
+        attach(eng2, extract(eng))
+        eng2.submit([p.copy() for p in prompts], max_new=list(max_new))
+        t0 = time.perf_counter()
+        done = eng2.run()
+        dt = time.perf_counter() - t0
+        return sum(len(r.out) for r in done) / dt, eng2
+
+    return one_pass
 
 
-def _prefix_lines(cfg, variants, n_req: int):
-    """The shared-prefix section: dense vs paged per serving variant."""
+def _prefix_lines(cfg, variants, n_req: int, steps):
+    """The shared-prefix section: dense vs paged per serving variant. The two
+    layouts' timed passes are *interleaved* (dense, paged, dense, paged, ...):
+    the regression gate compares their tok/s as a ratio, and on a shared
+    runner an interference window spanning one layout's whole best-of block
+    would skew the ratio arbitrarily — adjacent passes see the same machine."""
     prompts, max_new = _prefix_workload(cfg, n_req)
     lines = ["serving_bench_prefix,path,layout,tok_s,hit_rate,prefill_tokens,"
              "prefill_saved,peak_pages,capacity_x"]
     dense_pages = BATCH_SIZE * MAX_LEN // PAGE_SIZE
     for tag, p, quant, path, kv in variants:
-        for layout in ("dense", "paged"):
-            tok_s, eng = _serve(cfg, p, prompts, max_new, quant=quant, path=path,
-                                kv_cache=kv, scheduler="continuous",
-                                cache_layout=layout)
+        passes = {
+            layout: _prep(cfg, p, prompts, max_new, quant=quant, path=path,
+                          kv_cache=kv, scheduler="continuous",
+                          cache_layout=layout, steps=steps, key=(tag, "", layout))
+            for layout in ("dense", "paged")}
+        best = dict.fromkeys(passes, 0.0)
+        engs = {}
+        for _ in range(TIMED_PASSES):
+            for layout, one_pass in passes.items():
+                tok_s, engs[layout] = one_pass()
+                best[layout] = max(best[layout], tok_s)
+        for layout, eng in engs.items():
             saved = eng.stats["prefix_tokens_reused"]
             peak = eng.stats["peak_pages_in_use"] or dense_pages
             lines.append(
-                f"serving_bench_prefix,{tag},{layout},{tok_s:.1f},"
+                f"serving_bench_prefix,{tag},{layout},{best[layout]:.1f},"
                 f"{eng.prefix_hit_rate():.3f},{eng.stats['prefill_tokens']},"
                 f"{saved},{peak},{dense_pages / peak:.2f}")
     return lines
@@ -146,20 +197,38 @@ def run(quick: bool = False):
         tp = 2
         meshes.append((f"@tp{tp}", make_debug_mesh(len(jax.devices()) // tp, tp)))
 
+    # one process-wide step cache: every (variant, mesh, layout) compiles its
+    # decode/admit lowerings once, shared across schedulers AND the
+    # shared-prefix section below (identical workloads and engine shapes, so
+    # the reuse cannot perturb the gated occupancy / hit-rate invariants)
+    steps: dict = {}
     lines = ["serving_bench,path,scheduler,tok_s,occupancy,refills_mid_decode"]
     for tag, p, quant, path, kv in variants:
         for mesh_tag, mesh in meshes:
-            for scheduler in ("grouped", "continuous"):
-                tok_s, eng = _serve(cfg, p, prompts, max_new, quant=quant,
-                                    path=path, kv_cache=kv,
-                                    scheduler=scheduler, mesh=mesh)
+            # both schedulers' timed passes interleave, mirroring
+            # _prefix_lines: the regress.py invariant gate compares
+            # continuous against grouped tok/s directly, so the two must
+            # sample the same interference windows
+            passes = {
+                scheduler: _prep(cfg, p, prompts, max_new, quant=quant,
+                                 path=path, kv_cache=kv, scheduler=scheduler,
+                                 mesh=mesh, steps=steps,
+                                 key=(tag, mesh_tag, "dense"))
+                for scheduler in ("grouped", "continuous")}
+            best = dict.fromkeys(passes, 0.0)
+            engs = {}
+            for _ in range(TIMED_PASSES):
+                for scheduler, one_pass in passes.items():
+                    tok_s, engs[scheduler] = one_pass()
+                    best[scheduler] = max(best[scheduler], tok_s)
+            for scheduler, eng in engs.items():
                 lines.append(f"serving_bench,{tag}{mesh_tag},{scheduler},"
-                             f"{tok_s:.1f},{eng.occupancy():.2f},"
+                             f"{best[scheduler]:.1f},{eng.occupancy():.2f},"
                              f"{eng.stats['mid_decode_admissions']}")
 
     # shared-system-prompt workload: dense vs paged prefix reuse (§3.8);
     # single-device only — the paged capacity story is layout, not TP. Like
     # occupancy, the hit rate is a gated deterministic invariant: quick and
     # full passes must serve the same workload (quick trims variants only).
-    lines += _prefix_lines(cfg, variants, n_req=12)
+    lines += _prefix_lines(cfg, variants, n_req=12, steps=steps)
     return lines

@@ -95,102 +95,189 @@ def _fa_kernel(q_ref, k_ref, v_ref, *refs,
         o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *,
-                         ps: int, n_pages_max: int, scale: float,
-                         window: Optional[int], softcap: Optional[float]):
+def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
+                         ps: int, n_pages_max: int, n_kv_heads: int,
+                         scale: float, window: Optional[int],
+                         softcap: Optional[float], kv_int8: bool):
     """Single-token decode attention through a page table (DESIGN.md §3.8).
 
-    grid = (B, Hkv, max_pages), page axis innermost. ``tab_ref`` is the
-    flattened (B·max_pages,) page table and ``kvlen_ref`` the (B,) valid
-    lengths — both scalar-prefetch inputs, so the k/v BlockSpecs gather each
-    logical page's physical tile straight from the pool (no (B, T, Hkv, D)
-    materialization). Online softmax state lives in VMEM scratch across the
-    page axis; pages at or beyond the valid length are dead (skipped), and the
-    in-page tail past ``kv_len`` masks by absolute position."""
+    grid = (B,). The K/V pools (and, int8-KV, the per-token scale pools) stay
+    resident in HBM (``memory_space=ANY``): the kernel walks each slot's *live*
+    pages with a double-buffered async-copy pipeline — while page ``j`` computes,
+    page ``j+1``'s (ps, Hkv, D) code tile (plus its (Hkv, ps) scale tiles) is
+    already in flight into the spare VMEM slot. Page indices come from the
+    scalar-prefetched flattened (B·max_pages,) page table in SMEM, so each
+    logical page's physical tile is DMA'd straight from the pool — the dense
+    (B, T, Hkv, D) view is never materialized, and dead/sentinel pages past the
+    (B,) ``kv_len`` are never fetched at all (the loop bound is
+    ``ceil(kv_len / ps)``).
+
+    Online softmax across the page loop; the kv-head axis is a static unrolled
+    loop (decode tiles are small — one (G, ps) score tile per head per page).
+    In-page tail positions past ``kv_len`` — and, with ``window``, positions
+    that have slid out — mask through the probability row:
+    ``p = where(mask, exp(s - m), 0)`` zeroes their l/acc contribution exactly
+    (bitwise equal to a -1e30 score mask, whose exp underflows to 0.0 in f32)
+    without per-position control flow.
+
+    ``kv_int8=True``: the K scale multiplies the score column and the V scale
+    folds into the probability row — the exact application points of the dense
+    ``layers.decode_attention`` int8 path, so the fused kernel shares its
+    quantization numerics (scale → softcap → mask → softmax)."""
+    if kv_int8:
+        ks_hbm, vs_hbm, o_ref = refs
+    else:
+        o_ref, = refs
     b = pl.program_id(0)
-    j = pl.program_id(2)
-
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
     kvl = kvlen_ref[b]
+    n_live = pl.cdiv(kvl, ps)
+    G, D = q_ref.shape[2], q_ref.shape[3]
+    P = k_hbm.shape[0]
 
-    @pl.when(j * ps < kvl)
-    def _tile():
-        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
-        k = k_ref[0, :, 0].astype(jnp.float32)            # (ps, D)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        if softcap is not None:
-            s = softcap * jnp.tanh(s / softcap)
-        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = k_pos < kvl
-        if window is not None:
-            # decode window semantics (layers.decode_attention): the newest
-            # token sits at kvl - 1
-            mask &= (kvl - 1 - k_pos) < window
-        s = jnp.where(mask, s, NEG_INF)
+    def body(kbuf, vbuf, sbuf, sem):
+        def dmas(slot, j):
+            # sentinel entries (≥ P) clamp to a valid page. For live rows the
+            # clamp is unreachable below kv_len (the engine maps every valid
+            # position to a real page), so the fetched bytes never contribute;
+            # a row whose table is *all* sentinel (a retired slot decoding in
+            # lock-step with kv_len ≥ 1) attends the clamped page and produces
+            # garbage-but-finite output — the engine discards it, and the
+            # oracle's (differently-)clamped gather is equally arbitrary there
+            # (pinned in tests/test_paged_serving.py).
+            page = jnp.minimum(
+                tab_ref[b * n_pages_max + jnp.minimum(j, n_pages_max - 1)], P - 1)
+            copies = [
+                pltpu.make_async_copy(k_hbm.at[page], kbuf.at[slot],
+                                      sem.at[slot, 0]),
+                pltpu.make_async_copy(v_hbm.at[page], vbuf.at[slot],
+                                      sem.at[slot, 1]),
+            ]
+            if kv_int8:
+                copies += [
+                    pltpu.make_async_copy(ks_hbm.at[page], sbuf.at[slot, 0],
+                                          sem.at[slot, 2]),
+                    pltpu.make_async_copy(vs_hbm.at[page], sbuf.at[slot, 1],
+                                          sem.at[slot, 3]),
+                ]
+            return copies
 
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
-        m_ref[...] = m_new
-        v = v_ref[0, :, 0].astype(jnp.float32)            # (ps, D)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        @pl.when(n_live > 0)
+        def _warmup():
+            for c in dmas(0, 0):
+                c.start()
 
-    @pl.when(j == n_pages_max - 1)
-    def _emit():
-        denom = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        def page_step(j, carry):
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n_live)
+            def _prefetch():
+                for c in dmas(1 - slot, j + 1):
+                    c.start()
+
+            for c in dmas(slot, j):
+                c.wait()
+            k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (G, ps), 1)
+            mask = k_pos < kvl
+            if window is not None:
+                # decode window semantics (layers.decode_attention): the
+                # newest token sits at kvl - 1
+                mask &= (kvl - 1 - k_pos) < window
+            scales = sbuf[slot] if kv_int8 else None          # (2, Hkv, ps)
+            out = []
+            for h in range(n_kv_heads):        # static unroll over kv heads
+                m_prev, l_prev, acc_prev = carry[h]
+                q = q_ref[0, h].astype(jnp.float32)           # (G, D)
+                k = kbuf[slot, :, h, :].astype(jnp.float32)   # (ps, D)
+                s = jax.lax.dot_general(
+                    q, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * scale
+                if kv_int8:
+                    # per-token K scale on the score column: one multiply per
+                    # (t, kv head) instead of dequantizing the (ps, D) tile
+                    s = s * scales[0, h:h + 1]                # (G, ps) * (1, ps)
+                if softcap is not None:
+                    s = softcap * jnp.tanh(s / softcap)
+                m_new = jnp.maximum(
+                    m_prev, jnp.max(jnp.where(mask, s, NEG_INF), axis=1))
+                p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+                corr = jnp.exp(m_prev - m_new)
+                v = vbuf[slot, :, h, :].astype(jnp.float32)   # (ps, D)
+                pv = p * scales[1, h:h + 1] if kv_int8 else p  # V scale → probs
+                out.append((m_new, l_prev * corr + jnp.sum(p, axis=1),
+                            acc_prev * corr[:, None] + jax.lax.dot_general(
+                                pv, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)))
+            return tuple(out)
+
+        init = tuple((jnp.full((G,), NEG_INF, jnp.float32),
+                      jnp.zeros((G,), jnp.float32),
+                      jnp.zeros((G, D), jnp.float32))
+                     for _ in range(n_kv_heads))
+        state = jax.lax.fori_loop(0, n_live, page_step, init)
+        for h in range(n_kv_heads):
+            _, l, acc = state[h]
+            o_ref[0, h] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+    pl.run_scoped(
+        body,
+        kbuf=pltpu.VMEM((2,) + k_hbm.shape[1:], k_hbm.dtype),
+        vbuf=pltpu.VMEM((2,) + v_hbm.shape[1:], v_hbm.dtype),
+        sbuf=pltpu.VMEM((2, 2, n_kv_heads, ps), jnp.float32),
+        sem=pltpu.SemaphoreType.DMA((2, 4)),
+    )
 
 
 def paged_decode_attention_pallas(
     q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     page_table: jax.Array, kv_len: jax.Array, *,
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
     window: Optional[int] = None, softcap: Optional[float] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """q: (B, Hkv, G, D); k/v pages: (P, ps, Hkv, D); page_table: (B, maxP)
-    int32 (entries ≥ P are invalid — clamped in the index map and masked by
-    ``kv_len``); kv_len: (B,) int32 → (B, Hkv, G, D).
+    int32 (entries ≥ P are invalid — clamped in the kernel and masked by
+    ``kv_len``); kv_len: (B,) int32 with kv_len ≤ maxP·ps → (B, Hkv, G, D).
+    The pools stay in HBM; the kernel DMAs each live page's tile on demand
+    (double-buffered — see ``_paged_decode_kernel``).
 
-    TPU notes: ps should be a multiple of 8 and D of 128 for native tiling;
-    CI and the oracle-parity tests run ``interpret=True`` on any backend.
+    ``k_scale``/``v_scale`` (both or neither): int8-KV per-token scales in the
+    kernel-native (P, Hkv, ps) row layout — ``ops.paged_decode_attention``
+    transposes the engine's (P, ps, Hkv, 1) scale pools, D× smaller than the
+    code pools. Their tiles ride the same per-page DMA pipeline as the code
+    tiles and apply in-kernel at the score/prob level (dense
+    ``decode_attention`` numerics) — the int8 path never materializes a dense
+    (B, T, ...) view either.
+
+    TPU notes: ps should be a multiple of 8 and D of 128 for native tiling
+    (int8 code pools want ps ≥ 32 sublanes); CI and the oracle-parity tests run
+    ``interpret=True`` on any backend.
     """
     B, Hkv, G, D = q.shape
     P, ps = k_pages.shape[0], k_pages.shape[1]
     maxP = page_table.shape[1]
     assert page_table.shape == (B, maxP) and kv_len.shape == (B,)
+    kv_int8 = k_scale is not None
+    assert kv_int8 == (v_scale is not None), "pass both scale pools or neither"
 
     kernel = functools.partial(
-        _paged_decode_kernel, ps=ps, n_pages_max=maxP, scale=D ** -0.5,
-        window=window, softcap=softcap)
-    # scalar-prefetch index maps: (grid..., *scalar_refs); clamp sentinel
-    # entries to a valid page — they are masked by kv_len inside the kernel
-    page_of = lambda b, j, tab: jnp.minimum(tab[b * maxP + j], P - 1)
+        _paged_decode_kernel, ps=ps, n_pages_max=maxP, n_kv_heads=Hkv,
+        scale=D ** -0.5, window=window, softcap=softcap, kv_int8=kv_int8)
+    in_specs = [
+        pl.BlockSpec((1, Hkv, G, D), lambda b, tab, kvl: (b, 0, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),        # k pool, paged via DMA
+        pl.BlockSpec(memory_space=pltpu.ANY),        # v pool
+    ]
+    args = [q, k_pages, v_pages]
+    if kv_int8:
+        assert k_scale.shape == v_scale.shape == (P, Hkv, ps), (
+            k_scale.shape, (P, Hkv, ps))
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, Hkv, maxP),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, j, tab, kvl: (b, h, 0, 0)),
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, j, tab, kvl: (page_of(b, j, tab), 0, h, 0)),
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, j, tab, kvl: (page_of(b, j, tab), 0, h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, tab, kvl: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G, D), jnp.float32),
-        ],
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Hkv, G, D), lambda b, tab, kvl: (b, 0, 0, 0)),
     )
     return pl.pallas_call(
         kernel,
@@ -198,7 +285,7 @@ def paged_decode_attention_pallas(
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
         interpret=interpret,
     )(page_table.reshape(-1).astype(jnp.int32), kv_len.astype(jnp.int32),
-      q, k_pages, v_pages)
+      *args)
 
 
 def flash_attention_pallas(

@@ -148,36 +148,54 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len=None, *,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh"))
-def _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, *,
+def _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
+                            k_scale_pages, v_scale_pages, *,
                             window, softcap, mesh):
     B, S, H, D = q.shape
     Hkv = k_pages.shape[2]
     G = H // Hkv
 
-    def body(q, k_pages, v_pages, page_table, kv_len):
+    def body(q, k_pages, v_pages, page_table, kv_len, k_scale_pages,
+             v_scale_pages):
         qg = q.reshape(B, Hkv, G, D)
+        ks = vs = None
+        if k_scale_pages is not None:
+            # (P, ps, Hkv, 1) scale pools → the kernel's (P, Hkv, ps) row
+            # tiles. The transpose touches scale bytes only (D× less than the
+            # code pools) and runs inside the manual region, so the partitioner
+            # never sees it (DESIGN.md §3.7 interpret-emulation caveat).
+            ks = jnp.transpose(k_scale_pages[..., 0], (0, 2, 1))
+            vs = jnp.transpose(v_scale_pages[..., 0], (0, 2, 1))
         out = _fa.paged_decode_attention_pallas(
             qg, k_pages, v_pages, page_table,
             jnp.broadcast_to(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+            k_scale=ks, v_scale=vs,
             window=window, softcap=softcap, interpret=_interpret())
         return out.reshape(B, 1, H, D)
 
-    return hints.manual_kernel(body, (q, k_pages, v_pages, page_table, kv_len),
-                               mesh=mesh)
+    return hints.manual_kernel(
+        body, (q, k_pages, v_pages, page_table, kv_len, k_scale_pages,
+               v_scale_pages), mesh=mesh)
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                            page_table: jax.Array, kv_len: jax.Array, *,
+                           k_scale_pages=None, v_scale_pages=None,
                            window=None, softcap=None) -> jax.Array:
     """Paged single-token decode attention (DESIGN.md §3.8): q (B,1,H,D) against
     (P, ps, Hkv, D) pools addressed through a (B, maxP) int32 page table with
     per-slot valid lengths ``kv_len`` (scalar or (B,)) → (B,1,H,D).
 
     The kernel gathers each logical page's physical K/V tile via scalar-prefetch
-    page indices — the dense (B, T, Hkv, D) view is never materialized. fp pools
-    only: the int8-KV paged path applies its per-token scales at the score level
-    in layers.decode_attention instead."""
+    page indices — the dense (B, T, Hkv, D) view is never materialized. With
+    ``k_scale_pages``/``v_scale_pages`` ((P, ps, Hkv, 1) f32) the pools hold
+    int8 codes: the per-token scale tiles ride the same prefetched page indices
+    and apply in-kernel at the score/prob level, the exact application points of
+    the dense ``layers.decode_attention`` int8 path — every paged decode path
+    (fp, int8-KV) serves through this kernel. Under a TP-sharded serving plan
+    the body (scale-pool relayout included) runs as one GSPMD-manual region."""
     return _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
+                                   k_scale_pages, v_scale_pages,
                                    window=window, softcap=softcap,
                                    mesh=hints.current_mesh())
 

@@ -64,6 +64,8 @@ def act_quantize_ref(x: jax.Array, bcol: jax.Array, bits: int = 8,
 def paged_decode_attention_ref(
     q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     page_table: jax.Array, kv_len: jax.Array, *,
+    k_scale_pages: jax.Array | None = None,
+    v_scale_pages: jax.Array | None = None,
     window: int | None = None, softcap: float | None = None) -> jax.Array:
     """Paged single-token decode attention oracle (DESIGN.md §3.8).
 
@@ -72,6 +74,13 @@ def paged_decode_attention_ref(
     invalid: clamped here, masked by kv_len); kv_len: (B,) valid lengths with
     the newest token at kv_len - 1. Gathers the logical (B, maxP·ps, Hkv, D)
     view and runs plain-softmax attention in f32 → (B, Hkv, G, D).
+
+    ``k_scale_pages``/``v_scale_pages`` (P, ps, Hkv, 1) f32: the pools hold
+    int8 codes and per-token scales. The gathered scale view multiplies the
+    score column / probability row exactly as the dense
+    ``layers.decode_attention`` int8 path does (scale → softcap → mask →
+    softmax) — this *is* the dense int8-KV numerics on the logical view, the
+    semantic ground truth the fused in-kernel dequant must match.
     """
     P, ps = k_pages.shape[0], k_pages.shape[1]
     B, maxP = page_table.shape
@@ -80,7 +89,14 @@ def paged_decode_attention_ref(
                     0, P * ps - 1).reshape(B, maxP * ps)
     kf = k_pages.reshape(P * ps, *k_pages.shape[2:])[gidx].astype(jnp.float32)
     vf = v_pages.reshape(P * ps, *v_pages.shape[2:])[gidx].astype(jnp.float32)
+
+    def score_scales(pool):        # (P, ps, Hkv, 1) → (B, Hkv, 1, T) broadcast
+        flat = pool.reshape(P * ps, pool.shape[2])[gidx]          # (B, T, Hkv)
+        return jnp.transpose(flat, (0, 2, 1))[:, :, None, :]
+
     s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32), kf) * (D ** -0.5)
+    if k_scale_pages is not None:
+        s = s * score_scales(k_scale_pages)
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     t_pos = jnp.arange(maxP * ps)[None, None, None, :]
@@ -90,6 +106,8 @@ def paged_decode_attention_ref(
         valid &= (cl - 1 - t_pos) < window
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    if v_scale_pages is not None:
+        p = p * score_scales(v_scale_pages)
     return jnp.einsum("bhgt,bthd->bhgd", p, vf).astype(q.dtype)
 
 

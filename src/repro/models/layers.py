@@ -227,9 +227,11 @@ def _pool_scatter(pool: jax.Array, flat_idx: jax.Array, rows: jax.Array) -> jax.
 def _pool_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     """Materialize the logical (B, max_pages·ps, Hkv, D|1) view of a pool through
     the page table. Sentinel entries clamp to an arbitrary valid page — callers
-    mask those positions by ``cur_len`` before the softmax. With
-    ``max_pages·ps == max_len`` the result is positionally identical to a dense
-    (B, T, ...) cache row, which is what makes paged↔dense decode bit-exact."""
+    mask those positions before the softmax. With ``max_pages·ps == max_len``
+    the result is positionally identical to a dense (B, T, ...) cache row.
+    Warm-prefix *prefill* only (``paged_prefill_attention`` reads the shared
+    prefix back once per admission): decode never gathers — it runs the
+    gather-free Pallas paged kernel on every path (DESIGN.md §3.8)."""
     P, ps = pool.shape[0], pool.shape[1]
     gidx = page_table[:, :, None] * ps + jnp.arange(ps)[None, None, :]
     gidx = jnp.clip(gidx, 0, P * ps - 1).reshape(page_table.shape[0], -1)
@@ -351,11 +353,13 @@ def _paged_attention(q, k, v, cache: dict, page_table: Optional[jax.Array],
                      cfg: ModelConfig, ctx: QuantContext, *,
                      cur_len, prefix_len, window: Optional[int], decode: bool):
     """Attention against a paged pool (DESIGN.md §3.8): scatter the new K/V
-    through the page table, then attend. Decode reads the pool back into the
-    dense (B, max_pages·ps, ...) layout and reuses ``decode_attention`` (the
-    per-token int8 scale handling included) so paged decode is bit-identical to
-    the dense slot table; with ``ctx.use_pallas`` and an fp pool the gather-free
-    Pallas paged kernel serves instead. Returns (out, new_cache)."""
+    through the page table, then attend. Every decode path — fp pools and int8
+    codes + per-token scale pools alike, on all serving paths — runs the
+    gather-free Pallas paged kernel (``ops.paged_decode_attention``): the scale
+    tiles ride the same scalar-prefetched page indices as the code tiles and
+    dequantize in-kernel at the score/prob level, the dense
+    ``decode_attention`` application points, so the dense (B, max_pages·ps, ...)
+    view is never materialized at decode. Returns (out, new_cache)."""
     if page_table is None:
         raise ValueError("paged cache without a page_table")
     B, S = q.shape[0], q.shape[1]
@@ -382,20 +386,12 @@ def _paged_attention(q, k, v, cache: dict, page_table: Optional[jax.Array],
                 "v_pages": _pool_scatter(cache["v_pages"], flat, v[:, 0]),
             }
         new_cache = {kk: hints.constrain_kv_pages(vv) for kk, vv in new_cache.items()}
-        if ctx.use_pallas and not kv_int8:
-            from repro.kernels import ops as kops
-            out = kops.paged_decode_attention(
-                q, new_cache["k_pages"], new_cache["v_pages"], page_table, cl,
-                window=window, softcap=cfg.attn_softcap)
-        else:
-            out = decode_attention(
-                q, _pool_gather(new_cache["k_pages"], page_table),
-                _pool_gather(new_cache["v_pages"], page_table), cur_len=cl,
-                window=window, softcap=cfg.attn_softcap,
-                k_scale=(_pool_gather(new_cache["k_scale_pages"], page_table)
-                         if kv_int8 else None),
-                v_scale=(_pool_gather(new_cache["v_scale_pages"], page_table)
-                         if kv_int8 else None))
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q, new_cache["k_pages"], new_cache["v_pages"], page_table, cl,
+            k_scale_pages=new_cache.get("k_scale_pages"),
+            v_scale_pages=new_cache.get("v_scale_pages"),
+            window=window, softcap=cfg.attn_softcap)
         return out, new_cache
 
     # ---- prefill: scatter the (suffix) window through the table, then attend

@@ -429,14 +429,21 @@ class ServeEngine:
                                     top_k=top_k)
         self.mesh = mesh
         self.plan = None
+        # Every step donates its ``caches`` argument: the engine owns exactly one
+        # live cache pytree (each call's output replaces ``self.caches``), so XLA
+        # scatters the decode-step KV append — and the int8-KV scale append —
+        # into the existing buffers instead of copying the whole multi-GiB cache
+        # per token. Without donation the per-step full-cache copy dominated the
+        # slot-table decode and inverted continuous-vs-grouped throughput on the
+        # 4-leaf int8-KV cache (EXPERIMENTS.md §Perf).
         if mesh is None:
-            self._decode_step = jax.jit(decode)
+            self._decode_step = jax.jit(decode, donate_argnums=2)
             if self.paged:
-                self._admit_cold = jax.jit(admit_cold)
-                self._admit_warm = jax.jit(admit_warm)
-                self._copy_step = jax.jit(_page_copy)
+                self._admit_cold = jax.jit(admit_cold, donate_argnums=5)
+                self._admit_warm = jax.jit(admit_warm, donate_argnums=5)
+                self._copy_step = jax.jit(_page_copy, donate_argnums=0)
             else:
-                self._admit_step = jax.jit(admit)
+                self._admit_step = jax.jit(admit, donate_argnums=4)
         else:
             # TP-sharded serving (DESIGN.md §3.7): place the prepared integer tree
             # (weights + scale leaves), the slot-table caches (incl. int8-KV
@@ -455,23 +462,23 @@ class ServeEngine:
             self._decode_step = jax.jit(
                 _hinted(decode, self.plan, mesh),
                 in_shardings=(param_sh, repl, cache_sh, repl, repl),
-                out_shardings=(repl, cache_sh))
+                out_shardings=(repl, cache_sh), donate_argnums=2)
             if self.paged:
                 admit_sh = dict(in_shardings=(param_sh, repl, repl, repl, repl,
                                               cache_sh, repl),
                                 out_shardings=(repl, cache_sh))
                 self._admit_cold = jax.jit(_hinted(admit_cold, self.plan, mesh),
-                                           **admit_sh)
+                                           donate_argnums=5, **admit_sh)
                 self._admit_warm = jax.jit(_hinted(admit_warm, self.plan, mesh),
-                                           **admit_sh)
+                                           donate_argnums=5, **admit_sh)
                 self._copy_step = jax.jit(
                     _page_copy, in_shardings=(cache_sh, repl, repl, repl),
-                    out_shardings=cache_sh)
+                    out_shardings=cache_sh, donate_argnums=0)
             else:
                 self._admit_step = jax.jit(
                     _hinted(admit, self.plan, mesh),
                     in_shardings=(param_sh, repl, repl, repl, cache_sh, repl),
-                    out_shardings=(repl, cache_sh))
+                    out_shardings=(repl, cache_sh), donate_argnums=4)
         self.queue: List[Request] = []
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._pos = np.zeros(batch_size, np.int32)       # tokens in cache per slot

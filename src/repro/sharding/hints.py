@@ -295,7 +295,14 @@ def manual_kernel(fn, args: tuple, mesh=None):
     partitioner out of the loop entirely. Weights stay *stored* sharded — the
     per-device HBM win — and are gathered at this boundary; partitioning the
     kernel grid itself over the mesh (Mosaic) is future work. No-op when ``mesh``
-    is None."""
+    is None.
+
+    ``args`` may carry ``None`` leaves for optional operands — e.g. the paged
+    decode kernel's int8-KV per-token scale pools (DESIGN.md §3.8), absent on
+    fp pools: the per-leaf ``tree_map`` leaves them un-spec'd, so one boundary
+    serves both the fp and int8-KV operand tuples (any operand relayout, like
+    the scale pools' (P, ps, Hkv, 1)→(P, Hkv, ps) transpose, belongs *inside*
+    ``fn`` where the partitioner cannot touch it)."""
     if mesh is None:
         return fn(*args)
     from jax.experimental.shard_map import shard_map

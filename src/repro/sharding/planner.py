@@ -280,7 +280,12 @@ def cache_shardings(cache_tree, cfg: ModelConfig, plan: Plan, mesh: Mesh):
     axis→dp, kv heads→model when divisible (there is no contiguous T axis to
     sequence-shard; capacity scales with the dp-split page axis instead), with
     the int8 scale pools following their code pools; the ``page_table`` and any
-    unrecognized leaf replicate. SSM caches: B→dp, heads→model when divisible."""
+    unrecognized leaf replicate. These placements govern *storage*: at the
+    decode step the paged kernel consumes code and scale pools alike as
+    operands of one ``hints.manual_kernel`` region (gathered at that boundary),
+    so scale pools sharding differently from their codes would only add a
+    reshard — following the code pools keeps scatter and gather symmetric.
+    SSM caches: B→dp, heads→model when divisible."""
     def one(path, leaf):
         pathstr = _path_str(path)
         names = pathstr.split("/")
