@@ -169,6 +169,88 @@ def compare_prefix(
     return report, failures
 
 
+def spec_rows(snapshot: dict) -> dict:
+    """``(path, mode) -> {"tok_s", "accept_rate", "tokens_per_step"}`` from the
+    speculative section (``serving_bench_spec`` lines — DESIGN.md §3.9).
+    Empty for pre-speculative snapshots (schema bump: the section was added
+    with the speculative-decoding PR) — callers treat that as "no spec gates",
+    not as an incomplete snapshot."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("serving_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 6 or parts[0] != "serving_bench_spec" or parts[1] == "path":
+            continue
+        rows[(parts[1], parts[2])] = {
+            "tok_s": float(parts[3]),
+            "accept_rate": float(parts[4]),
+            "tokens_per_step": float(parts[5]),
+        }
+    return rows
+
+
+def spec_invariant(rows: dict) -> tuple[list, list]:
+    """Same-snapshot speculative gates (no baseline needed): per path,
+    ``spec`` tok/s must be ≥ ``nospec`` tok/s — on the repetition-heavy bench
+    workload a verify step amortizes over ~2-3 emitted tokens, so speculation
+    losing to plain decode means the verify path got expensive or acceptance
+    collapsed — and the draft acceptance rate must be positive (a zero rate
+    means the drafter never landed a token and the tok/s row silently measures
+    pure overhead)."""
+    report, failures = [], []
+    for path in sorted({p for p, _ in rows}):
+        s, n = rows.get((path, "spec")), rows.get((path, "nospec"))
+        if not s or not n:
+            continue
+        line = (
+            f"  {path}: spec {s['tok_s']:.1f} vs nospec {n['tok_s']:.1f} tok/s "
+            f"(accept {s['accept_rate']:.2f}, {s['tokens_per_step']:.2f} tok/step)"
+        )
+        if s["tok_s"] < n["tok_s"]:
+            line += "  REGRESSION (spec < nospec)"
+            failures.append(line)
+        if s["accept_rate"] <= 0.0:
+            line += "  REGRESSION (zero acceptance)"
+            failures.append(line)
+        report.append(line)
+    return report, failures
+
+
+def compare_spec(
+    new: dict, base: dict, max_drop: float, tag: str, wall_clock: bool
+) -> tuple[list, list]:
+    """Speculative gates against a baseline: ``spec`` rows gate on **accept
+    rate** (deterministic drafter/workload invariant, machine-independent —
+    every baseline) and on tok/s against same-runner baselines only, mirroring
+    the prefix section. A baseline without spec rows predates the schema bump
+    and reports informationally instead of failing."""
+    report, failures = [], []
+    if new and not base:
+        skip = f"  spec: no serving_bench_spec rows in {tag} (pre-speculative baseline, skip)"
+        return [skip], []
+    for key in sorted(base):
+        path, mode = key
+        if key not in new:
+            report.append(f"  spec {path}/{mode}: missing from new snapshot (skip)")
+            continue
+        for metric in ("accept_rate", "tok_s"):
+            b, n = base[key][metric], new[key][metric]
+            if b <= 0:
+                continue
+            drop = 1.0 - n / b
+            line = f"  spec {path}/{mode} {metric}: {b:.2f} -> {n:.2f} ({-drop:+.1%} vs {tag})"
+            gate = (
+                mode == "spec"
+                and (wall_clock or metric == "accept_rate")
+                and drop > max_drop
+            )
+            if gate:
+                line += f"  REGRESSION (>{max_drop:.0%} drop)"
+                failures.append(line)
+            report.append(line)
+    return report, failures
+
+
 def compare(
     new: dict, base: dict, max_drop: float, tag: str, wall_clock: bool
 ) -> tuple[list, list]:
@@ -241,6 +323,12 @@ def main() -> None:
     print("\n".join(inv_report) if inv_report else "  (no paired rows)")
     all_failures += inv_failures
 
+    new_spec = spec_rows(new_snapshot)
+    s_report, s_failures = spec_invariant(new_spec)
+    print("speculative invariant (spec >= nospec tok/s, accept > 0):")
+    print("\n".join(s_report) if s_report else "  (no spec rows)")
+    all_failures += s_failures
+
     baselines = [(p, True) for p in args.baseline] + [
         (p, False) for p in args.occupancy_baseline
     ]
@@ -262,13 +350,22 @@ def main() -> None:
             all_failures += incomplete
             continue
         base = serving_rows(base_snapshot)
-        scope = "tok/s + occupancy + prefix" if wall_clock else "occupancy + prefix"
+        scope = (
+            "tok/s + occupancy + prefix + spec"
+            if wall_clock
+            else "occupancy + prefix + spec accept"
+        )
         report, failures = compare(new, base, args.max_drop, path, wall_clock)
         p_report, p_failures = compare_prefix(
             new_prefix, prefix_rows(base_snapshot), args.max_drop, path, wall_clock
         )
         report += p_report
         failures += p_failures
+        sp_report, sp_failures = compare_spec(
+            new_spec, spec_rows(base_snapshot), args.max_drop, path, wall_clock
+        )
+        report += sp_report
+        failures += sp_failures
         print(f"vs {path} (gating {scope}):")
         print("\n".join(report) if report else "  (no comparable rows)")
         all_failures += failures

@@ -34,9 +34,20 @@ saved, and the peak page footprint against the dense-equivalent capacity —
 ``capacity_x = dense_pages / peak_pages`` is how many times more concurrent
 sequences the same HBM could hold at the observed sharing.
 
+A third section serves a **repetition-heavy** workload (tiled prompt motifs —
+the templated/code traffic shape) with speculative decoding (DESIGN.md §3.9):
+``speculate=4`` draft windows from the self-drafting n-gram drafter, verified
+through the paged kernel's multi-token window, against the same engine at
+``speculate=1``. Reported per variant and mode: tok/s, draft acceptance rate,
+and emitted tokens per model step — acceptance is a deterministic
+drafter/workload property (gated across runs like occupancy), while the
+spec/nospec tok/s comparison gates within the snapshot (the two modes'
+interleaved passes sample the same interference windows).
+
 CSV (after the header rows):
 ``serving_bench,<path>[@tpN],<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
 ``serving_bench_prefix,<path>,<layout>,<tok_s>,<hit_rate>,<prefill_tokens>,<prefill_saved>,<peak_pages>,<capacity_x>``
+``serving_bench_spec,<path>,<spec|nospec>,<tok_s>,<accept_rate>,<tokens_per_step>``
 """
 from __future__ import annotations
 
@@ -84,8 +95,56 @@ def _prefix_workload(cfg, n_req: int, shared_len: int = 24, seed: int = 1):
     return prompts, max_new
 
 
+def _spec_workload(cfg, n_req: int, seed: int = 2):
+    """Repetition-heavy prompts (tiled motifs, the templated/code regime
+    prompt-lookup drafting exists for — DESIGN.md §3.9) with decode-dominated
+    budgets: the self-drafting n-gram drafter fills verify windows from the
+    request's own history, so acceptance — and therefore the spec/nospec
+    tok/s ratio — is a property of the workload's repetitiveness."""
+    rng = np.random.default_rng(seed)
+    prompts, max_new = [], []
+    for i in range(n_req):
+        motif = rng.integers(1, cfg.vocab, size=3 + i % 3).astype(np.int32)
+        prompts.append(np.tile(motif, 4)[: PROMPT_LENS[i % len(PROMPT_LENS)]])
+        # long decode budgets: greedy streams settle into attractor loops the
+        # prompt-lookup drafter then rides — short budgets would mostly
+        # measure the pre-loop transient where acceptance is poor
+        max_new.append(36 + 4 * (i % 4))
+    return prompts, max_new
+
+
+def _spec_lines(cfg, variants, n_req: int, steps):
+    """The speculative section: speculate=4 vs plain decode per serving
+    variant, through the paged layout (the verify window scores against the
+    same paged pools + in-kernel int8 dequant as decode — DESIGN.md §3.9).
+    spec/nospec timed passes interleave for the same reason the other
+    sections' do: the regression gate compares their tok/s as a same-run
+    ratio, so adjacent passes must see the same machine."""
+    prompts, max_new = _spec_workload(cfg, n_req)
+    lines = ["serving_bench_spec,path,mode,tok_s,accept_rate,tokens_per_step"]
+    for tag, p, quant, path, kv in variants:
+        passes = {
+            mode: _prep(cfg, p, prompts, max_new, quant=quant, path=path,
+                        kv_cache=kv, scheduler="continuous",
+                        cache_layout="paged", speculate=k, steps=steps,
+                        # k == 1 is shape-identical to the prefix section's
+                        # paged engines — reuse their compiled steps
+                        key=(tag, "spec" if k > 1 else "", "paged"))
+            for mode, k in (("nospec", 1), ("spec", 4))}
+        best = dict.fromkeys(passes, 0.0)
+        engs = {}
+        for _ in range(TIMED_PASSES):
+            for mode, one_pass in passes.items():
+                tok_s, engs[mode] = one_pass()
+                best[mode] = max(best[mode], tok_s)
+        for mode, eng in engs.items():
+            lines.append(f"serving_bench_spec,{tag},{mode},{best[mode]:.1f},"
+                         f"{eng.accept_rate():.3f},{eng.tokens_per_step():.2f}")
+    return lines
+
+
 def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
-          mesh=None, cache_layout="dense", steps=None, key=None):
+          mesh=None, cache_layout="dense", speculate=1, steps=None, key=None):
     """Warm the compile caches on one throwaway serve, then return a
     ``one_pass()`` closure that serves the workload on a fresh engine and
     returns ``(tok_s, engine)``. ``steps``/``key`` share the jit'd step
@@ -98,13 +157,18 @@ def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
     from repro.serving.engine import ServeEngine
     kw = dict(batch_size=BATCH_SIZE, max_len=MAX_LEN, quant=quant, path=path,
               kv_cache=kv_cache, scheduler=scheduler, mesh=mesh,
-              cache_layout=cache_layout, page_size=PAGE_SIZE)
+              cache_layout=cache_layout, page_size=PAGE_SIZE,
+              speculate=speculate)
 
     def extract(eng):
         if cache_layout == "paged":
-            return {"decode": eng._decode_step, "cold": eng._admit_cold,
-                    "warm": eng._admit_warm, "copy": eng._copy_step}
-        return {"decode": eng._decode_step, "admit": eng._admit_step}
+            shared = {"decode": eng._decode_step, "cold": eng._admit_cold,
+                      "warm": eng._admit_warm, "copy": eng._copy_step}
+        else:
+            shared = {"decode": eng._decode_step, "admit": eng._admit_step}
+        if speculate > 1:
+            shared["verify"] = eng._verify_step
+        return shared
 
     def attach(eng, shared):
         eng._decode_step = shared["decode"]
@@ -114,6 +178,8 @@ def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
             eng._copy_step = shared["copy"]
         else:
             eng._admit_step = shared["admit"]
+        if speculate > 1:
+            eng._verify_step = shared["verify"]
 
     shared = steps.get(key) if steps is not None and key is not None else None
     eng = ServeEngine(cfg, params, **kw)
@@ -231,4 +297,10 @@ def run(quick: bool = False):
     # occupancy, the hit rate is a gated deterministic invariant: quick and
     # full passes must serve the same workload (quick trims variants only).
     lines += _prefix_lines(cfg, variants, n_req=12, steps=steps)
+
+    # speculative decoding (§3.9): speculate=4 vs plain decode on a
+    # repetition-heavy workload, paged layout; accept rate is a deterministic
+    # drafter/workload invariant gated across runs like occupancy, the
+    # spec/nospec tok/s ratio gates same-snapshot (regress.py)
+    lines += _spec_lines(cfg, variants, n_req=10, steps=steps)
     return lines

@@ -20,13 +20,20 @@ N-token shared system prompt, so admissions past the first map the cached
 prefix pages copy-free and only prefill their suffix (the printed
 ``prefix_hit_rate`` / ``prefill_saved`` stats).
 
+``--speculate K`` serves speculative (DESIGN.md §3.9): each model step verifies
+a K-token draft window proposed by the self-drafting prompt-lookup drafter —
+token-exact vs plain decode by greedy acceptance, with accept rate and emitted
+tokens/step printed. Pays off on repetitive traffic (templates, code); combine
+with ``--cache-layout paged --kv-cache int8`` for the full paged-int8 verify
+path.
+
 ``--mesh data,model`` serves TP-sharded on a host mesh (DESIGN.md §3.7) — set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 
     PYTHONPATH=src:. python examples/serve_batch.py [--quant int8|fake|fp]
         [--path ref|dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
         [--prompt-lens 6,10,14] [--eos-id N] [--quant-kernel-stats]
-        [--mesh 4,2]
+        [--mesh 4,2] [--speculate 4] [--cache-layout paged]
 """
 import argparse
 import time
@@ -77,11 +84,11 @@ def mixed_workload(cfg, n_requests, prompt_lens, seed=0, shared_prefix=0):
 
 def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
           eos_id=None, tag="", mesh=None, cache_layout="dense", page_size=8,
-          n_pages=None):
+          n_pages=None, speculate=1):
     engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
                          eos_id=eos_id, path=path, kv_cache=kv_cache, mesh=mesh,
                          cache_layout=cache_layout, page_size=page_size,
-                         n_pages=n_pages)
+                         n_pages=n_pages, speculate=speculate)
     engine.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.time()
     done = engine.run()
@@ -94,10 +101,16 @@ def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
                  f"prefill_saved={engine.stats['prefix_tokens_reused']}, "
                  f"peak_pages={engine.stats['peak_pages_in_use']}"
                  f"/{engine.pool.n_pages}")
+    spec = ""
+    if speculate > 1:
+        spec = (f", speculate={speculate} "
+                f"accept_rate={engine.accept_rate():.2f} "
+                f"tok/step={engine.tokens_per_step():.2f}")
     print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache}, "
           f"occupancy={engine.occupancy():.2f}, "
-          f"refills_mid_decode={engine.stats['mid_decode_admissions']}{paged}{shard})")
+          f"refills_mid_decode={engine.stats['mid_decode_admissions']}"
+          f"{paged}{spec}{shard})")
     return done, total / dt
 
 
@@ -160,6 +173,12 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend N identical tokens to every prompt (shared "
                          "system prompt — exercises paged prefix reuse)")
+    ap.add_argument("--speculate", type=int, default=1, metavar="K",
+                    help="speculative decoding (DESIGN.md §3.9): verify "
+                         "K-token draft windows from the self-drafting n-gram "
+                         "drafter per model step; K=1 is plain decode. "
+                         "Token-exact vs K=1 (greedy acceptance); prints "
+                         "accept_rate and emitted tokens/step")
     ap.add_argument("--compare", action="store_true",
                     help="also serve the fp baseline and report both tok/s")
     ap.add_argument("--arch", default="starcoder2-7b")
@@ -191,7 +210,7 @@ def main() -> None:
     prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens,
                                       shared_prefix=args.shared_prefix)
     layout_kw = dict(cache_layout=args.cache_layout, page_size=args.page_size,
-                     n_pages=args.n_pages)
+                     n_pages=args.n_pages, speculate=args.speculate)
 
     if args.quant != "int8":
         # The int8 KV cache is independent of weight quantization and applies to

@@ -95,11 +95,12 @@ def _fa_kernel(q_ref, k_ref, v_ref, *refs,
         o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
-def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
+def _paged_decode_kernel(tab_ref, kvlen_ref, *rest,
                          ps: int, n_pages_max: int, n_kv_heads: int,
                          scale: float, window: Optional[int],
-                         softcap: Optional[float], kv_int8: bool):
-    """Single-token decode attention through a page table (DESIGN.md §3.8).
+                         softcap: Optional[float], kv_int8: bool,
+                         q_win: int = 1):
+    """Decode / draft-verify attention through a page table (DESIGN.md §3.8/§3.9).
 
     grid = (B,). The K/V pools (and, int8-KV, the per-token scale pools) stay
     resident in HBM (``memory_space=ANY``): the kernel walks each slot's *live*
@@ -123,7 +124,23 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
     ``kv_int8=True``: the K scale multiplies the score column and the V scale
     folds into the probability row — the exact application points of the dense
     ``layers.decode_attention`` int8 path, so the fused kernel shares its
-    quantization numerics (scale → softcap → mask → softmax)."""
+    quantization numerics (scale → softcap → mask → softmax).
+
+    ``q_win > 1`` (speculative verify, DESIGN.md §3.9): q carries a draft
+    window of ``q_win`` tokens per slot — rows ordered (window, group), so row
+    ``r`` of the (q_win·G, ps) score tile belongs to window position
+    ``r // G``. A third scalar-prefetch vector ``q_len`` (B,) gives each slot's
+    *valid* window length (1 ≤ q_len ≤ q_win); ``kv_len`` counts the slot's
+    total post-scatter length, window token i sitting at absolute position
+    ``kv_len - q_len + i``. The causal mask is per-row: window token i attends
+    keys ≤ its own position, so the same page pipeline serves every window row
+    in one pass. Rows past ``q_len`` clamp to the last valid position —
+    finite-but-garbage output the engine discards. ``q_win == 1`` (no q_len
+    input) degenerates bitwise to single-token decode."""
+    if q_win > 1:
+        qlen_ref, q_ref, k_hbm, v_hbm, *refs = rest
+    else:
+        qlen_ref, q_ref, k_hbm, v_hbm, refs = None, *rest[:3], rest[3:]
     if kv_int8:
         ks_hbm, vs_hbm, o_ref = refs
     else:
@@ -131,8 +148,15 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
     b = pl.program_id(0)
     kvl = kvlen_ref[b]
     n_live = pl.cdiv(kvl, ps)
-    G, D = q_ref.shape[2], q_ref.shape[3]
+    R, D = q_ref.shape[2], q_ref.shape[3]    # R = q_win * G score-tile rows
+    G = R // q_win
     P = k_hbm.shape[0]
+    if q_win > 1:
+        qln = qlen_ref[b]
+        # absolute position of each score-tile row's window token (clamped to
+        # the newest valid token for rows past q_len)
+        win_idx = jax.lax.broadcasted_iota(jnp.int32, (R, ps), 0) // G
+        q_pos = (kvl - qln) + jnp.minimum(win_idx, qln - 1)
 
     def body(kbuf, vbuf, sbuf, sem):
         def dmas(slot, j):
@@ -176,17 +200,24 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
 
             for c in dmas(slot, j):
                 c.wait()
-            k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (G, ps), 1)
-            mask = k_pos < kvl
-            if window is not None:
-                # decode window semantics (layers.decode_attention): the
-                # newest token sits at kvl - 1
-                mask &= (kvl - 1 - k_pos) < window
+            k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (R, ps), 1)
+            if q_win > 1:
+                # per-row causality: window token i attends keys ≤ its own
+                # absolute position (row 0 ≡ the single-token decode mask)
+                mask = k_pos <= q_pos
+                if window is not None:
+                    mask &= (q_pos - k_pos) < window
+            else:
+                mask = k_pos < kvl
+                if window is not None:
+                    # decode window semantics (layers.decode_attention): the
+                    # newest token sits at kvl - 1
+                    mask &= (kvl - 1 - k_pos) < window
             scales = sbuf[slot] if kv_int8 else None          # (2, Hkv, ps)
             out = []
             for h in range(n_kv_heads):        # static unroll over kv heads
                 m_prev, l_prev, acc_prev = carry[h]
-                q = q_ref[0, h].astype(jnp.float32)           # (G, D)
+                q = q_ref[0, h].astype(jnp.float32)           # (R, D)
                 k = kbuf[slot, :, h, :].astype(jnp.float32)   # (ps, D)
                 s = jax.lax.dot_general(
                     q, k, (((1,), (1,)), ((), ())),
@@ -194,7 +225,7 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
                 if kv_int8:
                     # per-token K scale on the score column: one multiply per
                     # (t, kv head) instead of dequantizing the (ps, D) tile
-                    s = s * scales[0, h:h + 1]                # (G, ps) * (1, ps)
+                    s = s * scales[0, h:h + 1]                # (R, ps) * (1, ps)
                 if softcap is not None:
                     s = softcap * jnp.tanh(s / softcap)
                 m_new = jnp.maximum(
@@ -209,9 +240,9 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, k_hbm, v_hbm, *refs,
                                 preferred_element_type=jnp.float32)))
             return tuple(out)
 
-        init = tuple((jnp.full((G,), NEG_INF, jnp.float32),
-                      jnp.zeros((G,), jnp.float32),
-                      jnp.zeros((G, D), jnp.float32))
+        init = tuple((jnp.full((R,), NEG_INF, jnp.float32),
+                      jnp.zeros((R,), jnp.float32),
+                      jnp.zeros((R, D), jnp.float32))
                      for _ in range(n_kv_heads))
         state = jax.lax.fori_loop(0, n_live, page_step, init)
         for h in range(n_kv_heads):
@@ -231,14 +262,15 @@ def paged_decode_attention_pallas(
     q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     page_table: jax.Array, kv_len: jax.Array, *,
     k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
+    q_win: int = 1, q_len: Optional[jax.Array] = None,
     window: Optional[int] = None, softcap: Optional[float] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """q: (B, Hkv, G, D); k/v pages: (P, ps, Hkv, D); page_table: (B, maxP)
-    int32 (entries ≥ P are invalid — clamped in the kernel and masked by
-    ``kv_len``); kv_len: (B,) int32 with kv_len ≤ maxP·ps → (B, Hkv, G, D).
-    The pools stay in HBM; the kernel DMAs each live page's tile on demand
-    (double-buffered — see ``_paged_decode_kernel``).
+    """q: (B, Hkv, q_win·G, D); k/v pages: (P, ps, Hkv, D); page_table:
+    (B, maxP) int32 (entries ≥ P are invalid — clamped in the kernel and
+    masked by ``kv_len``); kv_len: (B,) int32 with kv_len ≤ maxP·ps
+    → (B, Hkv, q_win·G, D). The pools stay in HBM; the kernel DMAs each live
+    page's tile on demand (double-buffered — see ``_paged_decode_kernel``).
 
     ``k_scale``/``v_scale`` (both or neither): int8-KV per-token scales in the
     kernel-native (P, Hkv, ps) row layout — ``ops.paged_decode_attention``
@@ -248,22 +280,33 @@ def paged_decode_attention_pallas(
     ``decode_attention`` numerics) — the int8 path never materializes a dense
     (B, T, ...) view either.
 
+    ``q_win > 1`` + ``q_len`` (B,) int32: draft-window verify (DESIGN.md
+    §3.9). q's third axis carries ``q_win`` window tokens × G group heads in
+    (window, group) row order; ``kv_len`` counts each slot's total
+    post-scatter length so window token i sits at ``kv_len - q_len + i``, and
+    rows past ``q_len`` produce garbage-but-finite output the engine discards.
+
     TPU notes: ps should be a multiple of 8 and D of 128 for native tiling
     (int8 code pools want ps ≥ 32 sublanes); CI and the oracle-parity tests run
     ``interpret=True`` on any backend.
     """
-    B, Hkv, G, D = q.shape
+    B, Hkv, R, D = q.shape
+    assert R % q_win == 0, (R, q_win)
     P, ps = k_pages.shape[0], k_pages.shape[1]
     maxP = page_table.shape[1]
     assert page_table.shape == (B, maxP) and kv_len.shape == (B,)
+    assert (q_len is not None) == (q_win > 1), "q_len iff q_win > 1"
     kv_int8 = k_scale is not None
     assert kv_int8 == (v_scale is not None), "pass both scale pools or neither"
 
     kernel = functools.partial(
         _paged_decode_kernel, ps=ps, n_pages_max=maxP, n_kv_heads=Hkv,
-        scale=D ** -0.5, window=window, softcap=softcap, kv_int8=kv_int8)
+        scale=D ** -0.5, window=window, softcap=softcap, kv_int8=kv_int8,
+        q_win=q_win)
+    n_pref = 2 if q_win == 1 else 3
+    qmap = lambda b, *pref: (b, 0, 0, 0)
     in_specs = [
-        pl.BlockSpec((1, Hkv, G, D), lambda b, tab, kvl: (b, 0, 0, 0)),
+        pl.BlockSpec((1, Hkv, R, D), qmap),
         pl.BlockSpec(memory_space=pltpu.ANY),        # k pool, paged via DMA
         pl.BlockSpec(memory_space=pltpu.ANY),        # v pool
     ]
@@ -274,18 +317,21 @@ def paged_decode_attention_pallas(
         in_specs += [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
         args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=n_pref,
         grid=(B,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, Hkv, G, D), lambda b, tab, kvl: (b, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, Hkv, R, D), qmap),
     )
+    pref = [page_table.reshape(-1).astype(jnp.int32), kv_len.astype(jnp.int32)]
+    if q_win > 1:
+        assert q_len.shape == (B,), q_len.shape
+        pref.append(q_len.astype(jnp.int32))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
         interpret=interpret,
-    )(page_table.reshape(-1).astype(jnp.int32), kv_len.astype(jnp.int32),
-      *args)
+    )(*pref, *args)
 
 
 def flash_attention_pallas(

@@ -200,6 +200,64 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                                    mesh=hints.current_mesh())
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh"))
+def _paged_verify_attention(q, k_pages, v_pages, page_table, kv_len, q_len,
+                            k_scale_pages, v_scale_pages, *,
+                            window, softcap, mesh):
+    B, W, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+
+    def body(q, k_pages, v_pages, page_table, kv_len, q_len, k_scale_pages,
+             v_scale_pages):
+        # (B, W, H, D) → the kernel's (window, group)-ordered score-tile rows
+        qg = jnp.transpose(q.reshape(B, W, Hkv, G, D),
+                           (0, 2, 1, 3, 4)).reshape(B, Hkv, W * G, D)
+        ks = vs = None
+        if k_scale_pages is not None:
+            ks = jnp.transpose(k_scale_pages[..., 0], (0, 2, 1))
+            vs = jnp.transpose(v_scale_pages[..., 0], (0, 2, 1))
+        # W == 1 forces q_len == 1 everywhere, and the verify mask at
+        # q_len == 1 reduces exactly to the decode mask — dispatch to the
+        # plain decode launch (no q_len prefetch operand)
+        qw = dict(q_win=W, q_len=jnp.broadcast_to(
+            jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,))) if W > 1 else {}
+        out = _fa.paged_decode_attention_pallas(
+            qg, k_pages, v_pages, page_table,
+            jnp.broadcast_to(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+            k_scale=ks, v_scale=vs, **qw,
+            window=window, softcap=softcap, interpret=_interpret())
+        return jnp.transpose(out.reshape(B, Hkv, W, G, D),
+                             (0, 2, 1, 3, 4)).reshape(B, W, H, D)
+
+    return hints.manual_kernel(
+        body, (q, k_pages, v_pages, page_table, kv_len, q_len, k_scale_pages,
+               v_scale_pages), mesh=mesh)
+
+
+def paged_verify_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           page_table: jax.Array, kv_len: jax.Array,
+                           q_len: jax.Array, *,
+                           k_scale_pages=None, v_scale_pages=None,
+                           window=None, softcap=None) -> jax.Array:
+    """Paged draft-window verify attention (DESIGN.md §3.9): q (B, W, H, D) —
+    W window tokens per slot, already scattered into the (P, ps, Hkv, D) pools
+    — against the same page table / pools as ``paged_decode_attention``, with
+    per-slot total post-scatter length ``kv_len`` and valid window rows
+    ``q_len`` (window token i sits at ``kv_len - q_len + i``; rows ≥ q_len are
+    garbage-but-finite) → (B, W, H, D).
+
+    Same kernel, same double-buffered page DMA pipeline, same in-kernel int8-KV
+    dequant points as decode — the only change is the per-row causal mask, so
+    W == 1 is bitwise the decode step. Runs as one GSPMD-manual region under a
+    TP-sharded plan: window rows ride the same replicated-q / sharded-kv-heads
+    placement as decode queries."""
+    return _paged_verify_attention(q, k_pages, v_pages, page_table, kv_len,
+                                   q_len, k_scale_pages, v_scale_pages,
+                                   window=window, softcap=softcap,
+                                   mesh=hints.current_mesh())
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk", "mesh"))
 def _act_quantize_padded(x, bcol, dyn_alpha, *, bits, alpha, bm, bk, mesh):
     """Shared pad → kernel → slice for the static- and traced-alpha wrappers.

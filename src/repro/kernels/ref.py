@@ -111,6 +111,56 @@ def paged_decode_attention_ref(
     return jnp.einsum("bhgt,bthd->bhgd", p, vf).astype(q.dtype)
 
 
+def paged_verify_attention_ref(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, kv_len: jax.Array, q_len: jax.Array, *,
+    k_scale_pages: jax.Array | None = None,
+    v_scale_pages: jax.Array | None = None,
+    window: int | None = None, softcap: float | None = None) -> jax.Array:
+    """Draft-window verify attention oracle (DESIGN.md §3.9).
+
+    q: (B, Hkv, W, G, D) — W window tokens per slot, already scattered into the
+    pools; kv_len: (B,) total post-scatter length; q_len: (B,) valid window
+    rows (1 ≤ q_len ≤ W), window token i at absolute position
+    ``kv_len - q_len + i``. Per-row causal mask over the gathered logical view,
+    otherwise exactly :func:`paged_decode_attention_ref` — W == 1 with
+    q_len == 1 is bitwise the decode oracle. Rows ≥ q_len clamp to the newest
+    valid position (garbage-but-finite, discarded by callers).
+    → (B, Hkv, W, G, D).
+    """
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    B, maxP = page_table.shape
+    W, D = q.shape[2], q.shape[-1]
+    gidx = jnp.clip(page_table[:, :, None] * ps + jnp.arange(ps)[None, None, :],
+                    0, P * ps - 1).reshape(B, maxP * ps)
+    kf = k_pages.reshape(P * ps, *k_pages.shape[2:])[gidx].astype(jnp.float32)
+    vf = v_pages.reshape(P * ps, *v_pages.shape[2:])[gidx].astype(jnp.float32)
+
+    def score_scales(pool):    # (P, ps, Hkv, 1) → (B, Hkv, 1, 1, T) broadcast
+        flat = pool.reshape(P * ps, pool.shape[2])[gidx]          # (B, T, Hkv)
+        return jnp.transpose(flat, (0, 2, 1))[:, :, None, None, :]
+
+    s = jnp.einsum("bhwgd,bthd->bhwgt", q.astype(jnp.float32), kf) * (D ** -0.5)
+    if k_scale_pages is not None:
+        s = s * score_scales(k_scale_pages)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kvl = kv_len.astype(jnp.int32)
+    qln = q_len.astype(jnp.int32)
+    q_pos = ((kvl - qln)[:, None]
+             + jnp.minimum(jnp.arange(W)[None, :], (qln - 1)[:, None]))  # (B, W)
+    t_pos = jnp.arange(maxP * ps)[None, None, None, None, :]
+    qp = q_pos[:, None, :, None, None]
+    valid = t_pos <= qp
+    if window is not None:
+        valid &= (qp - t_pos) < window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale_pages is not None:
+        p = p * score_scales(v_scale_pages)
+    return jnp.einsum("bhwgt,bthd->bhwgd", p, vf).astype(q.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, softcap: float | None = None) -> jax.Array:
     """Plain softmax attention oracle. q: (B,H,S,D); k/v: (B,H,S,D). f32 math."""

@@ -329,6 +329,51 @@ def decode_attention(
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def verify_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+    cur_len: jax.Array, q_len: jax.Array, window: Optional[int],
+    softcap: Optional[float],
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Draft-window attention against a (B, T, Hkv, D) cache (DESIGN.md §3.9):
+    the W window tokens are already scattered, ``cur_len`` is each slot's total
+    post-scatter length and ``q_len`` (1 ≤ q_len ≤ W) its valid window rows —
+    window token i sits at absolute position ``cur_len - q_len + i`` and
+    attends keys ≤ its own position (rows ≥ q_len clamp to the newest valid
+    position; their output is garbage-but-finite and discarded). W == 1 is the
+    single-token :func:`decode_attention` mask. int8-KV scales apply at the
+    same score-column / probability-row points as decode.
+    q: (B, W, H, D) → (B, W, H, D)."""
+    B, W, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, W, Hkv, G, D)
+    kf = k_cache.astype(jnp.float32) if k_scale is not None else k_cache
+    s = jnp.einsum("bwhgd,bthd->bhwgt", qg, kf) * (D ** -0.5)
+    s = s.astype(jnp.float32)
+    if k_scale is not None:
+        s = s * _scale_to_scores(k_scale)[:, :, None]        # (B,Hkv,1,1,T)
+    s = _softcap(s, softcap)
+    cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))
+    qln = jnp.broadcast_to(jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,))
+    q_pos = ((cl - qln)[:, None]
+             + jnp.minimum(jnp.arange(W)[None, :], (qln - 1)[:, None]))  # (B,W)
+    t_pos = jnp.arange(k_cache.shape[1])[None, None, None, None, :]
+    qp = q_pos[:, None, :, None, None]
+    valid = t_pos <= qp
+    if window is not None:
+        valid &= (qp - t_pos) < window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        out = jnp.einsum("bhwgt,bthd->bwhgd",
+                         p * _scale_to_scores(v_scale)[:, :, None],
+                         v_cache.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bhwgt,bthd->bwhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, W, H, D).astype(q.dtype)
+
+
 def _prefill_attention(q, k, v, cfg: ModelConfig, ctx: QuantContext, *,
                        window: Optional[int], seq_lens: Optional[jax.Array]):
     """Self-attention over a (right-padded) prefill window — the one codepath
@@ -351,7 +396,8 @@ def _prefill_attention(q, k, v, cfg: ModelConfig, ctx: QuantContext, *,
 
 def _paged_attention(q, k, v, cache: dict, page_table: Optional[jax.Array],
                      cfg: ModelConfig, ctx: QuantContext, *,
-                     cur_len, prefix_len, window: Optional[int], decode: bool):
+                     cur_len, prefix_len, window: Optional[int], decode: bool,
+                     q_len=None):
     """Attention against a paged pool (DESIGN.md §3.8): scatter the new K/V
     through the page table, then attend. Every decode path — fp pools and int8
     codes + per-token scale pools alike, on all serving paths — runs the
@@ -365,6 +411,45 @@ def _paged_attention(q, k, v, cache: dict, page_table: Optional[jax.Array],
     B, S = q.shape[0], q.shape[1]
     kv_int8 = "k_scale_pages" in cache
     P, ps = cache["k_pages"].shape[0], cache["k_pages"].shape[1]
+
+    if q_len is not None:
+        # ---- draft-window verify (DESIGN.md §3.9): scatter the whole window
+        # through the table (rows ≥ q_len drop), then score every window row
+        # in one fused-kernel pass. cur_len is the *total* post-scatter
+        # length; window token i of slot b sits at cur_len[b] - q_len[b] + i.
+        cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))
+        qln = jnp.broadcast_to(jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,))
+        abs_pos = (cl - qln)[:, None] + jnp.arange(S)[None, :]       # (B, S)
+        row_valid = jnp.arange(S)[None, :] < qln[:, None]
+        entry = jnp.take_along_axis(
+            page_table, jnp.clip(abs_pos // ps, 0, page_table.shape[1] - 1),
+            axis=1)
+        flat = jnp.where(row_valid, entry * ps + abs_pos % ps, P * ps).reshape(-1)
+        merge = lambda t: t.reshape((B * S,) + t.shape[2:])
+        if kv_int8:
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            new_cache = {
+                "k_pages": _pool_scatter(cache["k_pages"], flat, merge(kq)),
+                "v_pages": _pool_scatter(cache["v_pages"], flat, merge(vq)),
+                "k_scale_pages": _pool_scatter(cache["k_scale_pages"], flat,
+                                               merge(ks)),
+                "v_scale_pages": _pool_scatter(cache["v_scale_pages"], flat,
+                                               merge(vs)),
+            }
+        else:
+            new_cache = {
+                "k_pages": _pool_scatter(cache["k_pages"], flat, merge(k)),
+                "v_pages": _pool_scatter(cache["v_pages"], flat, merge(v)),
+            }
+        new_cache = {kk: hints.constrain_kv_pages(vv) for kk, vv in new_cache.items()}
+        from repro.kernels import ops as kops
+        out = kops.paged_verify_attention(
+            q, new_cache["k_pages"], new_cache["v_pages"], page_table, cl, qln,
+            k_scale_pages=new_cache.get("k_scale_pages"),
+            v_scale_pages=new_cache.get("v_scale_pages"),
+            window=window, softcap=cfg.attn_softcap)
+        return out, new_cache
 
     if decode:
         cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))
@@ -437,6 +522,7 @@ def attention_apply(
     local: bool = False, positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None, prefix_len: Optional[jax.Array] = None,
+    q_len: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sublayer (pre-norm residual is handled by the caller).
 
@@ -451,6 +537,13 @@ def attention_apply(
     ``cur_len`` holds the valid prompt length per slot and masks padded keys;
     decode ``cur_len`` is the per-slot post-append length: the new token
     scatters into cache position ``cur_len - 1`` of its own slot.
+
+    ``q_len`` (B,) marks a *draft-window verify* batch (DESIGN.md §3.9): the S
+    axis is a speculative window — all S tokens scatter into the cache (rows ≥
+    q_len[b] drop) and every window row is scored in one pass; ``cur_len`` is
+    the per-slot *total* post-scatter length, so window token i sits at
+    ``cur_len - q_len + i``. The flag is explicit because verify shares
+    prefill's S > 1 shape while reading+appending a live cache like decode.
     """
     B, S, d = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -458,10 +551,18 @@ def attention_apply(
     k = ctx.linear(params["wk"], x, "wk").reshape(B, S, Hkv, D)
     v = ctx.linear(params["wv"], x, "wv").reshape(B, S, Hkv, D)
 
-    is_decode = cache is not None and S == 1
+    is_verify = cache is not None and q_len is not None
+    is_decode = cache is not None and S == 1 and q_len is None
     paged = cache is not None and "k_pages" in cache
     if positions is None:
-        if is_decode and cur_len is not None:
+        if is_verify:
+            # window token i at absolute position cur_len - q_len + i; rows ≥
+            # q_len clamp to the newest valid position (dropped downstream)
+            cl_ = jnp.reshape(cur_len, (-1, 1))
+            ql_ = jnp.reshape(q_len, (-1, 1))
+            positions = (cl_ - ql_) + jnp.minimum(jnp.arange(S)[None, :],
+                                                  ql_ - 1)
+        elif is_decode and cur_len is not None:
             positions = jnp.reshape(cur_len, (-1, 1)) - 1        # (B|1, 1)
         elif paged and prefix_len is not None:
             # paged suffix prefill: suffix token i of slot b is absolute
@@ -480,11 +581,45 @@ def attention_apply(
     if paged:
         out, new_cache = _paged_attention(
             q, k, v, cache, page_table, cfg, ctx, cur_len=cur_len,
-            prefix_len=prefix_len, window=window, decode=is_decode)
+            prefix_len=prefix_len, window=window, decode=is_decode,
+            q_len=q_len if is_verify else None)
         y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
         return y, new_cache
     kv_int8 = cache is not None and "k_scale" in cache
-    if is_decode:
+    if is_verify:
+        # dense draft-window verify (DESIGN.md §3.9): scatter all S window
+        # tokens at their absolute positions (rows ≥ q_len drop via the T
+        # sentinel), then score the window against the updated cache.
+        cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))
+        qln = jnp.broadcast_to(jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,))
+        T = cache["k"].shape[1]
+        abs_pos = (cl - qln)[:, None] + jnp.arange(S)[None, :]       # (B, S)
+        row_valid = jnp.arange(S)[None, :] < qln[:, None]
+        idx = jnp.where(row_valid, jnp.clip(abs_pos, 0, T - 1), T)   # T drops
+        rows = jnp.arange(B)[:, None]
+        if kv_int8:
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            new_cache = {
+                "k": cache["k"].at[rows, idx].set(kq, mode="drop"),
+                "v": cache["v"].at[rows, idx].set(vq, mode="drop"),
+                "k_scale": cache["k_scale"].at[rows, idx].set(ks, mode="drop"),
+                "v_scale": cache["v_scale"].at[rows, idx].set(vs, mode="drop"),
+            }
+            out = verify_attention(q, new_cache["k"], new_cache["v"],
+                                   cur_len=cl, q_len=qln, window=window,
+                                   softcap=cfg.attn_softcap,
+                                   k_scale=new_cache["k_scale"],
+                                   v_scale=new_cache["v_scale"])
+        else:
+            k_cache = cache["k"].at[rows, idx].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_cache = cache["v"].at[rows, idx].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": k_cache, "v": v_cache}
+            out = verify_attention(q, k_cache, v_cache, cur_len=cl, q_len=qln,
+                                   window=window, softcap=cfg.attn_softcap)
+    elif is_decode:
         # decode: scatter the new token at each slot's own append position, then
         # attend over that slot's valid cache prefix.
         cl = jnp.broadcast_to(jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (B,))

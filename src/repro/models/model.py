@@ -119,7 +119,7 @@ def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
 
 def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
                     cache=None, cur_len=None, decode=False, page_table=None,
-                    prefix_len=None):
+                    prefix_len=None, q_len=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -130,7 +130,7 @@ def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, 
     h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
                                    ctx.sub("attn"), local=local, cache=cache,
                                    cur_len=cur_len, page_table=page_table,
-                                   prefix_len=prefix_len)
+                                   prefix_len=prefix_len, q_len=q_len)
     x = x + h
     if kind == "attn_moe":
         h, aux = moe_lib.moe_apply(p["moe"], norm_apply(p["norm2"], x, cfg), cfg,
@@ -290,12 +290,21 @@ def apply(
     params: dict, batch: dict, cfg: ModelConfig, *,
     ctx: Optional[QuantContext] = None, mode: str = "train",
     caches: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
-    prefix_len: Optional[jax.Array] = None,
+    prefix_len: Optional[jax.Array] = None, q_len: Optional[jax.Array] = None,
     unroll: bool = False, remat: bool = False,
 ) -> Tuple[jax.Array, dict]:
     """Returns (logits, {"aux_loss": scalar, "caches": updated-or-None}).
 
-    mode: train (no caches) | prefill (build caches) | decode (read+update caches).
+    mode: train (no caches) | prefill (build caches) | decode (read+update caches)
+    | verify (speculative draft window, DESIGN.md §3.9).
+
+    ``mode="verify"``: tokens (B, W) are a speculative draft window — column 0
+    the pending token, the rest drafted continuations. All W tokens scatter
+    into the caches at positions ``cur_len - q_len + i`` (``q_len`` (B,) valid
+    window rows; invalid rows drop) and every window position's logits return
+    (B, W, V) so the engine can greedily accept the longest matching prefix.
+    ``cur_len`` is the per-slot *total* post-scatter length. Attention-only
+    families — the SSM recurrence cannot rewind rejected tokens.
 
     ``cur_len`` may be a scalar (all slots aligned) or a per-slot (B,) int32 vector
     (DESIGN.md §3.6). Prefill: tokens are right-padded, positions start at 0, and
@@ -313,12 +322,20 @@ def apply(
     ctx = ctx or QuantContext(cfg.quant)
     spec = block_spec(cfg)
     decode = mode == "decode"
+    verify = mode == "verify"
+    if verify and q_len is None:
+        raise ValueError("mode='verify' needs q_len (per-slot valid window rows)")
+    if verify and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"speculative verify needs attention-only caches; "
+                         f"family {cfg.family!r} carries SSM state")
+    if q_len is not None and not verify:
+        raise ValueError("q_len is only meaningful under mode='verify'")
     x = _embed(params, batch, cfg)
     aux_total = jnp.zeros((), jnp.float32)
 
-    use_cache = mode in ("prefill", "decode")
+    use_cache = mode in ("prefill", "decode", "verify")
     if use_cache and caches is None:
-        raise ValueError("prefill/decode need caches (init_cache)")
+        raise ValueError("prefill/decode/verify need caches (init_cache)")
     page_table = caches.get("page_table") if use_cache else None
     if prefix_len is not None and page_table is None:
         raise ValueError("prefix_len needs a paged cache (its page_table routes "
@@ -335,7 +352,7 @@ def apply(
                                          bctx.sub(f"S{i}"),
                                          cache=c, cur_len=cur_len, decode=decode,
                                          page_table=page_table,
-                                         prefix_len=prefix_len)
+                                         prefix_len=prefix_len, q_len=q_len)
             aux_sum += aux
             new_caches.append(nc if nc is not None else c)
         new_shared = shared_cache

@@ -48,7 +48,7 @@ from repro.configs.base import ModelConfig
 from repro.core import qlinear as ql
 from repro.models import model as M
 from repro.models.layers import QuantContext
-from repro.serving import paging
+from repro.serving import drafter, paging
 from repro.sharding import hints, planner
 
 #: serving path → QuantContext wiring (DESIGN.md §3.3). ``None`` keeps the legacy
@@ -265,6 +265,32 @@ def make_serve_decode_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = N
     return decode_step
 
 
+def make_serve_verify_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
+                           *, path: Optional[str] = None):
+    """One fused speculative verify step (DESIGN.md §3.9): score a (B, W) draft
+    window — column 0 each slot's pending token, columns 1.. its drafted
+    continuation — in a single forward pass and greedily argmax every window
+    position on-device, so the host acceptance loop only compares int32 ids.
+    Greedy-only: the engine's acceptance rule (token i accepted iff it equals
+    the sample at window position i-1) is token-exact by construction only
+    when sampling is deterministic."""
+    ctx = _make_ctx(cfg, quant, path)
+
+    def verify_step(params, tokens, caches, cur_len, q_len, key):
+        """tokens (B, W) int32 draft windows; cur_len (B,) int32 *total*
+        post-scatter lengths; q_len (B,) int32 valid window rows (1 ≤ q_len ≤
+        W; shorter windows right-pad and their tail rows scatter nowhere)
+        → (greedy samples (B, W) int32 — position i samples the token after
+        window token i — and the updated caches)."""
+        del key                                    # greedy: sampler is argmax
+        logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx,
+                             mode="verify", caches=caches, cur_len=cur_len,
+                             q_len=q_len)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), ex["caches"]
+
+    return verify_step
+
+
 # ======================================================================================
 # Tensor-parallel sharded serving (DESIGN.md §3.7)
 # ======================================================================================
@@ -343,6 +369,17 @@ class ServeEngine:
     mode (tests/test_paged_serving.py). ``prefix_reuse=False`` keeps the paged
     layout but always cold-prefills (the parity baseline).
 
+    ``speculate=k`` (DESIGN.md §3.9) turns each decode step into a k-token
+    verify step: a self-drafting prompt-lookup drafter (serving/drafter.py)
+    proposes up to ``k`` continuation tokens per slot from n-gram matches
+    against the slot's own history, the model scores the whole window in one
+    multi-token kernel launch (same paged/dense attention path decode uses),
+    and greedy acceptance keeps every accepted token equal to what plain
+    decode would have sampled — output is **token-exact** vs ``speculate=1``
+    (tests/test_speculative.py). Requires greedy sampling, the continuous
+    scheduler and attention-only caches; ``accept_rate()`` /
+    ``tokens_per_step()`` report what the workload's repetitiveness bought.
+
     ``cache_dtype`` sets the fp KV-cache dtype, defaulting to the params dtype
     (a bf16 model serves a bf16 cache); ``kv_cache="int8"`` is unaffected.
 
@@ -373,6 +410,7 @@ class ServeEngine:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  mesh: Optional[Mesh] = None,
                  plan: Optional["planner.Plan"] = None,
+                 speculate: int = 1, drafter_ngram: int = 3,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert kv_cache in ("fp", "int8"), kv_cache
         assert cache_layout in ("dense", "paged"), cache_layout
@@ -381,6 +419,24 @@ class ServeEngine:
         if self.paged and scheduler != "continuous":
             raise ValueError("the paged layout serves through the continuous "
                              "scheduler (the grouped baseline stays dense)")
+        assert speculate >= 1, speculate
+        self.spec = speculate
+        if speculate > 1:
+            # Speculative decoding (DESIGN.md §3.9): greedy-only (the
+            # acceptance rule is exact only under deterministic sampling),
+            # continuous scheduler (per-slot window lengths), attention-only
+            # families (the SSM recurrence cannot rewind rejected tokens).
+            if temperature > 0.0:
+                raise ValueError("speculate > 1 requires greedy sampling "
+                                 "(temperature <= 0): acceptance is token-"
+                                 "exact only under deterministic sampling")
+            if scheduler != "continuous":
+                raise ValueError("speculate > 1 requires the continuous "
+                                 "scheduler (per-slot draft windows)")
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(f"speculate > 1 needs attention-only caches; "
+                                 f"family {cfg.family!r} carries SSM state")
+            self.drafter = drafter.NGramDrafter(max_ngram=drafter_ngram)
         self.cfg, self.params = cfg, params
         self.B, self.T = batch_size, max_len
         self.eos = eos_id
@@ -399,6 +455,8 @@ class ServeEngine:
         self.cache_dtype = np.dtype(cache_dtype)
         decode = make_serve_decode_step(cfg, quant, path=path,
                                         temperature=temperature, top_k=top_k)
+        verify = (make_serve_verify_step(cfg, quant, path=path)
+                  if speculate > 1 else None)
         if self.paged:
             # Paged pool + page table (DESIGN.md §3.8): the pool defaults to the
             # dense-equivalent capacity; passing less relies on prefix sharing +
@@ -438,6 +496,8 @@ class ServeEngine:
         # 4-leaf int8-KV cache (EXPERIMENTS.md §Perf).
         if mesh is None:
             self._decode_step = jax.jit(decode, donate_argnums=2)
+            if verify is not None:
+                self._verify_step = jax.jit(verify, donate_argnums=2)
             if self.paged:
                 self._admit_cold = jax.jit(admit_cold, donate_argnums=5)
                 self._admit_warm = jax.jit(admit_warm, donate_argnums=5)
@@ -463,6 +523,13 @@ class ServeEngine:
                 _hinted(decode, self.plan, mesh),
                 in_shardings=(param_sh, repl, cache_sh, repl, repl),
                 out_shardings=(repl, cache_sh), donate_argnums=2)
+            if verify is not None:
+                # draft-window tokens/q_len stay replicated like decode tokens;
+                # the window axis follows the batch through the same cache specs
+                self._verify_step = jax.jit(
+                    _hinted(verify, self.plan, mesh),
+                    in_shardings=(param_sh, repl, cache_sh, repl, repl, repl),
+                    out_shardings=(repl, cache_sh), donate_argnums=2)
             if self.paged:
                 admit_sh = dict(in_shardings=(param_sh, repl, repl, repl, repl,
                                               cache_sh, repl),
@@ -493,7 +560,10 @@ class ServeEngine:
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
                       "prompt_tokens": 0, "prefill_tokens": 0,
                       "cow_copies": 0, "pages_evicted": 0,
-                      "peak_pages_in_use": 0}
+                      "peak_pages_in_use": 0,
+                      # speculative decoding (DESIGN.md §3.9); zero if spec==1
+                      "spec_steps": 0, "spec_slot_steps": 0, "spec_drafted": 0,
+                      "spec_accepted": 0, "spec_emitted": 0}
 
     # ---------------------------------------------------------------- submission
 
@@ -530,6 +600,21 @@ class ServeEngine:
         instead of being re-prefilled (paged layout; 0.0 on dense)."""
         total = self.stats["prompt_tokens"]
         return self.stats["prefix_tokens_reused"] / total if total else 0.0
+
+    def accept_rate(self) -> float:
+        """Fraction of *drafted* tokens the verify step accepted (DESIGN.md
+        §3.9; the mandatory pending token does not count). 0.0 when nothing
+        was drafted (speculate == 1, or the drafter never proposed)."""
+        drafted = self.stats["spec_drafted"]
+        return self.stats["spec_accepted"] / drafted if drafted else 0.0
+
+    def tokens_per_step(self) -> float:
+        """Mean emitted tokens per slot per speculative verify step (≥ 1.0 —
+        plain decode emits exactly 1 per slot-step, so this is the per-request
+        step-count compression speculation bought). 0.0 before any speculative
+        step ran."""
+        steps = self.stats["spec_slot_steps"]
+        return self.stats["spec_emitted"] / steps if steps else 0.0
 
     def _next_key(self) -> jax.Array:
         if self._greedy:            # sampler ignores the key: skip the fold_in op
@@ -791,6 +876,66 @@ class ServeEngine:
         self.caches = {**self.caches, "page_table": table}
         self._table_dirty = False
 
+    def _spec_step(self, active: List[int], finished: List[Request]) -> None:
+        """One speculative verify step (DESIGN.md §3.9): draft ≤ spec-1 tokens
+        per active slot from its own prompt+output history, score the whole
+        window in one fused verify pass, then greedily accept the longest
+        prefix whose draft tokens match the model's own samples. Rejection
+        falls back to the verified sample, so the emitted stream is token-exact
+        vs non-speculative decode; every accepted token advances ``_pos``
+        exactly as a plain decode step would, and a request retiring mid-window
+        (EOS / max_new / full cache) discards the rest of its window with its
+        page mappings torn down before any later step could touch them."""
+        W = self.spec
+        toks = np.zeros((self.B, W), np.int32)
+        toks[:, 0] = self._pending
+        wl = np.ones(self.B, np.int32)
+        for i in active:
+            r = self._slots[i]
+            # window budget: room left in the cache row (the pending token
+            # scatters at _pos) and tokens left to emit before max_new retires
+            n_d = min(W - 1, self.T - self._pos[i] - 1,
+                      r.max_new - len(r.out) - 1)
+            if n_d > 0:
+                hist = np.concatenate([r.prompt,
+                                       np.asarray(r.out, np.int32)])
+                d = self.drafter.draft(hist, n_d)
+                wl[i] = 1 + len(d)
+                toks[i, 1:1 + len(d)] = d
+        cur = jnp.asarray(self._pos + wl, jnp.int32)   # post-scatter totals
+        out, self.caches = self._verify_step(
+            self.params, jnp.asarray(toks), self.caches, cur,
+            jnp.asarray(wl), self._next_key())
+        out = np.asarray(out)                          # (B, W) greedy samples
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        self.stats["spec_slot_steps"] += len(active)
+        self.stats["active_slot_steps"] += len(active)
+        for i in active:
+            n = 1                                      # pending always lands
+            while n < wl[i] and toks[i, n] == out[i, n - 1]:
+                n += 1
+            self.stats["spec_drafted"] += int(wl[i]) - 1
+            self.stats["spec_accepted"] += n - 1
+            r = self._slots[i]
+            for j in range(n):
+                # advance per emitted token: retire conditions (max_new, EOS,
+                # cache-full) must fire at exactly the same token as a
+                # sequential non-speculative decode would
+                self._pos[i] += 1
+                self._emit(i, int(out[i, j]), finished)
+                self.stats["spec_emitted"] += 1
+                if self._slots[i] is not r:
+                    # retired mid-window: the unemitted tail (and the
+                    # rejected scattered tokens) must be unreachable — the
+                    # retire path has to sentinel the slot's table row and
+                    # drop its page refs before any later scatter/attend
+                    if self.paged:
+                        assert (not self._seq_pages[i]
+                                and (self._table[i] == self.n_pages).all()), \
+                            "mid-window retirement left stale page mappings"
+                    break
+
     def run(self) -> List[Request]:
         finished: List[Request] = []
         while self.queue or any(s is not None for s in self._slots):
@@ -809,6 +954,9 @@ class ServeEngine:
                 continue   # everything admitted retired at its first token
             if self.paged and self._table_dirty:
                 self._push_table()
+            if self.spec > 1:
+                self._spec_step(active, finished)
+                continue
             cur = jnp.asarray(self._pos + 1, jnp.int32)   # post-append lengths
             tok, self.caches = self._decode_step(
                 self.params, jnp.asarray(self._pending), self.caches, cur,

@@ -1,0 +1,164 @@
+"""Property tests for the host-side page bookkeeping (serving/paging.py).
+
+An interpreter drives ``PagePool`` + ``RadixIndex`` through randomized
+admit / retire / evict churn modelled on what ``ServeEngine`` does — admissions
+match the radix tree, incref shared prefix pages, allocate (evicting under
+pressure) the rest, and register full chunks; retirements decref everything the
+sequence held. After **every** operation the full accounting invariant is
+checked:
+
+    refs[p]  ==  #active sequences holding p  +  #radix nodes retaining p
+
+which simultaneously pins the three properties the engine relies on:
+
+* refcounts never go negative (and free list ⊔ referenced pages partition the
+  pool — ``PagePool.check``);
+* LRU eviction never frees a page an active sequence still maps (evictable
+  leaves are index-only, ``refs == 1``);
+* a copy-on-write tail page never aliases any referenced page — the COW target
+  comes off the free list, so the shared source page's KV is never clobbered.
+
+Prompts are drawn over a tiny vocab with deliberate shared prefixes so radix
+hits, partial hits, and chunk collisions are all common at ``max_examples``
+scale.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paging import PagePool, RadixIndex
+
+PS = 4           # page size: tiny so multi-chunk prompts are cheap
+N_PAGES = 12     # small pool: alloc failure + eviction pressure are routine
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["admit", "admit", "admit", "retire", "evict"]),
+              st.integers(0, 2 ** 16 - 1)),
+    min_size=1, max_size=50)
+
+
+def _prompt(rng):
+    """Random prompt over a 3-token vocab, usually sharing a page-aligned
+    prefix with earlier prompts (vocab**PS = 81 chunk values → collisions)."""
+    base = rng.integers(0, 3, size=PS * int(rng.integers(1, 4)))
+    tail = rng.integers(0, 3, size=int(rng.integers(1, 2 * PS)))
+    return np.concatenate([base, tail]).astype(np.int32)
+
+
+class _Model:
+    """Engine-shaped driver: active sequences hold one pool ref per mapped
+    page; the radix index holds one per registered node."""
+
+    def __init__(self):
+        self.pool = PagePool(N_PAGES)
+        self.radix = RadixIndex(PS)
+        self.seqs = {}          # seq id -> (tokens, [pages])
+        self.next_id = 0
+
+    # ---- the invariant -------------------------------------------------
+    def check(self):
+        self.pool.check()
+        assert (self.pool.refs >= 0).all()
+        want = np.zeros(N_PAGES, np.int64)
+        for _, pages in self.seqs.values():
+            for p in pages:
+                want[p] += 1
+        for p in self.radix.held_pages():
+            want[p] += 1
+        np.testing.assert_array_equal(self.pool.refs, want)
+
+    # ---- operations ----------------------------------------------------
+    def admit(self, rng):
+        tokens = _prompt(rng)
+        pages, matched, partial = self.radix.match(tokens)
+        # engine rule: keep at least one suffix token to prefill; a clamped
+        # match invalidates the partial tail hit (it hangs off the unclamped
+        # depth — _match_prefix does the same)
+        while matched >= len(tokens):
+            pages.pop()
+            matched -= PS
+            partial = None
+        self.pool.incref(pages)
+        if partial is not None:
+            # engine rule (_plan_paged): pin the COW source over evict/alloc —
+            # an index-only tail hit has refs == 1 and would otherwise be
+            # evicted under pressure and handed back as a writable fresh page
+            self.pool.incref([partial.page])
+        need = -(-(len(tokens) - matched) // PS)
+        if self.pool.free_count < need:
+            self.radix.evict(self.pool, need)
+        referenced = set(np.flatnonzero(self.pool.refs).tolist())
+        fresh = self.pool.alloc(need)
+        if partial is not None:
+            self.pool.decref([partial.page])
+        if fresh is None:                       # pool genuinely full: abort
+            self.pool.decref(pages)
+            return
+        # COW property: the tail target is a fresh page, never the shared
+        # source (partial.page) nor any other referenced page
+        assert not (set(fresh) & referenced)
+        if partial is not None:
+            assert fresh[0] != partial.page
+        self.radix.insert(tokens, pages + fresh, self.pool)
+        self.seqs[self.next_id] = (tokens, pages + fresh)
+        self.next_id += 1
+
+    def retire(self, rng):
+        if not self.seqs:
+            return
+        sid = sorted(self.seqs)[int(rng.integers(0, len(self.seqs)))]
+        _, pages = self.seqs.pop(sid)
+        self.pool.decref(pages)
+
+    def evict(self, rng):
+        held_by_seqs = {p for _, pages in self.seqs.values() for p in pages}
+        self.radix.evict(self.pool, int(rng.integers(1, N_PAGES + 1)))
+        # LRU eviction must never have freed a sequence-mapped page
+        for p in held_by_seqs:
+            assert self.pool.refs[p] >= 1
+
+
+class TestPagingInvariants:
+    @settings(max_examples=60, deadline=None)
+    @given(ops=OPS, seed=st.integers(0, 2 ** 16 - 1))
+    def test_churn_preserves_accounting(self, ops, seed):
+        rng = np.random.default_rng(seed)
+        m = _Model()
+        for op, _ in ops:
+            getattr(m, op)(rng)
+            m.check()
+        # drain: retiring everything and evicting the whole index empties
+        # the pool back to its initial state
+        while m.seqs:
+            m.retire(rng)
+            m.check()
+        m.radix.evict(m.pool, N_PAGES + 1)
+        m.check()
+        while m.radix.n_nodes:
+            freed = m.radix.evict(m.pool, N_PAGES + 1)
+            if not freed:
+                break
+            m.check()
+        assert m.pool.free_count == N_PAGES
+        assert not m.radix.held_pages()
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16 - 1))
+    def test_shared_prefix_pages_survive_retire(self, seed):
+        """Two sequences sharing a radix prefix: retiring one never frees the
+        pages the other still maps."""
+        rng = np.random.default_rng(seed)
+        m = _Model()
+        for _ in range(4):
+            m.admit(rng)
+            m.check()
+        if len(m.seqs) >= 2:
+            sids = sorted(m.seqs)
+            survivor_pages = set(m.seqs[sids[1]][1])
+            _, pages = m.seqs.pop(sids[0])
+            m.pool.decref(pages)
+            m.check()
+            for p in survivor_pages:
+                assert m.pool.refs[p] >= 1

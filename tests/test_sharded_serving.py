@@ -7,10 +7,13 @@ heads degrade to replication) across the full path × KV-cache matrix —
 fake / dequant-fp / fused-int8 × fp / int8 — and asserts the emitted tokens are
 identical to the single-device engine, per request. The same matrix then runs
 the paged cache layout (DESIGN.md §3.8) at tp=2 on a shared-prefix workload:
-paged@tp2 with radix prefix hits must equal dense single-device, token-exact. The same subprocess pins the
-row-parallel int32-accumulator ordering (qlinear ref path bitwise vs
-single-device: the cross-shard reduction must happen on integer values before
-the f32 dequant multiply — hints.constrain_gemm_acc).
+paged@tp2 with radix prefix hits must equal dense single-device, token-exact.
+One speculative case (DESIGN.md §3.9) then serves speculate=4 draft windows
+through the sharded paged fused-int8 path and must equal single-device
+non-speculative decode. The same subprocess pins the row-parallel
+int32-accumulator ordering (qlinear ref path bitwise vs single-device: the
+cross-shard reduction must happen on integer values before the f32 dequant
+multiply — hints.constrain_gemm_acc).
 
 The CI ``sharded-serving`` job runs this file; it also runs under tier-1 by
 default (the top-level pytest process stays on the real single CPU device —
@@ -109,6 +112,37 @@ CODE = textwrap.dedent("""
               flush=True)
         if not ok:
             fails.append(("paged", c))
+
+    # Speculative decoding (DESIGN.md §3.9) at tp=2 through the paged int8
+    # path: speculate=4 draft windows verified by the sharded multi-token
+    # kernel must emit exactly the single-device non-speculative tokens. One
+    # case — the headline fused-int8 + int8-KV combo; the full speculative
+    # matrix runs single-device in tier-1 (tests/test_speculative.py).
+    motif = rng.integers(1, cfg.vocab, size=4).astype(np.int32)
+    sprompts = [np.tile(motif, 3), pprompts[1], np.tile(motif[:3], 2)]
+    # budgets long enough for the greedy streams to settle into the repeated
+    # continuations the prompt-lookup drafter can ride — short budgets decode
+    # the whole workload before any draft is accepted, and the acceptance
+    # assertion below would then vacuously test nothing but overhead
+    SMAX_NEW = [16, 12, 20]
+
+    def serve_spec(mesh, speculate):
+        eng = E.ServeEngine(cfg, qparams, batch_size=2, max_len=32,
+                            quant=ql.W8A8_INT8, path="fused-int8",
+                            kv_cache="int8", mesh=mesh, cache_layout="paged",
+                            page_size=8, speculate=speculate)
+        eng.submit([x.copy() for x in sprompts], max_new=list(SMAX_NEW))
+        done = eng.run()
+        return {r.rid: r.out for r in done}, eng
+
+    spec_base, _ = serve_spec(None, 1)
+    spec_got, eng = serve_spec(mesh2, 4)
+    ok = spec_got == spec_base and eng.stats["spec_accepted"] > 0
+    print(f"spec tp=2 fused-int8/int8 paged accept={eng.accept_rate():.2f}: "
+          f"{'OK' if ok else 'MISMATCH ' + repr((spec_got, spec_base))}",
+          flush=True)
+    if not ok:
+        fails.append(("speculative-tp2",))
 
     # row-parallel int32-accumulator ordering (ref backend, bitwise)
     mesh = make_debug_mesh(4, 2)
