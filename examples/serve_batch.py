@@ -27,6 +27,15 @@ tokens/step printed. Pays off on repetitive traffic (templates, code); combine
 with ``--cache-layout paged --kv-cache int8`` for the full paged-int8 verify
 path.
 
+``--chunked --token-budget N`` serves with chunked prefill + prefill-decode
+interleaving (DESIGN.md §3.10): every step packs each generating slot's decode
+row first, then fills the leftover budget with prompt chunks through the
+ragged flash-prefill kernel — token-exact vs unchunked admission. Combined
+with ``--quant-kernel-stats``, the replay additionally reports the per-chunk
+CrossQuant kernel proportion (the §4.1 statistic computed over each
+token_budget-sized admission slice) and its token-weighted aggregate against
+the whole-prompt figure — chunked admission leaves the metric unchanged.
+
 ``--mesh data,model`` serves TP-sharded on a host mesh (DESIGN.md §3.7) — set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 
@@ -34,6 +43,7 @@ path.
         [--path ref|dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
         [--prompt-lens 6,10,14] [--eos-id N] [--quant-kernel-stats]
         [--mesh 4,2] [--speculate 4] [--cache-layout paged]
+        [--chunked --token-budget 16]
 """
 import argparse
 import time
@@ -84,11 +94,14 @@ def mixed_workload(cfg, n_requests, prompt_lens, seed=0, shared_prefix=0):
 
 def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
           eos_id=None, tag="", mesh=None, cache_layout="dense", page_size=8,
-          n_pages=None, speculate=1):
+          n_pages=None, speculate=1, chunked=False, token_budget=None):
+    kw = {}
+    if chunked:
+        kw = dict(chunked=True, token_budget=token_budget)
     engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
                          eos_id=eos_id, path=path, kv_cache=kv_cache, mesh=mesh,
                          cache_layout=cache_layout, page_size=page_size,
-                         n_pages=n_pages, speculate=speculate)
+                         n_pages=n_pages, speculate=speculate, **kw)
     engine.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.time()
     done = engine.run()
@@ -106,6 +119,10 @@ def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
         spec = (f", speculate={speculate} "
                 f"accept_rate={engine.accept_rate():.2f} "
                 f"tok/step={engine.tokens_per_step():.2f}")
+    if chunked:
+        spec += (f", token_budget={token_budget} "
+                 f"chunk_steps={engine.stats['chunk_steps']} "
+                 f"prefill_rows={engine.stats['chunk_prefill_rows']}")
     print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache}, "
           f"occupancy={engine.occupancy():.2f}, "
@@ -117,29 +134,50 @@ def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
 class _KernelStatsObserver:
     """Observer shim (calibration.Observer protocol): per-layer kernel fractions."""
 
-    def __init__(self, bits: int, alpha: float):
-        self.bits, self.alpha = bits, alpha
+    def __init__(self, bits: int, alpha: float, chunk: int = 0):
+        self.bits, self.alpha, self.chunk = bits, alpha, chunk
         self.stats: dict = {}
 
     def observe(self, name, x):
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        rec = self.stats.setdefault(name, {"pt": [], "cq": []})
+        rec = self.stats.setdefault(name, {"pt": [], "cq": [], "chunks": []})
         rec["pt"].append(float(KA.per_token_kernel_fraction(x2, self.bits)))
         rec["cq"].append(float(KA.crossquant_kernel_fraction(x2, self.bits,
                                                              self.alpha)))
+        if self.chunk:
+            # token_budget-sized row slices: the activation rows one chunked
+            # admission step quantizes together. CrossQuant's column max c_j
+            # is re-derived from only the chunk's rows — the dynamic-c view
+            # of chunked admission (static-c serving is chunk-invariant by
+            # construction: its c_j comes from calibration, not the chunk).
+            for lo in range(0, x2.shape[0], self.chunk):
+                part = x2[lo: lo + self.chunk]
+                rec["chunks"].append(
+                    (part.shape[0],
+                     float(KA.crossquant_kernel_fraction(part, self.bits,
+                                                         self.alpha))))
 
 
-def report_kernel_stats(cfg, params, quant, done):
+def report_kernel_stats(cfg, params, quant, done, chunk: int = 0):
     """Replay the served traffic eagerly and print per-layer kernel proportions.
 
     The replay runs each request's prompt + generated tokens through the model in
     unroll mode (observers cannot run under scan) on the ref backend — the
     activations feeding every quantized linear are exactly those of the served
     sequences, so the reported proportions are traffic-faithful (paper §4.1).
+
+    With ``chunk`` (the ``--chunked`` serve's token budget), a second table
+    slices each layer's activation rows into token_budget-sized chunks — the
+    rows one chunked admission step quantizes together — and compares the
+    token-weighted aggregate of per-chunk CrossQuant proportions against the
+    whole-prompt figure. Causal attention makes the activations themselves
+    identical either way, so any gap is purely the dynamic column statistic
+    c_j seeing fewer rows per chunk; the aggregate staying at the whole-prompt
+    value is the §4.1 metric's invariance under chunked admission.
     """
     bits = getattr(quant, "a_bits", 8) or 8
     alpha = getattr(quant, "alpha", 0.15)
-    obs = _KernelStatsObserver(bits, alpha)
+    obs = _KernelStatsObserver(bits, alpha, chunk=chunk)
     ctx = QuantContext(quant, observer=obs)
     for r in done:
         toks = np.concatenate([r.prompt, np.asarray(r.out, np.int32)])
@@ -153,6 +191,18 @@ def report_kernel_stats(cfg, params, quant, done):
         cq = float(np.mean(rec["cq"]))
         shrink = (1 - cq / pt) if pt > 0 else 0.0
         print(f"  {name:<28} {pt:>9.2%} {cq:>10.2%} {shrink:>6.1%}")
+    if chunk:
+        print(f"per-chunk crossquant proportion (token_budget={chunk} "
+              f"admission slices, dynamic c_j per chunk):")
+        print(f"  {'layer':<28} {'chunks':>6} {'per-chunk':>10} "
+              f"{'whole':>8} {'|delta|':>8} {'spread':>7}")
+        for name, rec in sorted(obs.stats.items()):
+            ws = [w for w, _ in rec["chunks"]]
+            fs = [f for _, f in rec["chunks"]]
+            agg = float(np.average(fs, weights=ws))
+            cq = float(np.mean(rec["cq"]))
+            print(f"  {name:<28} {len(fs):>6d} {agg:>9.2%} {cq:>7.2%} "
+                  f"{abs(agg - cq):>7.4f} {max(fs) - min(fs):>6.2%}")
 
 
 def main() -> None:
@@ -173,6 +223,14 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend N identical tokens to every prompt (shared "
                          "system prompt — exercises paged prefix reuse)")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked prefill + prefill-decode interleaving "
+                         "(DESIGN.md §3.10): admissions stream through "
+                         "token_budget-sized ragged steps instead of one "
+                         "whole-prompt launch; requires --cache-layout paged")
+    ap.add_argument("--token-budget", type=int, default=16, metavar="N",
+                    help="per-step token budget for --chunked (decode rows "
+                         "first, leftover budget filled with prefill chunks)")
     ap.add_argument("--speculate", type=int, default=1, metavar="K",
                     help="speculative decoding (DESIGN.md §3.9): verify "
                          "K-token draft windows from the self-drafting n-gram "
@@ -206,11 +264,14 @@ def main() -> None:
         from repro.launch.mesh import parse_mesh_arg
         mesh = parse_mesh_arg(args.mesh)
 
+    if args.chunked and args.cache_layout != "paged":
+        ap.error("--chunked requires --cache-layout paged")
     prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
     prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens,
                                       shared_prefix=args.shared_prefix)
     layout_kw = dict(cache_layout=args.cache_layout, page_size=args.page_size,
-                     n_pages=args.n_pages, speculate=args.speculate)
+                     n_pages=args.n_pages, speculate=args.speculate,
+                     chunked=args.chunked, token_budget=args.token_budget)
 
     if args.quant != "int8":
         # The int8 KV cache is independent of weight quantization and applies to
@@ -239,7 +300,8 @@ def main() -> None:
     for r in done[:3]:
         print(f"  req {r.rid}: {r.prompt[:4].tolist()}... -> {r.out[:6]}")
     if args.quant_kernel_stats:
-        report_kernel_stats(cfg, serve_params, quant, done)
+        report_kernel_stats(cfg, serve_params, quant, done,
+                            chunk=args.token_budget if args.chunked else 0)
 
 
 if __name__ == "__main__":

@@ -334,6 +334,233 @@ def paged_decode_attention_pallas(
     )(*pref, *args)
 
 
+def _ragged_prefill_kernel(tab_ref, qstart_ref, qlen_ref, kvlen_ref,
+                           q_ref, kn_ref, vn_ref, k_hbm, v_hbm, *refs,
+                           ps: int, n_pages_max: int, n_kv_heads: int,
+                           n_groups: int, chunk_cap: int, scale: float,
+                           window: Optional[int], softcap: Optional[float],
+                           kv_int8: bool):
+    """Ragged chunked-prefill attention over the paged pool (DESIGN.md §3.10).
+
+    grid = (B,) over slots of a *packed* ragged query block: slot ``b`` owns
+    packed rows ``[q_start[b], q_start[b] + q_len[b])`` (``q_len ≤ chunk_cap``),
+    all three per-slot extents riding as scalar-prefetch vectors alongside the
+    flattened page table. The K/V pools stay in HBM and each slot's live pages
+    stream through the identical double-buffered async-copy pipeline as
+    ``_paged_decode_kernel`` — int8-KV scale tiles included — so warm
+    (radix-hit) suffix prefill, cold prefill, later chunks of the same prompt,
+    and the q_len == 1 decode degenerate share one launch with no bucket
+    padding.
+
+    The chunk starts at absolute position ``cs = kv_len - q_len`` (cs ==
+    prefix_len for the first chunk); chunk token i sits at ``cs + i`` and the
+    causal mask is per score-tile row: ``k_pos <= cs + row // G``. Key
+    positions inside ``[cs, kv_len)`` — the chunk's own tokens, already
+    scattered into the pool before the launch — are *overlaid* with the packed
+    floating-point ``k_new``/``v_new`` rows (and their int8-KV scale columns
+    neutralized to 1.0): the chunk attends itself unquantized, exactly the
+    in-flight fp-suffix overlay of ``layers.paged_prefill_attention``, so
+    chunked numerics match the bucketed warm path. The packed buffers carry
+    ``ps`` leading pad rows so the per-page overlay offset
+    ``q_start + j·ps - cs`` stays in-bounds when a chunk starts mid-page.
+
+    The output block is shared by every grid step (zeroed at b == 0; the TPU
+    grid is sequential, so the read-modify-write blend below is ordered):
+    each slot blends exactly its ``q_len`` valid rows back into
+    ``[q_start, q_start + chunk_cap)`` and rows past ``q_len`` keep their
+    previous contents — packed rows no slot owns stay zero, and a dead slot
+    (q_len == 0) skips its page loop entirely (``n_live = 0``)."""
+    if kv_int8:
+        ks_hbm, vs_hbm, o_ref = refs
+    else:
+        o_ref, = refs
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qs = qstart_ref[b]
+    qn = qlen_ref[b]
+    kvl = kvlen_ref[b]
+    cs = kvl - qn                               # chunk's first absolute position
+    C, G = chunk_cap, n_groups
+    R = C * G
+    D = q_ref.shape[-1]
+    P = k_hbm.shape[0]
+    Npad = kn_ref.shape[0]
+    n_live = jnp.where(qn > 0, pl.cdiv(kvl, ps), 0)
+    win_idx = jax.lax.broadcasted_iota(jnp.int32, (R, ps), 0) // G
+    q_pos = cs + jnp.minimum(win_idx, jnp.maximum(qn - 1, 0))
+
+    def body(kbuf, vbuf, sbuf, sem):
+        def dmas(slot, j):
+            # sentinel clamp exactly as _paged_decode_kernel: unreachable below
+            # kv_len for live rows, garbage-but-finite on all-sentinel rows
+            page = jnp.minimum(
+                tab_ref[b * n_pages_max + jnp.minimum(j, n_pages_max - 1)], P - 1)
+            copies = [
+                pltpu.make_async_copy(k_hbm.at[page], kbuf.at[slot],
+                                      sem.at[slot, 0]),
+                pltpu.make_async_copy(v_hbm.at[page], vbuf.at[slot],
+                                      sem.at[slot, 1]),
+            ]
+            if kv_int8:
+                copies += [
+                    pltpu.make_async_copy(ks_hbm.at[page], sbuf.at[slot, 0],
+                                          sem.at[slot, 2]),
+                    pltpu.make_async_copy(vs_hbm.at[page], sbuf.at[slot, 1],
+                                          sem.at[slot, 3]),
+                ]
+            return copies
+
+        @pl.when(n_live > 0)
+        def _warmup():
+            for c in dmas(0, 0):
+                c.start()
+
+        def page_step(j, carry):
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n_live)
+            def _prefetch():
+                for c in dmas(1 - slot, j + 1):
+                    c.start()
+
+            for c in dmas(slot, j):
+                c.wait()
+            k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (R, ps), 1)
+            mask = k_pos <= q_pos
+            if window is not None:
+                mask &= (q_pos - k_pos) < window
+            # fp overlay of the chunk's own tokens: in-page rows at absolute
+            # positions >= cs read the packed fp k_new/v_new instead of the
+            # pool (and skip the int8 scales). The dynamic-slice start clamps
+            # so pure-history pages (offset < 0) stay in-bounds — their rows
+            # all fail the >= cs test, so the fetched bytes never contribute.
+            row_pos = jax.lax.broadcasted_iota(jnp.int32, (ps, D), 0) + j * ps
+            icd = row_pos >= cs                                   # (ps, D)
+            ic2 = (jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+                   + j * ps) >= cs                                # (1, ps)
+            off = jnp.clip(qs + (j * ps - cs), 0, Npad - ps)
+            ov_k = kn_ref[pl.ds(off, ps)]                         # (ps, Hkv, D)
+            ov_v = vn_ref[pl.ds(off, ps)]
+            scales = sbuf[slot] if kv_int8 else None              # (2, Hkv, ps)
+            out = []
+            for h in range(n_kv_heads):        # static unroll over kv heads
+                m_prev, l_prev, acc_prev = carry[h]
+                q = q_ref[h, pl.ds(qs, C)].reshape(R, D).astype(jnp.float32)
+                k = jnp.where(icd, ov_k[:, h, :].astype(jnp.float32),
+                              kbuf[slot, :, h, :].astype(jnp.float32))
+                s = jax.lax.dot_general(
+                    q, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * scale
+                if kv_int8:
+                    s = s * jnp.where(ic2, 1.0, scales[0, h:h + 1])
+                if softcap is not None:
+                    s = softcap * jnp.tanh(s / softcap)
+                m_new = jnp.maximum(
+                    m_prev, jnp.max(jnp.where(mask, s, NEG_INF), axis=1))
+                p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+                corr = jnp.exp(m_prev - m_new)
+                v = jnp.where(icd, ov_v[:, h, :].astype(jnp.float32),
+                              vbuf[slot, :, h, :].astype(jnp.float32))
+                pv = (p * jnp.where(ic2, 1.0, scales[1, h:h + 1])
+                      if kv_int8 else p)
+                out.append((m_new, l_prev * corr + jnp.sum(p, axis=1),
+                            acc_prev * corr[:, None] + jax.lax.dot_general(
+                                pv, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)))
+            return tuple(out)
+
+        init = tuple((jnp.full((R,), NEG_INF, jnp.float32),
+                      jnp.zeros((R,), jnp.float32),
+                      jnp.zeros((R, D), jnp.float32))
+                     for _ in range(n_kv_heads))
+        state = jax.lax.fori_loop(0, n_live, page_step, init)
+        tok = jax.lax.broadcasted_iota(jnp.int32, (C, G, D), 0)
+        for h in range(n_kv_heads):
+            _, l, acc = state[h]
+            new = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+            old = o_ref[h, pl.ds(qs, C)]                          # (C, G, D)
+            o_ref[h, pl.ds(qs, C)] = jnp.where(tok < qn,
+                                               new.reshape(C, G, D), old)
+
+    pl.run_scoped(
+        body,
+        kbuf=pltpu.VMEM((2,) + k_hbm.shape[1:], k_hbm.dtype),
+        vbuf=pltpu.VMEM((2,) + v_hbm.shape[1:], v_hbm.dtype),
+        sbuf=pltpu.VMEM((2, 2, n_kv_heads, ps), jnp.float32),
+        sem=pltpu.SemaphoreType.DMA((2, 4)),
+    )
+
+
+def ragged_prefill_attention_pallas(
+    q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+    k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, q_start: jax.Array, q_len: jax.Array,
+    kv_len: jax.Array, *, chunk_cap: int,
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
+    window: Optional[int] = None, softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (Hkv, Npad, G, D) packed ragged queries (``ops`` pads ``ps`` leading
+    + ``chunk_cap`` trailing zero rows and adds the leading pad to
+    ``q_start``); k_new/v_new: (Npad, Hkv, D) the chunk tokens' fp K/V in the
+    same packed layout; pools/page_table/scales exactly as
+    :func:`paged_decode_attention_pallas`; q_start/q_len/kv_len: (B,) int32
+    per-slot packed offset, chunk length (≤ chunk_cap; 0 ⇒ dead slot) and
+    total post-scatter visible length → (Hkv, Npad, G, D) with slot b's rows
+    at ``[q_start[b], q_start[b] + q_len[b])`` and every other row zero.
+
+    One launch serves cold prefill, warm suffix prefill, mid-prompt chunks
+    and single-token decode rows (see ``_ragged_prefill_kernel``); the pools
+    never materialize a dense view and dead slots skip their page walk.
+    """
+    Hkv, Npad, G, D = q.shape
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    B, maxP = page_table.shape
+    assert k_new.shape == v_new.shape == (Npad, Hkv, D), (k_new.shape, q.shape)
+    assert q_start.shape == q_len.shape == kv_len.shape == (B,)
+    assert chunk_cap >= 1 and Npad >= ps + max(ps, chunk_cap), (Npad, ps, chunk_cap)
+    kv_int8 = k_scale is not None
+    assert kv_int8 == (v_scale is not None), "pass both scale pools or neither"
+
+    kernel = functools.partial(
+        _ragged_prefill_kernel, ps=ps, n_pages_max=maxP, n_kv_heads=Hkv,
+        n_groups=G, chunk_cap=chunk_cap, scale=D ** -0.5, window=window,
+        softcap=softcap, kv_int8=kv_int8)
+    full = lambda shape: pl.BlockSpec(shape, lambda b, *pref: (0,) * len(shape))
+    in_specs = [
+        full((Hkv, Npad, G, D)),                     # packed q, VMEM-resident
+        full((Npad, Hkv, D)),                        # packed fp k_new overlay
+        full((Npad, Hkv, D)),                        # packed fp v_new overlay
+        pl.BlockSpec(memory_space=pltpu.ANY),        # k pool, paged via DMA
+        pl.BlockSpec(memory_space=pltpu.ANY),        # v pool
+    ]
+    args = [q, k_new, v_new, k_pages, v_pages]
+    if kv_int8:
+        assert k_scale.shape == v_scale.shape == (P, Hkv, ps), (
+            k_scale.shape, (P, Hkv, ps))
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=full((Hkv, Npad, G, D)),
+    )
+    pref = [page_table.reshape(-1).astype(jnp.int32),
+            q_start.astype(jnp.int32), q_len.astype(jnp.int32),
+            kv_len.astype(jnp.int32)]
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, Npad, G, D), q.dtype),
+        interpret=interpret,
+    )(*pref, *args)
+
+
 def flash_attention_pallas(
     q: jax.Array, k: jax.Array, v: jax.Array,
     kv_len: Optional[jax.Array] = None, *,

@@ -2,11 +2,14 @@
 
 Handles (a) padding to block multiples (zero padding is exact for integer GEMMs and
 for row-absmax quantization), (b) backend dispatch: real Mosaic lowering on TPU,
-``interpret=True`` everywhere else (CPU CI and the correctness tests), (c) block-size
-selection for small shapes, (d) the custom-kernel boundary under a TP-sharded
-serving plan (DESIGN.md §3.7): each wrapper body runs as a GSPMD-*manual* region
-(``hints.manual_kernel``) so every device computes the exact single-device kernel
-result on gathered operands — a no-op outside a hinted mesh.
+``interpret=True`` everywhere else (CPU CI and the correctness tests) — and, for
+the paged serving kernels, ``REPRO_KERNEL_EXEC=ref`` routes off-TPU calls to the
+pure-jnp oracle instead (:func:`_exec_mode`: interpret emulation is a correctness
+harness, not an execution backend), (c) block-size selection for small shapes,
+(d) the custom-kernel boundary under a TP-sharded serving plan (DESIGN.md §3.7):
+each wrapper body runs as a GSPMD-*manual* region (``hints.manual_kernel``) so
+every device computes the exact single-device kernel result on gathered operands
+— a no-op outside a hinted mesh.
 
 The hinted mesh is threaded into the jitted wrappers as a *static* argument: jit's
 trace cache does not key on contextvars, so reading the hint inside the traced body
@@ -15,6 +18,7 @@ would silently reuse whichever of the manual/plain lowerings was traced first.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -22,11 +26,30 @@ import jax.numpy as jnp
 from repro.kernels import act_quantize as _aq
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qgemm as _qg
+from repro.kernels import ref as _ref
 from repro.sharding import hints
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _exec_mode() -> str:
+    """Execution backend for the paged serving kernels: ``pallas`` (real
+    Mosaic lowering on TPU, ``interpret=True`` emulation elsewhere) or
+    ``ref`` (the pure-jnp oracle from :mod:`repro.kernels.ref`, XLA-compiled).
+
+    ``REPRO_KERNEL_EXEC=ref`` routes off-TPU calls to the oracle: interpret
+    emulation exists to *test* the kernels (it lowers the per-page DMA
+    pipeline to per-step dynamic slices), and its overhead is emulator cost,
+    not a serving signal — the serving benchmark opts in so CPU rows measure
+    the XLA execution of the same math. On TPU the Mosaic kernels always run;
+    the variable is read at call time and threaded into the jitted wrappers
+    as a static argument (like ``mesh``: jit's trace cache does not key on
+    environment reads inside the traced body)."""
+    mode = os.environ.get("REPRO_KERNEL_EXEC", "pallas")
+    assert mode in ("pallas", "ref"), f"REPRO_KERNEL_EXEC={mode!r}"
+    return "pallas" if jax.default_backend() == "tpu" else mode
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -147,10 +170,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len=None, *,
                             mesh=hints.current_mesh())
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh"))
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh",
+                                             "exec_mode"))
 def _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
                             k_scale_pages, v_scale_pages, *,
-                            window, softcap, mesh):
+                            window, softcap, mesh, exec_mode):
     B, S, H, D = q.shape
     Hkv = k_pages.shape[2]
     G = H // Hkv
@@ -158,6 +182,14 @@ def _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
     def body(q, k_pages, v_pages, page_table, kv_len, k_scale_pages,
              v_scale_pages):
         qg = q.reshape(B, Hkv, G, D)
+        kvl = jnp.broadcast_to(
+            jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,))
+        if exec_mode == "ref":
+            out = _ref.paged_decode_attention_ref(
+                qg, k_pages, v_pages, page_table, kvl,
+                k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+                window=window, softcap=softcap)
+            return out.reshape(B, 1, H, D)
         ks = vs = None
         if k_scale_pages is not None:
             # (P, ps, Hkv, 1) scale pools → the kernel's (P, Hkv, ps) row
@@ -167,8 +199,7 @@ def _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
             ks = jnp.transpose(k_scale_pages[..., 0], (0, 2, 1))
             vs = jnp.transpose(v_scale_pages[..., 0], (0, 2, 1))
         out = _fa.paged_decode_attention_pallas(
-            qg, k_pages, v_pages, page_table,
-            jnp.broadcast_to(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+            qg, k_pages, v_pages, page_table, kvl,
             k_scale=ks, v_scale=vs,
             window=window, softcap=softcap, interpret=_interpret())
         return out.reshape(B, 1, H, D)
@@ -197,19 +228,32 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return _paged_decode_attention(q, k_pages, v_pages, page_table, kv_len,
                                    k_scale_pages, v_scale_pages,
                                    window=window, softcap=softcap,
-                                   mesh=hints.current_mesh())
+                                   mesh=hints.current_mesh(),
+                                   exec_mode=_exec_mode())
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh"))
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "mesh",
+                                             "exec_mode"))
 def _paged_verify_attention(q, k_pages, v_pages, page_table, kv_len, q_len,
                             k_scale_pages, v_scale_pages, *,
-                            window, softcap, mesh):
+                            window, softcap, mesh, exec_mode):
     B, W, H, D = q.shape
     Hkv = k_pages.shape[2]
     G = H // Hkv
 
     def body(q, k_pages, v_pages, page_table, kv_len, q_len, k_scale_pages,
              v_scale_pages):
+        if exec_mode == "ref":
+            out = _ref.paged_verify_attention_ref(
+                jnp.transpose(q.reshape(B, W, Hkv, G, D), (0, 2, 1, 3, 4)),
+                k_pages, v_pages, page_table,
+                jnp.broadcast_to(
+                    jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+                jnp.broadcast_to(
+                    jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,)),
+                k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+                window=window, softcap=softcap)
+            return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, W, H, D)
         # (B, W, H, D) → the kernel's (window, group)-ordered score-tile rows
         qg = jnp.transpose(q.reshape(B, W, Hkv, G, D),
                            (0, 2, 1, 3, 4)).reshape(B, Hkv, W * G, D)
@@ -255,7 +299,97 @@ def paged_verify_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return _paged_verify_attention(q, k_pages, v_pages, page_table, kv_len,
                                    q_len, k_scale_pages, v_scale_pages,
                                    window=window, softcap=softcap,
-                                   mesh=hints.current_mesh())
+                                   mesh=hints.current_mesh(),
+                                   exec_mode=_exec_mode())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_cap", "window", "softcap",
+                                             "mesh", "exec_mode"))
+def _ragged_prefill_attention(q, k_new, v_new, k_pages, v_pages, page_table,
+                              q_start, q_len, kv_len, k_scale_pages,
+                              v_scale_pages, *, chunk_cap, window, softcap,
+                              mesh, exec_mode):
+    Nt, H, D = q.shape
+    Hkv, ps = k_pages.shape[2], k_pages.shape[1]
+    G = H // Hkv
+
+    def body(q, k_new, v_new, k_pages, v_pages, page_table, q_start, q_len,
+             kv_len, k_scale_pages, v_scale_pages):
+        B = page_table.shape[0]
+        if exec_mode == "ref":
+            out = _ref.ragged_prefill_attention_ref(
+                q.reshape(Nt, Hkv, G, D), k_new, v_new, k_pages, v_pages,
+                page_table,
+                jnp.reshape(q_start, (-1,)).astype(jnp.int32),
+                jnp.broadcast_to(
+                    jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,)),
+                jnp.broadcast_to(
+                    jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+                chunk_cap=chunk_cap, k_scale_pages=k_scale_pages,
+                v_scale_pages=v_scale_pages, window=window, softcap=softcap)
+            return out.reshape(Nt, H, D)
+        # packed (Nt, H, D) → the kernel's head-major (Hkv, Npad, G, D) with
+        # ps leading pad rows (mid-page chunk-start overlay offsets stay
+        # in-bounds) and max(ps, chunk_cap) trailing pad rows (the per-page
+        # overlay slice is ps rows wide and the blend writes chunk_cap rows —
+        # both must stay in-bounds past the last slot); q_start shifts by the
+        # leading pad
+        trail = max(ps, chunk_cap)
+        qg = jnp.transpose(q.reshape(Nt, Hkv, G, D), (1, 0, 2, 3))
+        qp = jnp.pad(qg, ((0, 0), (ps, trail), (0, 0), (0, 0)))
+        knp = jnp.pad(k_new, ((ps, trail), (0, 0), (0, 0)))
+        vnp = jnp.pad(v_new, ((ps, trail), (0, 0), (0, 0)))
+        ks = vs = None
+        if k_scale_pages is not None:
+            ks = jnp.transpose(k_scale_pages[..., 0], (0, 2, 1))
+            vs = jnp.transpose(v_scale_pages[..., 0], (0, 2, 1))
+        out = _fa.ragged_prefill_attention_pallas(
+            qp, knp, vnp, k_pages, v_pages, page_table,
+            jnp.reshape(q_start, (-1,)).astype(jnp.int32) + ps,
+            jnp.broadcast_to(jnp.reshape(q_len, (-1,)).astype(jnp.int32), (B,)),
+            jnp.broadcast_to(jnp.reshape(kv_len, (-1,)).astype(jnp.int32), (B,)),
+            chunk_cap=chunk_cap, k_scale=ks, v_scale=vs,
+            window=window, softcap=softcap, interpret=_interpret())
+        return jnp.transpose(out[:, ps:ps + Nt], (1, 0, 2, 3)).reshape(Nt, H, D)
+
+    return hints.manual_kernel(
+        body, (q, k_new, v_new, k_pages, v_pages, page_table, q_start, q_len,
+               kv_len, k_scale_pages, v_scale_pages), mesh=mesh)
+
+
+def ragged_prefill_attention(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                             k_pages: jax.Array, v_pages: jax.Array,
+                             page_table: jax.Array, q_start: jax.Array,
+                             q_len: jax.Array, kv_len: jax.Array, *,
+                             chunk_cap: int, k_scale_pages=None,
+                             v_scale_pages=None, window=None,
+                             softcap=None) -> jax.Array:
+    """Ragged chunked-prefill attention over the paged pool (DESIGN.md §3.10):
+    q (Nt, H, D) — a packed ragged query block whose slot b owns rows
+    ``[q_start[b], q_start[b] + q_len[b])`` (q_len ≤ ``chunk_cap``; 0 marks a
+    dead slot) — against the same (P, ps, Hkv, D) pools / (B, maxP) page
+    table / optional (P, ps, Hkv, 1) int8-KV scale pools as
+    ``paged_decode_attention`` → (Nt, H, D), rows no slot owns zeroed.
+
+    ``kv_len`` (B,) counts each slot's total visible tokens *after* this
+    chunk's scatter, so the chunk spans absolute positions
+    ``[kv_len - q_len, kv_len)`` and the causal mask is
+    ``k_pos <= (kv_len - q_len) + i`` per chunk token i — cold prefill, warm
+    radix-hit suffix prefill, mid-prompt chunks and single-token decode rows
+    (q_len == 1) all serve through this one launch, with the chunk's own
+    tokens read from the packed fp ``k_new``/``v_new`` (N, Hkv, D) instead of
+    their freshly scattered (possibly int8) pool pages — the
+    ``paged_prefill_attention`` fp-suffix overlay, in-kernel. Same
+    double-buffered per-page DMA pipeline and in-kernel int8-KV dequant
+    points as decode; runs as one GSPMD-manual region under a TP-sharded
+    plan."""
+    return _ragged_prefill_attention(q, k_new, v_new, k_pages, v_pages,
+                                     page_table, q_start, q_len, kv_len,
+                                     k_scale_pages, v_scale_pages,
+                                     chunk_cap=chunk_cap, window=window,
+                                     softcap=softcap,
+                                     mesh=hints.current_mesh(),
+                                     exec_mode=_exec_mode())
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "alpha", "bm", "bk", "mesh"))

@@ -161,6 +161,85 @@ def paged_verify_attention_ref(
     return jnp.einsum("bhwgt,bthd->bhwgd", p, vf).astype(q.dtype)
 
 
+def ragged_prefill_attention_ref(
+    q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+    k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, q_start: jax.Array, q_len: jax.Array,
+    kv_len: jax.Array, *, chunk_cap: int,
+    k_scale_pages: jax.Array | None = None,
+    v_scale_pages: jax.Array | None = None,
+    window: int | None = None, softcap: float | None = None) -> jax.Array:
+    """Ragged chunked-prefill attention oracle (DESIGN.md §3.10).
+
+    q: (N, Hkv, G, D) — a *packed* ragged query block: slot ``b`` owns rows
+    ``[q_start[b], q_start[b] + q_len[b])`` (``q_len[b] ≤ chunk_cap``; rows no
+    slot owns are ignored and zero in the output). ``kv_len`` (B,) is each
+    slot's total visible length *after* this chunk's scatter, so the chunk
+    starts at absolute position ``cs = kv_len - q_len`` and chunk token i sits
+    at ``cs + i`` — the causal mask is ``k_pos <= cs + i``, which covers cold
+    prefill (cs == 0), warm radix-hit suffix prefill (cs == prefix_len), later
+    chunks of the same prompt (cs == tokens already chunked in), and the
+    decode degenerate (q_len == 1, cs == kv_len - 1) in one launch with no
+    bucket padding.
+
+    ``k_new``/``v_new`` (N, Hkv, D) carry the chunk tokens' *floating-point*
+    K/V in the same packed layout: positions ``[cs, kv_len)`` read these rows
+    instead of the pool (and, int8-KV, bypass the per-token scales), exactly
+    the in-flight fp-suffix overlay of ``layers.paged_prefill_attention`` —
+    the chunk attends its own tokens unquantized, matching dense-prefill
+    numerics. Everything before ``cs`` reads the pool through the page table
+    with the decode oracle's scale application. → (N, Hkv, G, D).
+    """
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    B, maxP = page_table.shape
+    N, Hkv, G, D = q.shape
+    C = chunk_cap
+    T = maxP * ps
+    gidx = jnp.clip(page_table[:, :, None] * ps + jnp.arange(ps)[None, None, :],
+                    0, P * ps - 1).reshape(B, T)
+    kf = k_pages.reshape(P * ps, *k_pages.shape[2:])[gidx].astype(jnp.float32)
+    vf = v_pages.reshape(P * ps, *v_pages.shape[2:])[gidx].astype(jnp.float32)
+
+    qs = q_start.astype(jnp.int32)
+    qln = q_len.astype(jnp.int32)
+    kvl = kv_len.astype(jnp.int32)
+    cs = kvl - qln
+    t_pos = jnp.arange(T)
+    in_chunk = (t_pos[None] >= cs[:, None]) & (t_pos[None] < kvl[:, None])
+    ov = jnp.clip(qs[:, None] + t_pos[None] - cs[:, None], 0, N - 1)   # (B, T)
+    kf = jnp.where(in_chunk[..., None, None], k_new[ov].astype(jnp.float32), kf)
+    vf = jnp.where(in_chunk[..., None, None], v_new[ov].astype(jnp.float32), vf)
+
+    def score_scales(pool):    # (P, ps, Hkv, 1) → (B, Hkv, 1, 1, T) broadcast
+        flat = pool.reshape(P * ps, pool.shape[2])[gidx]          # (B, T, Hkv)
+        flat = jnp.where(in_chunk[..., None], 1.0, flat)          # fp overlay
+        return jnp.transpose(flat, (0, 2, 1))[:, :, None, None, :]
+
+    ridx = jnp.clip(qs[:, None] + jnp.arange(C)[None], 0, N - 1)  # (B, C)
+    qb = jnp.transpose(q[ridx], (0, 2, 1, 3, 4))                  # (B,Hkv,C,G,D)
+    s = jnp.einsum("bhcgd,bthd->bhcgt", qb.astype(jnp.float32), kf) * (D ** -0.5)
+    if k_scale_pages is not None:
+        s = s * score_scales(k_scale_pages)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = cs[:, None] + jnp.minimum(jnp.arange(C)[None],
+                                      jnp.maximum(qln - 1, 0)[:, None])  # (B, C)
+    qp = q_pos[:, None, :, None, None]
+    valid = t_pos[None, None, None, None, :] <= qp
+    if window is not None:
+        valid &= (qp - t_pos[None, None, None, None, :]) < window
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale_pages is not None:
+        p = p * score_scales(v_scale_pages)
+    ob = jnp.einsum("bhcgt,bthd->bhcgd", p, vf)                   # (B,Hkv,C,G,D)
+    ob = jnp.transpose(ob, (0, 2, 1, 3, 4)).astype(q.dtype)       # (B,C,Hkv,G,D)
+    rvalid = jnp.arange(C)[None] < qln[:, None]                   # (B, C)
+    tgt = jnp.where(rvalid, qs[:, None] + jnp.arange(C)[None], N)
+    return jnp.zeros((N, Hkv, G, D), q.dtype).at[tgt.reshape(-1)].set(
+        ob.reshape(B * C, Hkv, G, D), mode="drop")
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, softcap: float | None = None) -> jax.Array:
     """Plain softmax attention oracle. q: (B,H,S,D); k/v: (B,H,S,D). f32 math."""

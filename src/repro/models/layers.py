@@ -517,12 +517,60 @@ def _paged_attention(q, k, v, cache: dict, page_table: Optional[jax.Array],
     return out, new_cache
 
 
+def _chunked_attention(q, k, v, cache: dict, page_table: jax.Array,
+                       cfg: ModelConfig, chunk: dict, *,
+                       window: Optional[int]):
+    """Packed ragged chunk step (DESIGN.md §3.10): scatter every packed token
+    through the page table at its own absolute position, then score the whole
+    ragged block in one ``ragged_prefill_attention`` launch. ``chunk`` carries
+    per-slot extents (``q_start``/``q_len``/``kv_len`` (B,)) and per-token
+    routing (``positions``/``slot_ids`` (Nt,), sentinel ``slot_ids == B`` for
+    pad rows). Decode rows are 1-token chunks; prefill chunks, draft-verify
+    windows and cold admissions are longer ones — one launch serves them all.
+    Returns (out (1, Nt, H, D), new_cache)."""
+    B_tab, maxP = page_table.shape
+    Nt = q.shape[1]
+    kv_int8 = "k_scale_pages" in cache
+    P, ps = cache["k_pages"].shape[0], cache["k_pages"].shape[1]
+
+    pos = jnp.reshape(chunk["positions"], (-1,)).astype(jnp.int32)    # (Nt,)
+    sid = jnp.reshape(chunk["slot_ids"], (-1,)).astype(jnp.int32)     # (Nt,)
+    row_valid = sid < B_tab
+    entry = page_table[jnp.clip(sid, 0, B_tab - 1),
+                       jnp.clip(pos // ps, 0, maxP - 1)]
+    flat = jnp.where(row_valid, entry * ps + pos % ps, P * ps)
+    if kv_int8:
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+        new_cache = {
+            "k_pages": _pool_scatter(cache["k_pages"], flat, kq[0]),
+            "v_pages": _pool_scatter(cache["v_pages"], flat, vq[0]),
+            "k_scale_pages": _pool_scatter(cache["k_scale_pages"], flat, ks[0]),
+            "v_scale_pages": _pool_scatter(cache["v_scale_pages"], flat, vs[0]),
+        }
+    else:
+        new_cache = {
+            "k_pages": _pool_scatter(cache["k_pages"], flat, k[0]),
+            "v_pages": _pool_scatter(cache["v_pages"], flat, v[0]),
+        }
+    new_cache = {kk: hints.constrain_kv_pages(vv) for kk, vv in new_cache.items()}
+    from repro.kernels import ops as kops
+    out = kops.ragged_prefill_attention(
+        q[0], k[0], v[0], new_cache["k_pages"], new_cache["v_pages"],
+        page_table, chunk["q_start"], chunk["q_len"], chunk["kv_len"],
+        chunk_cap=Nt,
+        k_scale_pages=new_cache.get("k_scale_pages"),
+        v_scale_pages=new_cache.get("v_scale_pages"),
+        window=window, softcap=cfg.attn_softcap)
+    return out[None], new_cache
+
+
 def attention_apply(
     params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext, *,
     local: bool = False, positions: Optional[jax.Array] = None,
     cache: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
     page_table: Optional[jax.Array] = None, prefix_len: Optional[jax.Array] = None,
-    q_len: Optional[jax.Array] = None,
+    q_len: Optional[jax.Array] = None, chunk: Optional[dict] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Full attention sublayer (pre-norm residual is handled by the caller).
 
@@ -544,6 +592,11 @@ def attention_apply(
     the per-slot *total* post-scatter length, so window token i sits at
     ``cur_len - q_len + i``. The flag is explicit because verify shares
     prefill's S > 1 shape while reading+appending a live cache like decode.
+
+    ``chunk`` marks a *packed ragged chunk* batch (DESIGN.md §3.10): the S axis
+    is a packed token row mixing decode tokens and prefill chunks of many
+    slots; see :func:`_chunked_attention` for the dict contract. Paged caches
+    only.
     """
     B, S, d = x.shape
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -551,11 +604,17 @@ def attention_apply(
     k = ctx.linear(params["wk"], x, "wk").reshape(B, S, Hkv, D)
     v = ctx.linear(params["wv"], x, "wv").reshape(B, S, Hkv, D)
 
-    is_verify = cache is not None and q_len is not None
-    is_decode = cache is not None and S == 1 and q_len is None
+    is_chunked = cache is not None and chunk is not None
+    is_verify = cache is not None and q_len is not None and not is_chunked
+    is_decode = cache is not None and S == 1 and q_len is None and not is_chunked
     paged = cache is not None and "k_pages" in cache
+    if is_chunked and not paged:
+        raise ValueError("chunked serving needs a paged cache")
     if positions is None:
-        if is_verify:
+        if is_chunked:
+            # every packed token carries its own absolute position
+            positions = jnp.reshape(chunk["positions"], (1, -1))
+        elif is_verify:
             # window token i at absolute position cur_len - q_len + i; rows ≥
             # q_len clamp to the newest valid position (dropped downstream)
             cl_ = jnp.reshape(cur_len, (-1, 1))
@@ -578,6 +637,11 @@ def attention_apply(
 
     window = cfg.window if local else None
     new_cache = None
+    if is_chunked:
+        out, new_cache = _chunked_attention(q, k, v, cache, page_table, cfg,
+                                            chunk, window=window)
+        y = ctx.linear(params["wo"], out.reshape(B, S, H * D), "wo")
+        return y, new_cache
     if paged:
         out, new_cache = _paged_attention(
             q, k, v, cache, page_table, cfg, ctx, cur_len=cur_len,

@@ -119,7 +119,7 @@ def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
 
 def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
                     cache=None, cur_len=None, decode=False, page_table=None,
-                    prefix_len=None, q_len=None):
+                    prefix_len=None, q_len=None, chunk=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -130,7 +130,7 @@ def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, 
     h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
                                    ctx.sub("attn"), local=local, cache=cache,
                                    cur_len=cur_len, page_table=page_table,
-                                   prefix_len=prefix_len, q_len=q_len)
+                                   prefix_len=prefix_len, q_len=q_len, chunk=chunk)
     x = x + h
     if kind == "attn_moe":
         h, aux = moe_lib.moe_apply(p["moe"], norm_apply(p["norm2"], x, cfg), cfg,
@@ -291,6 +291,7 @@ def apply(
     ctx: Optional[QuantContext] = None, mode: str = "train",
     caches: Optional[dict] = None, cur_len: Optional[jax.Array] = None,
     prefix_len: Optional[jax.Array] = None, q_len: Optional[jax.Array] = None,
+    chunk: Optional[dict] = None,
     unroll: bool = False, remat: bool = False,
 ) -> Tuple[jax.Array, dict]:
     """Returns (logits, {"aux_loss": scalar, "caches": updated-or-None}).
@@ -318,11 +319,20 @@ def apply(
     marks prefill batches whose slots already hold a shared prefix of that many
     tokens in their pages: the batch tokens are the *suffix*, positions start at
     ``prefix_len[b]``, and ``cur_len`` counts suffix tokens only.
+
+    ``mode="chunked"`` (DESIGN.md §3.10): tokens (1, Nt) are a *packed ragged
+    token row* mixing many slots' work — single decode tokens, page-aligned
+    prefill chunks, cold admissions — served in one launch against a paged
+    cache. ``chunk`` carries per-slot extents (``q_start``/``q_len``/``kv_len``
+    (B,)) and per-token routing (``positions``/``slot_ids`` (Nt,)); logits
+    return for every packed row (1, Nt, V) and the engine gathers each slot's
+    last valid row. Attention-only families, paged caches only.
     """
     ctx = ctx or QuantContext(cfg.quant)
     spec = block_spec(cfg)
     decode = mode == "decode"
     verify = mode == "verify"
+    chunked = mode == "chunked"
     if verify and q_len is None:
         raise ValueError("mode='verify' needs q_len (per-slot valid window rows)")
     if verify and cfg.family in ("ssm", "hybrid"):
@@ -330,10 +340,18 @@ def apply(
                          f"family {cfg.family!r} carries SSM state")
     if q_len is not None and not verify:
         raise ValueError("q_len is only meaningful under mode='verify'")
+    if chunked and chunk is None:
+        raise ValueError("mode='chunked' needs a chunk dict (per-slot extents "
+                         "+ per-token routing, DESIGN.md §3.10)")
+    if chunk is not None and not chunked:
+        raise ValueError("chunk is only meaningful under mode='chunked'")
+    if chunked and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"chunked serving needs attention-only caches; "
+                         f"family {cfg.family!r} carries SSM state")
     x = _embed(params, batch, cfg)
     aux_total = jnp.zeros((), jnp.float32)
 
-    use_cache = mode in ("prefill", "decode", "verify")
+    use_cache = mode in ("prefill", "decode", "verify", "chunked")
     if use_cache and caches is None:
         raise ValueError("prefill/decode/verify need caches (init_cache)")
     page_table = caches.get("page_table") if use_cache else None
@@ -352,7 +370,8 @@ def apply(
                                          bctx.sub(f"S{i}"),
                                          cache=c, cur_len=cur_len, decode=decode,
                                          page_table=page_table,
-                                         prefix_len=prefix_len, q_len=q_len)
+                                         prefix_len=prefix_len, q_len=q_len,
+                                         chunk=chunk)
             aux_sum += aux
             new_caches.append(nc if nc is not None else c)
         new_shared = shared_cache

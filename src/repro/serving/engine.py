@@ -291,6 +291,37 @@ def make_serve_verify_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = N
     return verify_step
 
 
+def make_chunked_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = None,
+                      *, path: Optional[str] = None, temperature: float = 0.0,
+                      top_k: int = 0):
+    """One fused mixed-budget step (DESIGN.md §3.10): a packed ragged token row
+    — single decode tokens, draft-verify windows and page-aligned prefill
+    chunks of many slots side by side — served in one ``mode="chunked"``
+    forward pass. Returns per-slot sampled tokens (from each slot's last valid
+    packed row) plus the per-row greedy argmax (the speculative acceptance
+    stream), so the host scheduler only moves int32 ids."""
+    ctx = _make_ctx(cfg, quant, path)
+    sample = _make_sampler(temperature, top_k)
+
+    def chunked_step(params, tokens, q_start, q_len, kv_len, positions,
+                     slot_ids, caches, key):
+        """tokens (1, Nt) packed row; q_start/q_len/kv_len (B,) per-slot chunk
+        extents (q_len == 0 ⇒ slot idle this step); positions/slot_ids (Nt,)
+        per-token routing (slot_ids == B ⇒ padding row, scatters nowhere)
+        → (sampled next token (B,) int32, per-row argmax (Nt,) int32, caches)."""
+        chunk = {"q_start": q_start, "q_len": q_len, "kv_len": kv_len,
+                 "positions": positions, "slot_ids": slot_ids}
+        logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx,
+                             mode="chunked", caches=caches, chunk=chunk)
+        last = jnp.clip(q_start + jnp.maximum(q_len, 1) - 1, 0,
+                        logits.shape[1] - 1)
+        tok = sample(logits[0, last], key)
+        rowmax = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        return tok, rowmax, ex["caches"]
+
+    return chunked_step
+
+
 # ======================================================================================
 # Tensor-parallel sharded serving (DESIGN.md §3.7)
 # ======================================================================================
@@ -410,6 +441,7 @@ class ServeEngine:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  mesh: Optional[Mesh] = None,
                  plan: Optional["planner.Plan"] = None,
+                 chunked: bool = False, token_budget: int = 64,
                  speculate: int = 1, drafter_ngram: int = 3,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         assert kv_cache in ("fp", "int8"), kv_cache
@@ -419,6 +451,25 @@ class ServeEngine:
         if self.paged and scheduler != "continuous":
             raise ValueError("the paged layout serves through the continuous "
                              "scheduler (the grouped baseline stays dense)")
+        self.chunked = chunked
+        self.token_budget = token_budget
+        if chunked:
+            # Chunked serving (DESIGN.md §3.10): every engine step is ONE
+            # packed ragged launch mixing decode rows and prefill chunks, so
+            # there is no separate admission step to stall decodes and no
+            # (row bucket × length bucket) prefill lowering grid.
+            if not self.paged:
+                raise ValueError("chunked=True needs cache_layout='paged' "
+                                 "(chunks scatter through the page table)")
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(f"chunked serving needs attention-only "
+                                 f"caches; family {cfg.family!r} carries SSM "
+                                 f"state")
+            if token_budget < batch_size * speculate:
+                raise ValueError(
+                    f"token_budget {token_budget} < batch_size*speculate "
+                    f"{batch_size * speculate}: every generating slot's "
+                    f"decode row (or draft window) must fit each step")
         assert speculate >= 1, speculate
         self.spec = speculate
         if speculate > 1:
@@ -457,6 +508,9 @@ class ServeEngine:
                                         temperature=temperature, top_k=top_k)
         verify = (make_serve_verify_step(cfg, quant, path=path)
                   if speculate > 1 else None)
+        chunk_step = (make_chunked_step(cfg, quant, path=path,
+                                        temperature=temperature, top_k=top_k)
+                      if chunked else None)
         if self.paged:
             # Paged pool + page table (DESIGN.md §3.8): the pool defaults to the
             # dense-equivalent capacity; passing less relies on prefix sharing +
@@ -498,6 +552,8 @@ class ServeEngine:
             self._decode_step = jax.jit(decode, donate_argnums=2)
             if verify is not None:
                 self._verify_step = jax.jit(verify, donate_argnums=2)
+            if chunk_step is not None:
+                self._chunk_step = jax.jit(chunk_step, donate_argnums=7)
             if self.paged:
                 self._admit_cold = jax.jit(admit_cold, donate_argnums=5)
                 self._admit_warm = jax.jit(admit_warm, donate_argnums=5)
@@ -530,6 +586,13 @@ class ServeEngine:
                     _hinted(verify, self.plan, mesh),
                     in_shardings=(param_sh, repl, cache_sh, repl, repl, repl),
                     out_shardings=(repl, cache_sh), donate_argnums=2)
+            if chunk_step is not None:
+                # packed row + chunk extents stay replicated like decode
+                # tokens; the ragged kernel runs as one GSPMD-manual region
+                self._chunk_step = jax.jit(
+                    _hinted(chunk_step, self.plan, mesh),
+                    in_shardings=(param_sh,) + (repl,) * 6 + (cache_sh, repl),
+                    out_shardings=(repl, repl, cache_sh), donate_argnums=7)
             if self.paged:
                 admit_sh = dict(in_shardings=(param_sh, repl, repl, repl, repl,
                                               cache_sh, repl),
@@ -550,6 +613,12 @@ class ServeEngine:
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._pos = np.zeros(batch_size, np.int32)       # tokens in cache per slot
         self._pending = np.zeros(batch_size, np.int32)   # next input token per slot
+        # chunked prefill progress (DESIGN.md §3.10): while a slot is
+        # mid-prefill, _prefill_target holds its prompt length (0 ⇒ generating)
+        # and _prefill_off the tokens already in its pages (radix prefix +
+        # scattered chunks)
+        self._prefill_off = np.zeros(batch_size, np.int32)
+        self._prefill_target = np.zeros(batch_size, np.int32)
         self._key = jax.random.PRNGKey(seed)
         self._greedy = temperature <= 0.0
         self._step = 0
@@ -563,7 +632,10 @@ class ServeEngine:
                       "peak_pages_in_use": 0,
                       # speculative decoding (DESIGN.md §3.9); zero if spec==1
                       "spec_steps": 0, "spec_slot_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0, "spec_emitted": 0}
+                      "spec_accepted": 0, "spec_emitted": 0,
+                      # chunked serving (DESIGN.md §3.10); zero if chunked=False
+                      "chunk_steps": 0, "chunk_prefill_rows": 0,
+                      "chunk_decode_rows": 0}
 
     # ---------------------------------------------------------------- submission
 
@@ -642,6 +714,8 @@ class ServeEngine:
             self._slots[slot] = None
             self._pos[slot] = 0
             self._pending[slot] = 0
+            self._prefill_off[slot] = 0
+            self._prefill_target[slot] = 0
             if self.paged:
                 # drop this sequence's page references; pages retained by the
                 # radix index as cached prefixes survive (theirs is a separate
@@ -936,35 +1010,239 @@ class ServeEngine:
                             "mid-window retirement left stale page mappings"
                     break
 
-    def run(self) -> List[Request]:
-        finished: List[Request] = []
-        while self.queue or any(s is not None for s in self._slots):
-            self._admit(finished)
-            active = [i for i, s in enumerate(self._slots) if s is not None]
-            if not active:
-                if self.queue and self.paged:
-                    # nothing in flight yet the queue head could not be
-                    # admitted — no retirement will ever free enough pages
-                    raise RuntimeError(
-                        f"page pool too small: {self.n_pages} pages of "
-                        f"{self.ps} cannot hold request {self.queue[0].rid} "
-                        f"(prompt {len(self.queue[0].prompt)} + budget "
-                        f"{self.queue[0].max_new})")
-                assert not self.queue, "scheduler stalled with queued requests"
-                continue   # everything admitted retired at its first token
-            if self.paged and self._table_dirty:
-                self._push_table()
-            if self.spec > 1:
-                self._spec_step(active, finished)
-                continue
-            cur = jnp.asarray(self._pos + 1, jnp.int32)   # post-append lengths
+    # ------------------------------------------------------------ chunked mode
+
+    def _admit_chunked(self, finished: List[Request]) -> None:
+        """FIFO admission into free slots (DESIGN.md §3.10): page planning,
+        COW and radix matching are exactly ``_admit_paged_batch``'s, but no
+        prefill step runs — the admitted slot enters the *mid-prefill* state
+        and its prompt is served chunk-by-chunk out of each step's leftover
+        token budget. Radix insertion waits for the final chunk (pages carry
+        content only once scattered)."""
+        while self.queue:
+            free = [i for i, s in enumerate(self._slots) if s is None]
+            if not free:
+                return
+            r = self.queue[0]
+            plan = self._plan_paged(r)
+            if plan is None:
+                return                     # pool pressure: wait for retirements
+            self.queue.pop(0)
+            slot = free[0]
+            if plan["cow"] is not None:
+                src, dst, ncopy = plan["cow"]
+                self.caches = self._copy_step(
+                    self.caches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32), jnp.asarray(ncopy, jnp.int32))
+                self.stats["cow_copies"] += 1
+            self._slots[slot] = r
+            self._seq_pages[slot] = plan["pages"]
+            self._table[slot, :] = self.n_pages
+            self._table[slot, : len(plan["pages"])] = plan["pages"]
+            self._table_dirty = True
+            self._prefill_off[slot] = plan["prefix"]
+            self._prefill_target[slot] = len(r.prompt)
+            self.stats["prompt_tokens"] += len(r.prompt)
+            self.stats["prefill_tokens"] += plan["suffix"]
+            self.stats["prefix_tokens_reused"] += plan["prefix"]
+            self.stats["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], self.pool.used_count)
+
+    def _chunked_step(self, finished: List[Request]) -> None:
+        """One mixed-budget engine step (DESIGN.md §3.10): admit, pack decode
+        rows (draft windows under ``speculate``) for every generating slot
+        first, fill the remaining token budget with prefill chunks (page-
+        aligned ends where possible — chunks may *start* mid-page after a
+        partial radix hit), launch once, then emit/advance on the host."""
+        self._admit_chunked(finished)
+        gen = [i for i, s in enumerate(self._slots)
+               if s is not None and self._prefill_target[i] == 0]
+        pre = [i for i, s in enumerate(self._slots)
+               if s is not None and self._prefill_target[i] > 0]
+        if not gen and not pre:
+            if self.queue:
+                # nothing in flight yet the queue head could not be admitted —
+                # no retirement will ever free enough pages
+                raise RuntimeError(
+                    f"page pool too small: {self.n_pages} pages of "
+                    f"{self.ps} cannot hold request {self.queue[0].rid} "
+                    f"(prompt {len(self.queue[0].prompt)} + budget "
+                    f"{self.queue[0].max_new})")
+            return
+        if self._table_dirty:
+            self._push_table()
+        if not pre and self.spec == 1 and not self.kv_int8:
+            # Pure-decode step: every resident slot is generating, so the
+            # packed ragged launch would score token_budget padded rows where
+            # the decode kernel scores B. Dispatch the lean decode launch —
+            # for an fp KV cache its q_len == 1 numerics are exactly the
+            # ragged kernel's decode rows (tests/test_chunked_prefill.py
+            # parity), so emitted tokens do not depend on which branch served
+            # the step. int8 KV stays on the ragged launch: the two kernels'
+            # dequant/accumulation orders differ within tolerance, and on a
+            # chunk-quantized pool that is enough to flip an argmax tie.
+            # Speculative chunked serving also keeps the ragged launch: draft
+            # windows need the per-row causal mask every step.
+            cur = jnp.asarray(self._pos + 1, jnp.int32)
             tok, self.caches = self._decode_step(
                 self.params, jnp.asarray(self._pending), self.caches, cur,
                 self._next_key())
             tok = np.asarray(tok)
-            self._pos[active] += 1
+            self._pos[gen] += 1
             self.stats["decode_steps"] += 1
-            self.stats["active_slot_steps"] += len(active)
-            for i in active:
+            self.stats["active_slot_steps"] += len(gen)
+            for i in gen:
                 self._emit(i, int(tok[i]), finished)
+            return
+        Nt = self.token_budget
+        toks = np.zeros(Nt, np.int32)
+        positions = np.zeros(Nt, np.int32)
+        slot_ids = np.full(Nt, self.B, np.int32)
+        q_start = np.zeros(self.B, np.int32)
+        q_len = np.zeros(self.B, np.int32)
+        kv_len = np.zeros(self.B, np.int32)
+        wl = np.ones(self.B, np.int32)
+        off = 0
+        # ---- decode rows first (token_budget >= B*spec: they always fit)
+        for i in gen:
+            r = self._slots[i]
+            window = [int(self._pending[i])]
+            if self.spec > 1:
+                n_d = min(self.spec - 1, self.T - self._pos[i] - 1,
+                          r.max_new - len(r.out) - 1)
+                if n_d > 0:
+                    hist = np.concatenate([r.prompt,
+                                           np.asarray(r.out, np.int32)])
+                    window += list(self.drafter.draft(hist, n_d))
+            W = len(window)
+            toks[off: off + W] = window
+            positions[off: off + W] = self._pos[i] + np.arange(W)
+            slot_ids[off: off + W] = i
+            q_start[i], q_len[i], kv_len[i] = off, W, self._pos[i] + W
+            wl[i] = W
+            off += W
+        # ---- leftover budget → prefill chunks (FIFO over mid-prefill slots)
+        for i in pre:
+            room = Nt - off
+            if room <= 0:
+                break
+            start = int(self._prefill_off[i])
+            plen = int(self._prefill_target[i])
+            end = min(plen, start + room)
+            if end < plen:
+                # prefer a page-aligned chunk end; fall back to the raw budget
+                # cut when a whole page doesn't fit (progress must never stall)
+                aligned = (end // self.ps) * self.ps
+                if aligned > start:
+                    end = aligned
+            toks[off: off + end - start] = self._slots[i].prompt[start:end]
+            positions[off: off + end - start] = np.arange(start, end)
+            slot_ids[off: off + end - start] = i
+            q_start[i], q_len[i], kv_len[i] = off, end - start, end
+            off += end - start
+        tok, rowmax, self.caches = self._chunk_step(
+            self.params, jnp.asarray(toks[None]), jnp.asarray(q_start),
+            jnp.asarray(q_len), jnp.asarray(kv_len), jnp.asarray(positions),
+            jnp.asarray(slot_ids), self.caches, self._next_key())
+        tok, rowmax = np.asarray(tok), np.asarray(rowmax)
+        self.stats["chunk_steps"] += 1
+        self.stats["chunk_decode_rows"] += int(sum(wl[i] for i in gen))
+        if gen:
+            self.stats["decode_steps"] += 1
+            self.stats["active_slot_steps"] += len(gen)
+        served_pre = [i for i in pre if q_len[i] > 0]
+        if served_pre:
+            self.stats["prefill_calls"] += 1
+            self.stats["chunk_prefill_rows"] += int(
+                sum(q_len[i] for i in served_pre))
+            if gen:
+                self.stats["mid_decode_admissions"] += 1
+        # ---- generating slots: emit (speculative acceptance under spec > 1)
+        if self.spec > 1 and gen:
+            self.stats["spec_steps"] += 1
+            self.stats["spec_slot_steps"] += len(gen)
+        for i in gen:
+            if self.spec > 1:
+                r = self._slots[i]
+                out_w = rowmax[q_start[i]: q_start[i] + wl[i]]
+                n = 1                                  # pending always lands
+                while n < wl[i] and toks[q_start[i] + n] == out_w[n - 1]:
+                    n += 1
+                self.stats["spec_drafted"] += int(wl[i]) - 1
+                self.stats["spec_accepted"] += n - 1
+                for j in range(n):
+                    self._pos[i] += 1
+                    self._emit(i, int(out_w[j]), finished)
+                    self.stats["spec_emitted"] += 1
+                    if self._slots[i] is not r:
+                        assert (not self._seq_pages[i]
+                                and (self._table[i] == self.n_pages).all()), \
+                            "mid-window retirement left stale page mappings"
+                        break
+            else:
+                self._pos[i] += 1
+                self._emit(i, int(tok[i]), finished)
+        # ---- mid-prefill slots: advance; final chunk emits the first token
+        for i in served_pre:
+            end = int(kv_len[i])
+            self._prefill_off[i] = end
+            if end == self._prefill_target[i]:
+                r = self._slots[i]
+                self._prefill_target[i] = 0
+                self._pos[i] = len(r.prompt)
+                if self.radix is not None:
+                    # the full prompt is on device now: register its pages as
+                    # a cached prefix (same point the admit step does it)
+                    self.radix.insert(r.prompt,
+                                      self._seq_pages[i][: len(r.prompt)
+                                                         // self.ps],
+                                      self.pool)
+                self._emit(i, int(tok[i]), finished)
+
+    def step(self, finished: List[Request]) -> bool:
+        """One engine iteration: admissions plus at most one model launch.
+        Appends retired requests to ``finished``; returns False once the
+        engine is idle (empty queue, no slots in flight). Exposed so callers
+        — the latency benchmark drives this directly — can time individual
+        steps and inject mid-run traffic between them."""
+        if not (self.queue or any(s is not None for s in self._slots)):
+            return False
+        if self.chunked:
+            self._chunked_step(finished)
+            return True
+        self._admit(finished)
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            if self.queue and self.paged:
+                # nothing in flight yet the queue head could not be
+                # admitted — no retirement will ever free enough pages
+                raise RuntimeError(
+                    f"page pool too small: {self.n_pages} pages of "
+                    f"{self.ps} cannot hold request {self.queue[0].rid} "
+                    f"(prompt {len(self.queue[0].prompt)} + budget "
+                    f"{self.queue[0].max_new})")
+            assert not self.queue, "scheduler stalled with queued requests"
+            return True   # everything admitted retired at its first token
+        if self.paged and self._table_dirty:
+            self._push_table()
+        if self.spec > 1:
+            self._spec_step(active, finished)
+            return True
+        cur = jnp.asarray(self._pos + 1, jnp.int32)   # post-append lengths
+        tok, self.caches = self._decode_step(
+            self.params, jnp.asarray(self._pending), self.caches, cur,
+            self._next_key())
+        tok = np.asarray(tok)
+        self._pos[active] += 1
+        self.stats["decode_steps"] += 1
+        self.stats["active_slot_steps"] += len(active)
+        for i in active:
+            self._emit(i, int(tok[i]), finished)
+        return True
+
+    def run(self) -> List[Request]:
+        finished: List[Request] = []
+        while self.step(finished):
+            pass
         return sorted(finished, key=lambda r: r.rid)

@@ -144,6 +144,29 @@ CODE = textwrap.dedent("""
     if not ok:
         fails.append(("speculative-tp2",))
 
+    # Chunked mixed-budget scheduling (DESIGN.md §3.10) at tp=2: the packed
+    # ragged launch (decode rows + prefill chunks in one forward) under a
+    # TP-sharded plan must emit exactly the single-device *unchunked* paged
+    # tokens. token_budget=10 forces multi-chunk prompts on this workload.
+    def serve_chunked(mesh, **kw):
+        eng = E.ServeEngine(cfg, qparams, batch_size=2, max_len=32,
+                            quant=ql.W8A8_INT8, path="dequant-fp",
+                            kv_cache="fp", mesh=mesh, cache_layout="paged",
+                            page_size=8, **kw)
+        eng.submit([x.copy() for x in pprompts], max_new=list(PMAX_NEW))
+        done = eng.run()
+        return {r.rid: r.out for r in done}, eng
+
+    chunk_base, _ = serve_chunked(None)
+    chunk_got, eng = serve_chunked(mesh2, chunked=True, token_budget=10)
+    ok = chunk_got == chunk_base and eng.stats["chunk_prefill_rows"] > 0
+    print(f"chunked tp=2 dequant-fp/fp paged "
+          f"chunk_steps={eng.stats['chunk_steps']}: "
+          f"{'OK' if ok else 'MISMATCH ' + repr((chunk_got, chunk_base))}",
+          flush=True)
+    if not ok:
+        fails.append(("chunked-tp2",))
+
     # row-parallel int32-accumulator ordering (ref backend, bitwise)
     mesh = make_debug_mesh(4, 2)
     node = jax.tree_util.tree_map(lambda a: a[0], qparams["blocks"][0])["mlp"]["down"]
