@@ -51,12 +51,14 @@ def derived(M, K, N, w_bits=8):
 
 
 def _serve_tok_s(cfg, params, *, quant, path, kv_cache, n_req, max_new) -> float:
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import ServeEngine
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab, size=8).astype(np.int32)
                for _ in range(n_req)]
-    eng = ServeEngine(cfg, params, batch_size=min(4, n_req), max_len=32,
-                      quant=quant, eos_id=-1, path=path, kv_cache=kv_cache)
+    config = EngineConfig(batch_size=min(4, n_req), max_len=32, eos_id=-1,
+                          path=path, kv_cache=kv_cache)
+    eng = ServeEngine(cfg, params, config=config, quant=quant)
     eng.submit(prompts, max_new=max_new)
     t0 = time.perf_counter()
     done = eng.run()

@@ -34,6 +34,11 @@ What gates, against what:
   across machines): per path, chunked p95 step latency under an admission
   burst must not exceed unchunked p95 (``serving_bench_latency`` rows,
   DESIGN.md §3.10). Baselines without latency rows predate the schema bump.
+* Async-server invariant (new snapshot only — both checks are same-run
+  comparisons): the prefix-affinity router's fleet hit rate must be ≥ the
+  seeded-random router's at steady load, steady runs must not reject, and the
+  overload run must (``serving_bench_server`` rows, DESIGN.md §3.11).
+  Baselines without server rows predate the schema bump.
 * A snapshot without usable ``serving_bench`` rows — module missing, its
   subprocess failed (``ok: false``), or no data lines — is an **error**, for
   baselines too: a partial ``--only`` run that dropped the serving module must
@@ -249,6 +254,65 @@ def latency_invariant(rows: dict) -> tuple[list, list]:
     return report, failures
 
 
+def server_rows(snapshot: dict) -> dict:
+    """``(router, load) -> {"reject_rate", "hit_rate"}`` from the async-server
+    section (``serving_bench_server`` lines — DESIGN.md §3.11). Empty for
+    snapshots predating the server (schema bump, like ``spec_rows``)."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("serving_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 10 or parts[0] != "serving_bench_server" or parts[1] == "path":
+            continue
+        rows[(parts[2], parts[3])] = {
+            "reject_rate": float(parts[8]),
+            "hit_rate": float(parts[9]),
+        }
+    return rows
+
+
+def server_invariant(rows: dict) -> tuple[list, list]:
+    """Same-snapshot async-server gates (no baseline needed — both are
+    same-run comparisons under the bench's paused-fleet submission, so they
+    never depend on machine speed): at steady offered load the
+    prefix-affinity router's fleet hit rate must be ≥ the seeded-random
+    router's — routing a prefix family back to the replica whose radix index
+    holds it is the policy's whole claim — and neither steady run may reject
+    (the admission queue is sized for the workload; a steady reject means
+    backpressure fired spuriously). The overload run must reject at least one
+    request — a zero rate there means the bounded queue silently stopped
+    bounding. Latency columns report in the snapshot only (CPU wall-clock).
+    Pre-server snapshots have no rows and skip informationally."""
+    report, failures = [], []
+    a = rows.get(("affinity", "steady"))
+    r = rows.get(("random", "steady"))
+    if a and r:
+        line = (
+            f"  steady hit rate: affinity {a['hit_rate']:.3f} vs "
+            f"random {r['hit_rate']:.3f}"
+        )
+        if a["hit_rate"] < r["hit_rate"]:
+            line += "  REGRESSION (affinity < random)"
+            failures.append(line)
+        report.append(line)
+        for router, row in (("affinity", a), ("random", r)):
+            if row["reject_rate"] > 0.0:
+                line = (
+                    f"  steady {router} reject rate {row['reject_rate']:.3f}"
+                    "  REGRESSION (rejects at steady load)"
+                )
+                failures.append(line)
+                report.append(line)
+    o = rows.get(("affinity", "overload"))
+    if o:
+        line = f"  overload reject rate: {o['reject_rate']:.3f}"
+        if o["reject_rate"] <= 0.0:
+            line += "  REGRESSION (bounded queue never rejected)"
+            failures.append(line)
+        report.append(line)
+    return report, failures
+
+
 def spec_rows(snapshot: dict) -> dict:
     """``(path, mode) -> {"tok_s", "accept_rate", "tokens_per_step"}`` from the
     speculative section (``serving_bench_spec`` lines — DESIGN.md §3.9).
@@ -418,6 +482,11 @@ def main() -> None:
     print("burst latency invariant (chunked p95 <= unchunked p95):")
     print("\n".join(l_report) if l_report else "  (no latency rows)")
     all_failures += l_failures
+
+    sv_report, sv_failures = server_invariant(server_rows(new_snapshot))
+    print("async-server invariant (affinity >= random hit rate, overload rejects):")
+    print("\n".join(sv_report) if sv_report else "  (no server rows)")
+    all_failures += sv_failures
 
     baselines = [(p, True) for p in args.baseline] + [
         (p, False) for p in args.occupancy_baseline

@@ -67,11 +67,22 @@ prefill exists for — an unchunked refill stalls every in-flight decode behind
 a whole-prompt prefill launch — and gates snapshot-locally in ``regress.py``
 (chunked ≤ unchunked).
 
+A fifth section drives the **async server** (DESIGN.md §3.11): a
+shared-prefix-family workload through the 2-replica ``AsyncServer``, measuring
+what replica routing moves — the fleet prefix hit rate under prefix-affinity
+vs seeded-random placement (affinity keeps a family's requests on the replica
+whose radix index already holds their system prompt; random splits them and
+each replica prefills the prefix cold) — plus an overload run where the
+bounded admission queue rejects the excess past its deadline instead of
+queueing it. The affinity ≥ random hit-rate comparison gates snapshot-locally
+in ``regress.py``; TTFT/TPOT percentiles are informational on CPU hosts.
+
 CSV (after the header rows):
 ``serving_bench,<path>[@tpN],<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
 ``serving_bench_prefix,<path>,<layout>,<tok_s>,<hit_rate>,<prefill_tokens>,<prefill_saved>,<peak_pages>,<capacity_x>``
 ``serving_bench_spec,<path>,<spec|nospec>,<tok_s>,<accept_rate>,<tokens_per_step>``
 ``serving_bench_latency,<path>,<chunked|unchunked>,<steady|burst>,<p50_step_ms>,<p95_step_ms>,<ttft_ms>``
+``serving_bench_server,<path>,<router>,<steady|overload>,<ttft_p50_ms>,<ttft_p95_ms>,<tpot_p50_ms>,<tpot_p95_ms>,<reject_rate>,<hit_rate>``
 """
 from __future__ import annotations
 
@@ -206,6 +217,7 @@ def _latency_lines(cfg, variants, n_req: int, steps):
     and regress.py gates it snapshot-locally (chunked ≤ unchunked). Passes
     interleave across modes and phases; best-of keeps the per-metric MIN
     (the uncontended estimate, like the tok/s rows' max)."""
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import ServeEngine
     prompts, max_new = _latency_workload(cfg, n_req)
     lines = ["serving_bench_latency,path,mode,phase,p50_step_ms,p95_step_ms,"
@@ -215,11 +227,12 @@ def _latency_lines(cfg, variants, n_req: int, steps):
     for tag, p, quant, path, kv in variants:
         kws, best = {}, {}
         for mode, extra in modes.items():
-            kw = dict(batch_size=BATCH_SIZE, max_len=MAX_LEN, quant=quant,
-                      path=path, kv_cache=kv, scheduler="continuous",
-                      cache_layout="paged", page_size=PAGE_SIZE, **extra)
+            config = EngineConfig(batch_size=BATCH_SIZE, max_len=MAX_LEN,
+                                  path=path, kv_cache=kv,
+                                  scheduler="continuous", cache_layout="paged",
+                                  page_size=PAGE_SIZE, **extra)
             key = (tag, "", "paged-chunked" if extra else "paged")
-            weng = ServeEngine(cfg, p, **kw)
+            weng = ServeEngine(cfg, p, config=config, quant=quant)
             if key in steps:
                 _attach_steps(weng, steps[key])
             # warm on THIS workload: the unchunked engines' bucketed prefill
@@ -227,11 +240,11 @@ def _latency_lines(cfg, variants, n_req: int, steps):
             # from the earlier sections' workloads
             _drive(weng, prompts, max_new, burst_at=BURST_AT_STEP)
             steps[key] = _extract_steps(weng)
-            kws[mode] = (kw, steps[key])
+            kws[mode] = (config, steps[key])
         for _ in range(TIMED_PASSES):
             for phase, burst_at in (("steady", None), ("burst", BURST_AT_STEP)):
-                for mode, (kw, shared) in kws.items():
-                    eng = ServeEngine(cfg, p, **kw)
+                for mode, (config, shared) in kws.items():
+                    eng = ServeEngine(cfg, p, config=config, quant=quant)
                     _attach_steps(eng, shared)
                     step_ms, ttfts = _drive(eng, prompts, max_new,
                                             burst_at=burst_at)
@@ -325,16 +338,17 @@ def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
     main/shared-prefix sections compile each lowering once per process instead
     of once per engine (the quick-CI wall-clock was dominated by those
     recompiles)."""
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import ServeEngine
-    kw = dict(batch_size=BATCH_SIZE, max_len=MAX_LEN, quant=quant, path=path,
-              kv_cache=kv_cache, scheduler=scheduler, mesh=mesh,
-              cache_layout=cache_layout, page_size=PAGE_SIZE,
-              speculate=speculate)
-    if chunked:
-        kw.update(chunked=True, token_budget=token_budget or CHUNK_BUDGET)
+    config = EngineConfig(batch_size=BATCH_SIZE, max_len=MAX_LEN, path=path,
+                          kv_cache=kv_cache, scheduler=scheduler,
+                          cache_layout=cache_layout, page_size=PAGE_SIZE,
+                          speculate=speculate, chunked=chunked,
+                          token_budget=(token_budget or CHUNK_BUDGET)
+                          if chunked else 64)
 
     shared = steps.get(key) if steps is not None and key is not None else None
-    eng = ServeEngine(cfg, params, **kw)
+    eng = ServeEngine(cfg, params, config=config, quant=quant, mesh=mesh)
     if shared is not None:
         _attach_steps(eng, shared)
     eng.submit([p.copy() for p in prompts], max_new=list(max_new))
@@ -343,7 +357,7 @@ def _prep(cfg, params, prompts, max_new, *, quant, path, kv_cache, scheduler,
         steps[key] = _extract_steps(eng)
 
     def one_pass():
-        eng2 = ServeEngine(cfg, params, **kw)
+        eng2 = ServeEngine(cfg, params, config=config, quant=quant, mesh=mesh)
         _attach_steps(eng2, _extract_steps(eng))
         eng2.submit([p.copy() for p in prompts], max_new=list(max_new))
         t0 = time.perf_counter()
@@ -390,12 +404,116 @@ def _prefix_lines(cfg, variants, n_req: int, steps):
                 tok_s, engs[layout] = one_pass()
                 best[layout] = max(best[layout], tok_s)
         for layout, eng in engs.items():
-            saved = eng.stats["prefix_tokens_reused"]
-            peak = eng.stats["peak_pages_in_use"] or dense_pages
+            saved = eng.counters["prefix_tokens_reused"]
+            peak = eng.counters["peak_pages_in_use"] or dense_pages
             lines.append(
                 f"serving_bench_prefix,{tag},{layout},{best[layout]:.1f},"
-                f"{eng.prefix_hit_rate():.3f},{eng.stats['prefill_tokens']},"
+                f"{eng.prefix_hit_rate():.3f},{eng.counters['prefill_tokens']},"
                 f"{saved},{peak},{dense_pages / peak:.2f}")
+    return lines
+
+
+def _server_workload(cfg, n_families: int = 4, per_family: int = 3,
+                     shared_len: int = 16, seed: int = 4):
+    """Fleet-traffic shape for the router section: ``n_families`` distinct
+    shared system prompts (each two pages long), ``per_family`` requests each,
+    submitted family-interleaved — random routing splits a family's requests
+    across replicas (each replica prefills the shared prefix cold) while
+    prefix-affinity keeps families together and the radix index pays off."""
+    rng = np.random.default_rng(seed)
+    fams = [rng.integers(1, cfg.vocab, size=shared_len).astype(np.int32)
+            for _ in range(n_families)]
+    return [np.concatenate([fams[f],
+                            rng.integers(1, cfg.vocab,
+                                         size=3 + (f + r) % 4).astype(np.int32)])
+            for r in range(per_family) for f in range(n_families)]
+
+
+def _fleet_hit_rate(metrics: dict) -> float:
+    """Aggregate prefix hit rate across the fleet: prompt tokens mapped
+    copy-free from cached pages / total prompt tokens, summed over replicas —
+    the quantity routing policy actually moves."""
+    engines = [r["engine"] for r in metrics["replicas"] if r["engine"]]
+    reused = sum(e["prefix_tokens_reused"] for e in engines)
+    prompt = sum(e["prompt_tokens"] for e in engines)
+    return reused / prompt if prompt else 0.0
+
+
+def _serve_async(cfg, params, prompts, *, router, steps, max_queue=None,
+                 admission_timeout=1.0):
+    """Drive one workload through a 2-replica ``AsyncServer`` and return its
+    ``metrics()`` snapshot. The server is paused while every request is
+    submitted, so routing decisions and (in the overload run) admission
+    rejects are decided against a frozen fleet — deterministic per snapshot,
+    which is what lets regress.py gate affinity-vs-random as a same-run
+    comparison. Replica engines adopt the process-wide shared step objects
+    (same shapes as the prefix section's paged fp engines)."""
+    import asyncio
+
+    from repro.serving.api import AdmissionError, Request
+    from repro.serving.config import EngineConfig
+    from repro.serving.server import AsyncServer
+
+    config = EngineConfig(batch_size=BATCH_SIZE, max_len=MAX_LEN,
+                          cache_layout="paged", page_size=PAGE_SIZE)
+
+    async def drive():
+        async with AsyncServer(cfg, params, config=config, replicas=2,
+                               router=router, router_seed=0,
+                               max_queue=max_queue,
+                               admission_timeout=admission_timeout) as srv:
+            shared = steps.get(("fp", "", "paged"))
+            if shared is not None:
+                for rep in srv.replicas:
+                    _attach_steps(rep.engine, shared)
+            srv.pause()
+
+            async def one(p):
+                try:
+                    async for _ in srv.submit(Request(prompt=p.tolist(),
+                                                      max_new=6)):
+                        pass
+                except AdmissionError:
+                    pass
+
+            tasks = [asyncio.ensure_future(one(p)) for p in prompts]
+            # let every submission route (or reject) against the paused fleet
+            await asyncio.sleep(2 * admission_timeout + 0.1)
+            srv.resume()
+            await asyncio.gather(*tasks)
+            return srv.metrics()
+
+    return asyncio.run(drive())
+
+
+def _server_lines(cfg, params, steps):
+    """The async-server section (DESIGN.md §3.11): one shared-prefix-family
+    workload through the 2-replica ``AsyncServer`` under three loads —
+    prefix-affinity vs seeded-random routing at steady offered load (the
+    affinity ≥ random fleet hit-rate comparison regress.py gates
+    snapshot-locally), plus an overload run (``max_queue`` = one engine batch,
+    20 ms admission deadline) where backpressure rejects the excess instead of
+    queueing it — the nonzero reject-rate row. TTFT/TPOT percentiles are
+    informational on a CPU host (they include the deterministic pause window);
+    the gated signal is the hit-rate ratio and that rejects stay 0 off
+    overload."""
+    prompts = _server_workload(cfg)
+    lines = ["serving_bench_server,path,router,load,ttft_p50_ms,ttft_p95_ms,"
+             "tpot_p50_ms,tpot_p95_ms,reject_rate,hit_rate"]
+    runs = [("affinity", "steady", {}),
+            ("random", "steady", {}),
+            ("affinity", "overload", dict(max_queue=BATCH_SIZE,
+                                          admission_timeout=0.02))]
+    for router, load, kw in runs:
+        m = _serve_async(cfg, params, prompts, router=router, steps=steps, **kw)
+        srv, lat = m["server"], m["latency"]
+        offered = srv["submitted"] + srv["rejected"]   # admitted + rejected
+        rej = srv["rejected"] / offered if offered else 0.0
+        lines.append(
+            f"serving_bench_server,fp,{router},{load},"
+            f"{lat['ttft_p50_s'] * 1e3:.1f},{lat['ttft_p95_s'] * 1e3:.1f},"
+            f"{lat['tpot_p50_s'] * 1e3:.2f},{lat['tpot_p95_s'] * 1e3:.2f},"
+            f"{rej:.3f},{_fleet_hit_rate(m):.3f}")
     return lines
 
 
@@ -474,7 +592,7 @@ def _run(quick: bool = False):
             for scheduler, eng in engs.items():
                 lines.append(f"serving_bench,{tag}{mesh_tag},{scheduler},"
                              f"{best[scheduler]:.1f},{eng.occupancy():.2f},"
-                             f"{eng.stats['mid_decode_admissions']}")
+                             f"{eng.counters['mid_decode_admissions']}")
 
     # shared-system-prompt workload: dense vs paged prefix reuse (§3.8);
     # single-device only — the paged capacity story is layout, not TP. Like
@@ -491,8 +609,15 @@ def _run(quick: bool = False):
     # latency (§3.10): per-step p50/p95 + TTFT, chunked vs unchunked paged
     # serving, with and without an admission burst mid-run; the burst-phase
     # p95 (chunked ≤ unchunked) gates snapshot-locally in regress.py. Runs
-    # last so its engines reuse the ref-mode paged and chunked steps warmed
-    # by the prefix section (the spec section's steps are pallas-mode and
-    # keyed separately — see _spec_lines).
+    # after the prefix section so its engines reuse the ref-mode paged and
+    # chunked steps warmed there (the spec section's steps are pallas-mode
+    # and keyed separately — see _spec_lines).
     lines += _latency_lines(cfg, variants, n_req=8, steps=steps)
+
+    # async server (§3.11): prefix-affinity vs random routing through the
+    # 2-replica AsyncServer on a shared-prefix-family workload, plus an
+    # overload run exercising bounded-admission backpressure; the fleet
+    # hit-rate comparison (affinity ≥ random) gates snapshot-locally. fp
+    # only — routing moves prefix reuse, which is layout, not quantization.
+    lines += _server_lines(cfg, params, steps)
     return lines

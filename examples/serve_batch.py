@@ -39,13 +39,20 @@ the whole-prompt figure — chunked admission leaves the metric unchanged.
 ``--mesh data,model`` serves TP-sharded on a host mesh (DESIGN.md §3.7) — set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 
+Engine flags derive from the :class:`EngineConfig` dataclass fields
+(``add_config_args``, DESIGN.md §3.11) and ``--config path.json`` loads a JSON
+EngineConfig first with explicit flags layered on top; leaving ``--path`` unset
+serves on the jnp ref backend.
+
     PYTHONPATH=src:. python examples/serve_batch.py [--quant int8|fake|fp]
-        [--path ref|dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
+        [--path dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
         [--prompt-lens 6,10,14] [--eos-id N] [--quant-kernel-stats]
         [--mesh 4,2] [--speculate 4] [--cache-layout paged]
-        [--chunked --token-budget 16]
+        [--chunked --token-budget 16] [--config engine.json]
 """
 import argparse
+import dataclasses
+import pathlib
 import time
 
 import jax
@@ -58,6 +65,7 @@ from repro.data import make_train_batches
 from repro.models import model as M
 from repro.models.layers import QuantContext
 from repro.models.quantize import quantize_tree, quantized_bytes
+from repro.serving.config import EngineConfig, add_config_args, config_from_args
 from repro.serving.engine import ServeEngine
 
 
@@ -92,41 +100,34 @@ def mixed_workload(cfg, n_requests, prompt_lens, seed=0, shared_prefix=0):
     return prompts, max_new
 
 
-def serve(cfg, params, prompts, max_new, *, quant, path=None, kv_cache="fp",
-          eos_id=None, tag="", mesh=None, cache_layout="dense", page_size=8,
-          n_pages=None, speculate=1, chunked=False, token_budget=None):
-    kw = {}
-    if chunked:
-        kw = dict(chunked=True, token_budget=token_budget)
-    engine = ServeEngine(cfg, params, batch_size=4, max_len=48, quant=quant,
-                         eos_id=eos_id, path=path, kv_cache=kv_cache, mesh=mesh,
-                         cache_layout=cache_layout, page_size=page_size,
-                         n_pages=n_pages, speculate=speculate, **kw)
+def serve(cfg, params, prompts, max_new, *, config, quant, tag="", mesh=None):
+    engine = ServeEngine(cfg, params, config=config, quant=quant, mesh=mesh)
     engine.submit([p.copy() for p in prompts], max_new=list(max_new))
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     total = sum(len(r.out) for r in done)
+    st = engine.stats()
     shard = f", tp={engine.plan.tp} tier={engine.plan.tier}" if engine.plan else ""
     paged = ""
-    if cache_layout == "paged":
-        paged = (f", prefix_hit_rate={engine.prefix_hit_rate():.2f}, "
-                 f"prefill_saved={engine.stats['prefix_tokens_reused']}, "
-                 f"peak_pages={engine.stats['peak_pages_in_use']}"
+    if config.cache_layout == "paged":
+        paged = (f", prefix_hit_rate={st.prefix_hit_rate:.2f}, "
+                 f"prefill_saved={st.counters['prefix_tokens_reused']}, "
+                 f"peak_pages={st.counters['peak_pages_in_use']}"
                  f"/{engine.pool.n_pages}")
     spec = ""
-    if speculate > 1:
-        spec = (f", speculate={speculate} "
-                f"accept_rate={engine.accept_rate():.2f} "
-                f"tok/step={engine.tokens_per_step():.2f}")
-    if chunked:
-        spec += (f", token_budget={token_budget} "
-                 f"chunk_steps={engine.stats['chunk_steps']} "
-                 f"prefill_rows={engine.stats['chunk_prefill_rows']}")
-    print(f"[{tag or (path or 'ref')}] served {len(done)} requests / {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s, kv={kv_cache}, "
-          f"occupancy={engine.occupancy():.2f}, "
-          f"refills_mid_decode={engine.stats['mid_decode_admissions']}"
+    if config.speculate > 1:
+        spec = (f", speculate={config.speculate} "
+                f"accept_rate={st.accept_rate:.2f} "
+                f"tok/step={st.tokens_per_step:.2f}")
+    if config.chunked:
+        spec += (f", token_budget={config.token_budget} "
+                 f"chunk_steps={st.counters['chunk_steps']} "
+                 f"prefill_rows={st.counters['chunk_prefill_rows']}")
+    print(f"[{tag or (config.path or 'ref')}] served {len(done)} requests / "
+          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s, "
+          f"kv={config.kv_cache}, occupancy={st.occupancy:.2f}, "
+          f"refills_mid_decode={st.counters['mid_decode_admissions']}"
           f"{paged}{spec}{shard})")
     return done, total / dt
 
@@ -207,36 +208,14 @@ def report_kernel_stats(cfg, params, quant, done, chunk: int = 0):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None, metavar="PATH.json",
+                    help="load an EngineConfig from JSON; explicit engine "
+                         "flags below override its fields")
+    add_config_args(ap)
     ap.add_argument("--quant", default="int8", choices=["fp", "fake", "int8"])
-    ap.add_argument("--path", default="fused-int8",
-                    choices=["ref", "dequant-fp", "fused-int8"],
-                    help="integer execution backend (int8 quant only)")
-    ap.add_argument("--kv-cache", default="fp", choices=["fp", "int8"])
-    ap.add_argument("--cache-layout", default="dense", choices=["dense", "paged"],
-                    help="dense slot table (§3.6) or paged pool + radix prefix "
-                         "reuse (§3.8)")
-    ap.add_argument("--page-size", type=int, default=8,
-                    help="tokens per KV page (paged layout)")
-    ap.add_argument("--n-pages", type=int, default=None,
-                    help="page-pool capacity; default = dense-equivalent "
-                         "batch_size*max_len/page_size")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend N identical tokens to every prompt (shared "
                          "system prompt — exercises paged prefix reuse)")
-    ap.add_argument("--chunked", action="store_true",
-                    help="chunked prefill + prefill-decode interleaving "
-                         "(DESIGN.md §3.10): admissions stream through "
-                         "token_budget-sized ragged steps instead of one "
-                         "whole-prompt launch; requires --cache-layout paged")
-    ap.add_argument("--token-budget", type=int, default=16, metavar="N",
-                    help="per-step token budget for --chunked (decode rows "
-                         "first, leftover budget filled with prefill chunks)")
-    ap.add_argument("--speculate", type=int, default=1, metavar="K",
-                    help="speculative decoding (DESIGN.md §3.9): verify "
-                         "K-token draft windows from the self-drafting n-gram "
-                         "drafter per model step; K=1 is plain decode. "
-                         "Token-exact vs K=1 (greedy acceptance); prints "
-                         "accept_rate and emitted tokens/step")
     ap.add_argument("--compare", action="store_true",
                     help="also serve the fp baseline and report both tok/s")
     ap.add_argument("--arch", default="starcoder2-7b")
@@ -244,9 +223,6 @@ def main() -> None:
     ap.add_argument("--prompt-lens", default="6,10,14", metavar="L1,L2,...",
                     help="prompt lengths cycled over requests (mixed-length "
                          "continuous batching)")
-    ap.add_argument("--eos-id", type=int, default=None,
-                    help="EOS token id; default: no EOS (token 0 is PAD — never "
-                         "an implicit terminator)")
     ap.add_argument("--quant-kernel-stats", action="store_true",
                     help="replay served traffic and report per-layer "
                          "quantization-kernel proportion (paper §4.1)")
@@ -264,44 +240,45 @@ def main() -> None:
         from repro.launch.mesh import parse_mesh_arg
         mesh = parse_mesh_arg(args.mesh)
 
-    if args.chunked and args.cache_layout != "paged":
-        ap.error("--chunked requires --cache-layout paged")
+    base = (EngineConfig.from_json(pathlib.Path(args.config).read_text())
+            if args.config else None)
+    defaults = dict(batch_size=4, max_len=48)
+    if args.quant == "int8":
+        defaults["path"] = "fused-int8"
+    config = config_from_args(args, base=base, **defaults)
     prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
     prompts, max_new = mixed_workload(cfg, args.n_requests, prompt_lens,
                                       shared_prefix=args.shared_prefix)
-    layout_kw = dict(cache_layout=args.cache_layout, page_size=args.page_size,
-                     n_pages=args.n_pages, speculate=args.speculate,
-                     chunked=args.chunked, token_budget=args.token_budget)
 
     if args.quant != "int8":
         # The int8 KV cache is independent of weight quantization and applies to
-        # fp/fake serving too; only --path needs a prepared integer tree.
-        if args.path != "fused-int8":
-            print(f"note: --path {args.path} only applies to --quant int8; ignored")
+        # fp/fake serving too; only the integer backends need a prepared tree.
+        if config.path in ("dequant-fp", "fused-int8"):
+            print(f"note: path={config.path} needs --quant int8; serving on "
+                  f"the ref backend instead")
+            config = dataclasses.replace(config, path=None)
         serve_params = params
-        done, _ = serve(cfg, params, prompts, max_new, quant=quant,
-                        kv_cache=args.kv_cache, eos_id=args.eos_id, tag=args.quant,
-                        mesh=mesh, **layout_kw)
+        done, _ = serve(cfg, params, prompts, max_new, config=config,
+                        quant=quant, tag=args.quant, mesh=mesh)
     else:
         qparams = calibrate_and_quantize(cfg, params, quant)
         serve_params = qparams
-        path = None if args.path == "ref" else args.path
-        done, int8_tps = serve(cfg, qparams, prompts, max_new, quant=quant,
-                               path=path, kv_cache=args.kv_cache,
-                               eos_id=args.eos_id, mesh=mesh, **layout_kw)
+        done, int8_tps = serve(cfg, qparams, prompts, max_new, config=config,
+                               quant=quant, mesh=mesh)
         if args.compare:
-            _, fp_tps = serve(cfg, params, prompts, max_new, quant=ql.FP,
-                              eos_id=args.eos_id, tag="fp-baseline", mesh=mesh,
-                              **layout_kw)
+            fp_config = dataclasses.replace(config, path=None)
+            _, fp_tps = serve(cfg, params, prompts, max_new, config=fp_config,
+                              quant=ql.FP, tag="fp-baseline", mesh=mesh)
             print(f"end-to-end tokens/sec: fp={fp_tps:.1f} "
-                  f"{args.path}={int8_tps:.1f} ({int8_tps / fp_tps:.2f}x; "
+                  f"{config.path or 'ref'}={int8_tps:.1f} "
+                  f"({int8_tps / fp_tps:.2f}x; "
                   "CPU-interpret numbers — the kernel-level TPU projection is in "
                   "benchmarks/qgemm_bench.py)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.prompt[:4].tolist()}... -> {r.out[:6]}")
     if args.quant_kernel_stats:
         report_kernel_stats(cfg, serve_params, quant, done,
-                            chunk=args.token_budget if args.chunked else 0)
+                            chunk=config.token_budget if config.chunked else 0)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from repro.data import make_train_batches
 from repro.models import model as M
 from repro.models.layers import QuantContext
 from repro.models.quantize import quantize_tree, quantized_bytes
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 
 QUANTS = {
@@ -95,10 +96,10 @@ def main() -> None:
         mesh = parse_mesh_arg(args.mesh)
 
     path = None if (args.quant != "int8" or args.path == "ref") else args.path
-    engine = ServeEngine(cfg, params, batch_size=args.batch_size,
-                         max_len=args.max_len, quant=quant, path=path,
-                         kv_cache=args.kv_cache, eos_id=args.eos_id,
-                         scheduler=args.scheduler, mesh=mesh)
+    config = EngineConfig(batch_size=args.batch_size, max_len=args.max_len,
+                          path=path, kv_cache=args.kv_cache,
+                          eos_id=args.eos_id, scheduler=args.scheduler)
+    engine = ServeEngine(cfg, params, config=config, quant=quant, mesh=mesh)
     if engine.plan is not None:
         print(f"sharded serving: mesh={dict(mesh.shape)} "
               f"plan={engine.plan.describe()}")

@@ -1,4 +1,5 @@
 """Runtime substrate: supervised training with checkpoint/restart fault tolerance,
 straggler mitigation via deadline barriers, and elastic mesh rebuild."""
-from repro.runtime.supervisor import Supervisor, WorkerFailure, FailureInjector  # noqa: F401
+from repro.runtime.supervisor import (  # noqa: F401
+    FailureInjector, ReplicaHealth, RestartTracker, Supervisor, WorkerFailure)
 from repro.runtime.straggler import DeadlineBarrier, HeartbeatTracker  # noqa: F401

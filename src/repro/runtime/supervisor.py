@@ -45,6 +45,44 @@ class FailureInjector:
 
 
 @dataclasses.dataclass
+class RestartTracker:
+    """Bounded-restart accounting shared by the training supervisor and the
+    serving front end's replica manager (DESIGN.md §3.11): ``record(err)``
+    counts one failure and raises once the budget is exhausted — real
+    controllers page a human at that point instead of crash-looping."""
+
+    max_restarts: int = 8
+    restarts: int = 0
+
+    def record(self, err: BaseException, what: str = "worker") -> None:
+        self.restarts += 1
+        log.warning("%s failure (%s); restart %d/%d", what, err,
+                    self.restarts, self.max_restarts)
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"restart budget exhausted ({self.max_restarts})") from err
+
+    @property
+    def exhausted(self) -> bool:
+        return self.restarts > self.max_restarts
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """One serving replica's health record (serving/server.py): lifecycle
+    ``state`` (``"live"`` / ``"restarting"`` / ``"dead"``), restart count,
+    engine steps driven since the last restart, and the last failure seen."""
+
+    state: str = "live"
+    restarts: int = 0
+    steps: int = 0
+    last_error: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class RunResult:
     state: Any
     step: int
@@ -78,7 +116,7 @@ class Supervisor:
         rebuild: Optional[Callable[[Any], Any]] = None,
         save_initial: bool = True,
     ) -> RunResult:
-        restarts = 0
+        tracker = RestartTracker(max_restarts=self.max_restarts)
         step = start_step
         history: List[Dict[str, float]] = []
         if save_initial:
@@ -94,12 +132,7 @@ class Supervisor:
                 if step % self.ckpt_every == 0 or step == total_steps:
                     self.ckpt.save(step, state)
             except WorkerFailure as e:
-                restarts += 1
-                log.warning("worker failure at step %d (%s); restart %d/%d",
-                            step, e, restarts, self.max_restarts)
-                if restarts > self.max_restarts:
-                    raise RuntimeError(
-                        f"restart budget exhausted ({self.max_restarts})") from e
+                tracker.record(e, what=f"worker at step {step}")
                 # Synchronize outstanding async writes, then restore the last commit.
                 self.ckpt.wait()
                 state, step = self.ckpt.restore(state)
@@ -108,5 +141,5 @@ class Supervisor:
                 # Truncate history past the restore point (those steps re-run).
                 history = [h for h in history if h["step"] < step]
         self.ckpt.wait()
-        return RunResult(state=state, step=step, restarts=restarts,
+        return RunResult(state=state, step=step, restarts=tracker.restarts,
                          metrics_history=history)

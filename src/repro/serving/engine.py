@@ -36,7 +36,8 @@ LRU-unreferenced cached prefixes evict under pool pressure.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+import warnings
+from typing import Callable, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,17 +50,13 @@ from repro.core import qlinear as ql
 from repro.models import model as M
 from repro.models.layers import QuantContext
 from repro.serving import drafter, paging
+from repro.serving.api import FinishReason
+from repro.serving.config import SERVE_PATHS, EngineConfig, EngineStats
 from repro.sharding import hints, planner
 
-#: serving path → QuantContext wiring (DESIGN.md §3.3). ``None`` keeps the legacy
-#: behaviour: whatever the params tree + quant config imply, on the jnp ref backend.
-SERVE_PATHS = {
-    None: {},
-    "fp": {},
-    "fake": {},
-    "dequant-fp": {"int_exec": "dequant"},
-    "fused-int8": {"int_exec": "pallas", "use_pallas": True},
-}
+#: one DeprecationWarning per process for the legacy-kwarg ServeEngine surface
+#: (tests reset this to assert the shim warns exactly once)
+_LEGACY_KWARGS_WARNED = False
 
 
 def _make_ctx(cfg: ModelConfig, quant: Optional[ql.QuantConfig],
@@ -363,6 +360,8 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[FinishReason] = None   # set at retirement
+    prefix_reused: int = 0        # §3.8 radix hit length (prompt tokens)
 
 
 def default_buckets(max_len: int, lo: int = 8) -> List[int]:
@@ -429,64 +428,45 @@ class ServeEngine:
     tokens into the state (attention caches mask padded positions instead).
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, batch_size: int, max_len: int,
+    def __init__(self, cfg: ModelConfig, params, *,
+                 config: Optional[EngineConfig] = None,
                  quant: Optional[ql.QuantConfig] = None,
-                 eos_id: Optional[int] = None,
-                 path: Optional[str] = None, kv_cache: str = "fp",
-                 cache_layout: str = "dense",
-                 page_size: int = 8, n_pages: Optional[int] = None,
-                 prefix_reuse: bool = True,
-                 cache_dtype=None,
-                 scheduler: str = "continuous",
-                 prefill_buckets: Optional[Sequence[int]] = None,
                  mesh: Optional[Mesh] = None,
                  plan: Optional["planner.Plan"] = None,
-                 chunked: bool = False, token_budget: int = 64,
-                 speculate: int = 1, drafter_ngram: int = 3,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
-        assert kv_cache in ("fp", "int8"), kv_cache
-        assert cache_layout in ("dense", "paged"), cache_layout
-        assert scheduler in ("continuous", "grouped"), scheduler
+                 **legacy):
+        if config is not None and legacy:
+            raise TypeError("pass either config= or legacy engine kwargs, "
+                            f"not both (got config plus {sorted(legacy)})")
+        if config is None:
+            # Deprecation shim (DESIGN.md §3.11): the legacy 20-kwarg surface
+            # keeps working — it builds the same validated EngineConfig, so an
+            # invalid combination raises identically on both surfaces — and
+            # warns once per process.
+            global _LEGACY_KWARGS_WARNED
+            if not _LEGACY_KWARGS_WARNED:
+                warnings.warn(
+                    "ServeEngine(cfg, params, **kwargs) is deprecated; pass "
+                    "ServeEngine(cfg, params, config=EngineConfig(...)) "
+                    "(DESIGN.md §3.11)", DeprecationWarning, stacklevel=2)
+                _LEGACY_KWARGS_WARNED = True
+            config = EngineConfig.from_kwargs(**legacy)
+        config.check_model(cfg)   # SSM/hybrid cannot serve chunked/speculative
+        self.config = config
+        batch_size, max_len = config.batch_size, config.max_len
+        path, eos_id = config.path, config.eos_id
+        kv_cache, cache_layout = config.kv_cache, config.cache_layout
+        page_size, n_pages = config.page_size, config.n_pages
+        prefix_reuse, cache_dtype = config.prefix_reuse, config.cache_dtype
+        scheduler, prefill_buckets = config.scheduler, config.prefill_buckets
+        chunked, token_budget = config.chunked, config.token_budget
+        speculate, drafter_ngram = config.speculate, config.drafter_ngram
+        temperature, top_k = config.temperature, config.top_k
+        seed = config.seed
         self.paged = cache_layout == "paged"
-        if self.paged and scheduler != "continuous":
-            raise ValueError("the paged layout serves through the continuous "
-                             "scheduler (the grouped baseline stays dense)")
         self.chunked = chunked
         self.token_budget = token_budget
-        if chunked:
-            # Chunked serving (DESIGN.md §3.10): every engine step is ONE
-            # packed ragged launch mixing decode rows and prefill chunks, so
-            # there is no separate admission step to stall decodes and no
-            # (row bucket × length bucket) prefill lowering grid.
-            if not self.paged:
-                raise ValueError("chunked=True needs cache_layout='paged' "
-                                 "(chunks scatter through the page table)")
-            if cfg.family in ("ssm", "hybrid"):
-                raise ValueError(f"chunked serving needs attention-only "
-                                 f"caches; family {cfg.family!r} carries SSM "
-                                 f"state")
-            if token_budget < batch_size * speculate:
-                raise ValueError(
-                    f"token_budget {token_budget} < batch_size*speculate "
-                    f"{batch_size * speculate}: every generating slot's "
-                    f"decode row (or draft window) must fit each step")
-        assert speculate >= 1, speculate
         self.spec = speculate
         if speculate > 1:
-            # Speculative decoding (DESIGN.md §3.9): greedy-only (the
-            # acceptance rule is exact only under deterministic sampling),
-            # continuous scheduler (per-slot window lengths), attention-only
-            # families (the SSM recurrence cannot rewind rejected tokens).
-            if temperature > 0.0:
-                raise ValueError("speculate > 1 requires greedy sampling "
-                                 "(temperature <= 0): acceptance is token-"
-                                 "exact only under deterministic sampling")
-            if scheduler != "continuous":
-                raise ValueError("speculate > 1 requires the continuous "
-                                 "scheduler (per-slot draft windows)")
-            if cfg.family in ("ssm", "hybrid"):
-                raise ValueError(f"speculate > 1 needs attention-only caches; "
-                                 f"family {cfg.family!r} carries SSM state")
             self.drafter = drafter.NGramDrafter(max_ngram=drafter_ngram)
         self.cfg, self.params = cfg, params
         self.B, self.T = batch_size, max_len
@@ -623,19 +603,24 @@ class ServeEngine:
         self._greedy = temperature <= 0.0
         self._step = 0
         self._next_rid = 0
-        self.stats = {"prefill_calls": 0, "decode_steps": 0,
-                      "active_slot_steps": 0, "mid_decode_admissions": 0,
-                      # paged layout (DESIGN.md §3.8); zero on dense engines
-                      "prefix_hits": 0, "prefix_tokens_reused": 0,
-                      "prompt_tokens": 0, "prefill_tokens": 0,
-                      "cow_copies": 0, "pages_evicted": 0,
-                      "peak_pages_in_use": 0,
-                      # speculative decoding (DESIGN.md §3.9); zero if spec==1
-                      "spec_steps": 0, "spec_slot_steps": 0, "spec_drafted": 0,
-                      "spec_accepted": 0, "spec_emitted": 0,
-                      # chunked serving (DESIGN.md §3.10); zero if chunked=False
-                      "chunk_steps": 0, "chunk_prefill_rows": 0,
-                      "chunk_decode_rows": 0}
+        #: optional per-token hook, called as ``on_token(request, token)``
+        #: after every emitted token (the request is already retired when
+        #: ``request.done``) — the async server streams through this
+        self.on_token: Optional[Callable[[Request, int], None]] = None
+        self.counters = {
+            "prefill_calls": 0, "decode_steps": 0,
+            "active_slot_steps": 0, "mid_decode_admissions": 0,
+            # paged layout (DESIGN.md §3.8); zero on dense engines
+            "prefix_hits": 0, "prefix_tokens_reused": 0,
+            "prompt_tokens": 0, "prefill_tokens": 0,
+            "cow_copies": 0, "pages_evicted": 0,
+            "peak_pages_in_use": 0,
+            # speculative decoding (DESIGN.md §3.9); zero if spec==1
+            "spec_steps": 0, "spec_slot_steps": 0, "spec_drafted": 0,
+            "spec_accepted": 0, "spec_emitted": 0,
+            # chunked serving (DESIGN.md §3.10); zero if chunked=False
+            "chunk_steps": 0, "chunk_prefill_rows": 0,
+            "chunk_decode_rows": 0}
 
     # ---------------------------------------------------------------- submission
 
@@ -663,30 +648,33 @@ class ServeEngine:
                 return b
         return self.T
 
+    def stats(self) -> EngineStats:
+        """Unified statistics snapshot (DESIGN.md §3.11): the derived rates the
+        four legacy accessors returned plus a copy of the raw counters, with a
+        stable ``to_dict()`` schema shared by ``benchmarks/serving_bench.py``
+        and the async server's metrics endpoint."""
+        return EngineStats.from_counters(self.counters, self.B)
+
     def occupancy(self) -> float:
-        steps = self.stats["decode_steps"]
-        return self.stats["active_slot_steps"] / (steps * self.B) if steps else 0.0
+        return self.stats().occupancy
 
     def prefix_hit_rate(self) -> float:
         """Fraction of submitted prompt tokens served from shared prefix pages
         instead of being re-prefilled (paged layout; 0.0 on dense)."""
-        total = self.stats["prompt_tokens"]
-        return self.stats["prefix_tokens_reused"] / total if total else 0.0
+        return self.stats().prefix_hit_rate
 
     def accept_rate(self) -> float:
         """Fraction of *drafted* tokens the verify step accepted (DESIGN.md
         §3.9; the mandatory pending token does not count). 0.0 when nothing
         was drafted (speculate == 1, or the drafter never proposed)."""
-        drafted = self.stats["spec_drafted"]
-        return self.stats["spec_accepted"] / drafted if drafted else 0.0
+        return self.stats().accept_rate
 
     def tokens_per_step(self) -> float:
         """Mean emitted tokens per slot per speculative verify step (≥ 1.0 —
         plain decode emits exactly 1 per slot-step, so this is the per-request
         step-count compression speculation bought). 0.0 before any speculative
         step ran."""
-        steps = self.stats["spec_slot_steps"]
-        return self.stats["spec_emitted"] / steps if steps else 0.0
+        return self.stats().tokens_per_step
 
     def _next_key(self) -> jax.Array:
         if self._greedy:            # sampler ignores the key: skip the fold_in op
@@ -705,11 +693,17 @@ class ServeEngine:
         slot; pinned by tests/test_paged_serving.py)."""
         r = self._slots[slot]
         r.out.append(tok)
-        retire = (len(r.out) >= r.max_new
-                  or (self.eos is not None and tok == self.eos)
-                  or self._pos[slot] >= self.T)    # cache full: no room to append
-        if retire:
+        if self.eos is not None and tok == self.eos:
+            reason = FinishReason.EOS
+        elif len(r.out) >= r.max_new:
+            reason = FinishReason.LENGTH
+        elif self._pos[slot] >= self.T:            # cache full: no room to append
+            reason = FinishReason.CACHE_FULL
+        else:
+            reason = None
+        if reason is not None:
             r.done = True
+            r.finish_reason = reason
             finished.append(r)
             self._slots[slot] = None
             self._pos[slot] = 0
@@ -726,6 +720,8 @@ class ServeEngine:
                 self._table_dirty = True
         else:
             self._pending[slot] = tok
+        if self.on_token is not None:
+            self.on_token(r, tok)
 
     # ------------------------------------------------------------ paged planning
 
@@ -773,7 +769,7 @@ class ServeEngine:
         own_n = need - len(shared)
         own = self.pool.alloc(own_n)
         if own is None and self.radix is not None:
-            self.stats["pages_evicted"] += self.radix.evict(self.pool, own_n)
+            self.counters["pages_evicted"] += self.radix.evict(self.pool, own_n)
             own = self.pool.alloc(own_n)
         if cow_src is not None:                # copy is issued before any write
             self.pool.decref([cow_src])
@@ -832,16 +828,17 @@ class ServeEngine:
                 self.caches = self._copy_step(
                     self.caches, jnp.asarray(src, jnp.int32),
                     jnp.asarray(dst, jnp.int32), jnp.asarray(ncopy, jnp.int32))
-                self.stats["cow_copies"] += 1
+                self.counters["cow_copies"] += 1
             self._slots[slot] = r
             self._seq_pages[slot] = plan["pages"]
             self._table[slot, :] = self.n_pages
             self._table[slot, : len(plan["pages"])] = plan["pages"]
             warm = warm or plan["prefix"] > 0
-            self.stats["prompt_tokens"] += len(r.prompt)
-            self.stats["prefill_tokens"] += plan["suffix"]
-            self.stats["prefix_tokens_reused"] += plan["prefix"]
-            self.stats["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
+            r.prefix_reused = plan["prefix"]
+            self.counters["prompt_tokens"] += len(r.prompt)
+            self.counters["prefill_tokens"] += plan["suffix"]
+            self.counters["prefix_tokens_reused"] += plan["prefix"]
+            self.counters["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
         self._table_dirty = True
         step = self._admit_warm if warm else self._admit_cold
         tok, self.caches = step(
@@ -849,10 +846,10 @@ class ServeEngine:
             jnp.asarray(prefixes), jnp.asarray(row_tables), self.caches,
             self._next_key())
         tok = np.asarray(tok)
-        self.stats["prefill_calls"] += 1
+        self.counters["prefill_calls"] += 1
         if mid_decode:
-            self.stats["mid_decode_admissions"] += 1
-        self.stats["peak_pages_in_use"] = max(self.stats["peak_pages_in_use"],
+            self.counters["mid_decode_admissions"] += 1
+        self.counters["peak_pages_in_use"] = max(self.counters["peak_pages_in_use"],
                                               self.pool.used_count)
         for j, (slot, (r, plan)) in enumerate(zip(free, plans)):
             if self.radix is not None:
@@ -880,15 +877,15 @@ class ServeEngine:
             lens[j] = len(r.prompt)
             slot_ids[j] = slot
             self._slots[slot] = r
-            self.stats["prompt_tokens"] += len(r.prompt)
-            self.stats["prefill_tokens"] += len(r.prompt)
+            self.counters["prompt_tokens"] += len(r.prompt)
+            self.counters["prefill_tokens"] += len(r.prompt)
         tok, self.caches = self._admit_step(
             self.params, jnp.asarray(tokens), jnp.asarray(lens),
             jnp.asarray(slot_ids), self.caches, self._next_key())
         tok = np.asarray(tok)
-        self.stats["prefill_calls"] += 1
+        self.counters["prefill_calls"] += 1
         if mid_decode:
-            self.stats["mid_decode_admissions"] += 1
+            self.counters["mid_decode_admissions"] += 1
         for j, (slot, r) in enumerate(zip(free, batch)):
             self._pos[slot] = len(r.prompt)
             self._emit(slot, int(tok[j]), finished)
@@ -981,16 +978,16 @@ class ServeEngine:
             self.params, jnp.asarray(toks), self.caches, cur,
             jnp.asarray(wl), self._next_key())
         out = np.asarray(out)                          # (B, W) greedy samples
-        self.stats["decode_steps"] += 1
-        self.stats["spec_steps"] += 1
-        self.stats["spec_slot_steps"] += len(active)
-        self.stats["active_slot_steps"] += len(active)
+        self.counters["decode_steps"] += 1
+        self.counters["spec_steps"] += 1
+        self.counters["spec_slot_steps"] += len(active)
+        self.counters["active_slot_steps"] += len(active)
         for i in active:
             n = 1                                      # pending always lands
             while n < wl[i] and toks[i, n] == out[i, n - 1]:
                 n += 1
-            self.stats["spec_drafted"] += int(wl[i]) - 1
-            self.stats["spec_accepted"] += n - 1
+            self.counters["spec_drafted"] += int(wl[i]) - 1
+            self.counters["spec_accepted"] += n - 1
             r = self._slots[i]
             for j in range(n):
                 # advance per emitted token: retire conditions (max_new, EOS,
@@ -998,7 +995,7 @@ class ServeEngine:
                 # sequential non-speculative decode would
                 self._pos[i] += 1
                 self._emit(i, int(out[i, j]), finished)
-                self.stats["spec_emitted"] += 1
+                self.counters["spec_emitted"] += 1
                 if self._slots[i] is not r:
                     # retired mid-window: the unemitted tail (and the
                     # rejected scattered tokens) must be unreachable — the
@@ -1034,7 +1031,7 @@ class ServeEngine:
                 self.caches = self._copy_step(
                     self.caches, jnp.asarray(src, jnp.int32),
                     jnp.asarray(dst, jnp.int32), jnp.asarray(ncopy, jnp.int32))
-                self.stats["cow_copies"] += 1
+                self.counters["cow_copies"] += 1
             self._slots[slot] = r
             self._seq_pages[slot] = plan["pages"]
             self._table[slot, :] = self.n_pages
@@ -1042,12 +1039,13 @@ class ServeEngine:
             self._table_dirty = True
             self._prefill_off[slot] = plan["prefix"]
             self._prefill_target[slot] = len(r.prompt)
-            self.stats["prompt_tokens"] += len(r.prompt)
-            self.stats["prefill_tokens"] += plan["suffix"]
-            self.stats["prefix_tokens_reused"] += plan["prefix"]
-            self.stats["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
-            self.stats["peak_pages_in_use"] = max(
-                self.stats["peak_pages_in_use"], self.pool.used_count)
+            r.prefix_reused = plan["prefix"]
+            self.counters["prompt_tokens"] += len(r.prompt)
+            self.counters["prefill_tokens"] += plan["suffix"]
+            self.counters["prefix_tokens_reused"] += plan["prefix"]
+            self.counters["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
+            self.counters["peak_pages_in_use"] = max(
+                self.counters["peak_pages_in_use"], self.pool.used_count)
 
     def _chunked_step(self, finished: List[Request]) -> None:
         """One mixed-budget engine step (DESIGN.md §3.10): admit, pack decode
@@ -1090,8 +1088,8 @@ class ServeEngine:
                 self._next_key())
             tok = np.asarray(tok)
             self._pos[gen] += 1
-            self.stats["decode_steps"] += 1
-            self.stats["active_slot_steps"] += len(gen)
+            self.counters["decode_steps"] += 1
+            self.counters["active_slot_steps"] += len(gen)
             for i in gen:
                 self._emit(i, int(tok[i]), finished)
             return
@@ -1146,22 +1144,22 @@ class ServeEngine:
             jnp.asarray(q_len), jnp.asarray(kv_len), jnp.asarray(positions),
             jnp.asarray(slot_ids), self.caches, self._next_key())
         tok, rowmax = np.asarray(tok), np.asarray(rowmax)
-        self.stats["chunk_steps"] += 1
-        self.stats["chunk_decode_rows"] += int(sum(wl[i] for i in gen))
+        self.counters["chunk_steps"] += 1
+        self.counters["chunk_decode_rows"] += int(sum(wl[i] for i in gen))
         if gen:
-            self.stats["decode_steps"] += 1
-            self.stats["active_slot_steps"] += len(gen)
+            self.counters["decode_steps"] += 1
+            self.counters["active_slot_steps"] += len(gen)
         served_pre = [i for i in pre if q_len[i] > 0]
         if served_pre:
-            self.stats["prefill_calls"] += 1
-            self.stats["chunk_prefill_rows"] += int(
+            self.counters["prefill_calls"] += 1
+            self.counters["chunk_prefill_rows"] += int(
                 sum(q_len[i] for i in served_pre))
             if gen:
-                self.stats["mid_decode_admissions"] += 1
+                self.counters["mid_decode_admissions"] += 1
         # ---- generating slots: emit (speculative acceptance under spec > 1)
         if self.spec > 1 and gen:
-            self.stats["spec_steps"] += 1
-            self.stats["spec_slot_steps"] += len(gen)
+            self.counters["spec_steps"] += 1
+            self.counters["spec_slot_steps"] += len(gen)
         for i in gen:
             if self.spec > 1:
                 r = self._slots[i]
@@ -1169,12 +1167,12 @@ class ServeEngine:
                 n = 1                                  # pending always lands
                 while n < wl[i] and toks[q_start[i] + n] == out_w[n - 1]:
                     n += 1
-                self.stats["spec_drafted"] += int(wl[i]) - 1
-                self.stats["spec_accepted"] += n - 1
+                self.counters["spec_drafted"] += int(wl[i]) - 1
+                self.counters["spec_accepted"] += n - 1
                 for j in range(n):
                     self._pos[i] += 1
                     self._emit(i, int(out_w[j]), finished)
-                    self.stats["spec_emitted"] += 1
+                    self.counters["spec_emitted"] += 1
                     if self._slots[i] is not r:
                         assert (not self._seq_pages[i]
                                 and (self._table[i] == self.n_pages).all()), \
@@ -1235,8 +1233,8 @@ class ServeEngine:
             self._next_key())
         tok = np.asarray(tok)
         self._pos[active] += 1
-        self.stats["decode_steps"] += 1
-        self.stats["active_slot_steps"] += len(active)
+        self.counters["decode_steps"] += 1
+        self.counters["active_slot_steps"] += len(active)
         for i in active:
             self._emit(i, int(tok[i]), finished)
         return True

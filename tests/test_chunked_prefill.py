@@ -306,7 +306,7 @@ class TestChunkedEngineParity:
         base, _ = _serve(small, path, kv)
         chk, eng = _serve(small, path, kv, chunked=True, token_budget=tb)
         assert chk == base
-        st = eng.stats
+        st = eng.counters
         assert st["chunk_steps"] > 0
         assert st["chunk_prefill_rows"] > 0   # tb forces multi-chunk prompts
 
@@ -390,7 +390,7 @@ class TestChunkedInteractions:
         want = dict(base)
         want.update({k + len(base): v for k, v in base_late.items()})
         assert got == want
-        assert eng.stats["mid_decode_admissions"] > 0
+        assert eng.counters["mid_decode_admissions"] > 0
 
     def test_chunked_speculative(self, small):
         """Draft windows ride the same ragged launch; tokens stay exact."""
@@ -398,7 +398,7 @@ class TestChunkedInteractions:
         chk, eng = _serve(small, "dequant-fp", "int8", chunked=True,
                           token_budget=16, speculate=4)
         assert chk == base
-        st = eng.stats
+        st = eng.counters
         assert st["spec_drafted"] > 0
 
     def test_budget_floor_enforced(self, small):
@@ -431,7 +431,7 @@ class TestRefExecParity:
         chk, eng = _serve(small, path, kv, chunked=True, token_budget=12)
         assert got == base
         assert chk == base
-        assert eng.stats["chunk_prefill_rows"] > 0
+        assert eng.counters["chunk_prefill_rows"] > 0
 
     def test_bad_exec_mode_rejected(self, small, monkeypatch):
         monkeypatch.setenv("REPRO_KERNEL_EXEC", "mosaic")

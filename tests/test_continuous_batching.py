@@ -77,7 +77,7 @@ class TestSchedulerParity:
         eng.submit(prompts, max_new=MAX_NEW)
         done = eng.run()
         # batch_size=2 < 5 requests: slots must have been refilled mid-decode
-        assert eng.stats["mid_decode_admissions"] > 0
+        assert eng.counters["mid_decode_admissions"] > 0
         assert [r.rid for r in done] == list(range(len(prompts)))
         for r in done:
             want = _greedy_single(cfg, serve_params, r.prompt, r.max_new,
@@ -269,5 +269,5 @@ class TestGroupedBaseline:
             eng.submit(prompts, max_new=MAX_NEW)
             outs[scheduler] = {r.rid: r.out for r in eng.run()}
             if scheduler == "grouped":
-                assert eng.stats["mid_decode_admissions"] == 0
+                assert eng.counters["mid_decode_admissions"] == 0
         assert outs["continuous"] == outs["grouped"]

@@ -88,7 +88,7 @@ class TestPagedDenseParity:
         paged, eng = _serve(cfg, serve_params, prompts, MAX_NEW, quant=quant,
                             path=path, kv_cache=kv, cache_layout="paged",
                             page_size=PS)
-        assert eng.stats["mid_decode_admissions"] > 0
+        assert eng.counters["mid_decode_admissions"] > 0
         assert paged == dense, (path, kv)
         eng.pool.check()
 
@@ -147,12 +147,12 @@ class TestPrefixReuse:
         dense, _ = _serve(cfg, serve_params, prompts, 4, quant=quant, path=path,
                           kv_cache=kv)
         assert warm == cold == dense, (path, kv)
-        assert ew.stats["prefix_hits"] > 0
+        assert ew.counters["prefix_hits"] > 0
         assert ew.prefix_hit_rate() > 0.0
-        assert ec.stats["prefix_hits"] == 0
-        assert ew.stats["prefill_tokens"] < ec.stats["prefill_tokens"]
-        assert (ew.stats["prefill_tokens"] + ew.stats["prefix_tokens_reused"]
-                == ew.stats["prompt_tokens"])
+        assert ec.counters["prefix_hits"] == 0
+        assert ew.counters["prefill_tokens"] < ec.counters["prefill_tokens"]
+        assert (ew.counters["prefill_tokens"] + ew.counters["prefix_tokens_reused"]
+                == ew.counters["prompt_tokens"])
 
     def test_shared_pages_are_copy_free(self, small):
         """A prefix-hit admission's leading page ids are literally the cached
@@ -217,8 +217,8 @@ class TestPrefixReuse:
         eng.run()
         eng.submit([fork.copy()], max_new=4)
         got = {r.rid: r.out for r in eng.run()}
-        assert eng.stats["cow_copies"] == 1
-        assert eng.stats["prefix_tokens_reused"] >= PS + 4  # page 0 + 4 COW rows
+        assert eng.counters["cow_copies"] == 1
+        assert eng.counters["prefix_tokens_reused"] >= PS + 4  # page 0 + 4 COW rows
         cold, _ = _serve(cfg, params, [base, fork], [3, 4],
                          cache_layout="paged", page_size=PS, prefix_reuse=False)
         assert got[1] == cold[1]
@@ -281,7 +281,7 @@ class TestAllocatorInvariants:
         # all sequences retired: remaining references belong to the index alone
         assert all(eng.pool.refs[p] == 1 for p in held)
         assert eng.pool.used_count == len(held)
-        assert eng.stats["peak_pages_in_use"] <= 7
+        assert eng.counters["peak_pages_in_use"] <= 7
 
     def test_matched_prefix_survives_eviction_pressure(self, small):
         """Planning must incref the matched prefix pages *before* evicting for
@@ -305,8 +305,8 @@ class TestAllocatorInvariants:
                                rng.integers(1, cfg.vocab, size=1).astype(np.int32)])
         eng.submit([fork.copy()], max_new=15)     # needs 2 shared + 2 own
         got = eng.run()[0].out
-        assert eng.stats["pages_evicted"] >= 1    # the sacrificial prefix went
-        assert eng.stats["prefix_tokens_reused"] >= 16
+        assert eng.counters["pages_evicted"] >= 1    # the sacrificial prefix went
+        assert eng.counters["prefix_tokens_reused"] >= 16
         assert sorted(set(eng.radix.held_pages())) == sorted(eng.radix.held_pages())
         eng.pool.check()
         cold = E.ServeEngine(cfg, params, batch_size=1, max_len=T,
@@ -349,7 +349,7 @@ class TestAllocatorInvariants:
                    max_new=PS + 1)
         out = eng.run()[0].out
         assert len(out) == PS + 1
-        assert eng.stats["peak_pages_in_use"] == 2
+        assert eng.counters["peak_pages_in_use"] == 2
         eng.pool.check()
 
     def test_pool_too_small_raises(self, small):
@@ -497,7 +497,7 @@ class TestHeadroomAndScheduling:
         eng.submit([odd, a, b], max_new=3)
         eng._admit([])
         assert sorted(r.rid for r in eng._slots if r is not None) == [1, 2]
-        assert eng.stats["prefill_calls"] == 1
+        assert eng.counters["prefill_calls"] == 1
         done = {r.rid: r.out for r in eng.run()}
         ref = E.ServeEngine(cfg, params, batch_size=2, max_len=T)
         ref.submit([a, b, odd], max_new=3)     # bucket-sorted submission order

@@ -64,7 +64,7 @@ CODE = textwrap.dedent("""
                             path=path, kv_cache=kv, mesh=mesh)
         eng.submit([x.copy() for x in prompts], max_new=list(MAX_NEW))
         done = eng.run()
-        assert eng.stats["mid_decode_admissions"] > 0   # 4 requests, 2 slots
+        assert eng.counters["mid_decode_admissions"] > 0   # 4 requests, 2 slots
         return {r.rid: r.out for r in done}
 
     fails = []
@@ -105,9 +105,9 @@ CODE = textwrap.dedent("""
     for c in COMBOS:
         dense_base, _ = serve_paged(None, *c, "dense")
         got, eng = serve_paged(mesh2, *c, "paged")
-        ok = got == dense_base and eng.stats["prefix_hits"] > 0
+        ok = got == dense_base and eng.counters["prefix_hits"] > 0
         print(f"paged tp=2 path={c[0]} kv={c[1]} "
-              f"hits={eng.stats['prefix_hits']}: "
+              f"hits={eng.counters['prefix_hits']}: "
               f"{'OK' if ok else 'MISMATCH ' + repr((got, dense_base))}",
               flush=True)
         if not ok:
@@ -137,7 +137,7 @@ CODE = textwrap.dedent("""
 
     spec_base, _ = serve_spec(None, 1)
     spec_got, eng = serve_spec(mesh2, 4)
-    ok = spec_got == spec_base and eng.stats["spec_accepted"] > 0
+    ok = spec_got == spec_base and eng.counters["spec_accepted"] > 0
     print(f"spec tp=2 fused-int8/int8 paged accept={eng.accept_rate():.2f}: "
           f"{'OK' if ok else 'MISMATCH ' + repr((spec_got, spec_base))}",
           flush=True)
@@ -159,9 +159,9 @@ CODE = textwrap.dedent("""
 
     chunk_base, _ = serve_chunked(None)
     chunk_got, eng = serve_chunked(mesh2, chunked=True, token_budget=10)
-    ok = chunk_got == chunk_base and eng.stats["chunk_prefill_rows"] > 0
+    ok = chunk_got == chunk_base and eng.counters["chunk_prefill_rows"] > 0
     print(f"chunked tp=2 dequant-fp/fp paged "
-          f"chunk_steps={eng.stats['chunk_steps']}: "
+          f"chunk_steps={eng.counters['chunk_steps']}: "
           f"{'OK' if ok else 'MISMATCH ' + repr((chunk_got, chunk_base))}",
           flush=True)
     if not ok:

@@ -94,8 +94,8 @@ class TestEngineParity:
         spec, eng = _serve(cfg, serve_params, prompts, MAX_NEW, speculate=4, **kw)
         assert spec == base, (path, kv, layout)
         # the workload must actually have exercised multi-token windows
-        assert eng.stats["spec_steps"] > 0
-        assert eng.stats["spec_drafted"] > 0
+        assert eng.counters["spec_steps"] > 0
+        assert eng.counters["spec_drafted"] > 0
 
     def test_speculation_accepts_on_periodic_prompts(self, small):
         """Motif prompts through a greedy random-init model are repetitive
@@ -103,7 +103,7 @@ class TestEngineParity:
         harness genuinely tests multi-token acceptance, not just k=1 fallback."""
         cfg, params, _ = small
         spec, eng = _serve(cfg, params, _spec_prompts(cfg), MAX_NEW, speculate=4)
-        assert eng.stats["spec_accepted"] > 0
+        assert eng.counters["spec_accepted"] > 0
         assert eng.accept_rate() > 0.0
         assert eng.tokens_per_step() > 1.0
 
@@ -173,7 +173,7 @@ class TestMidWindowRetirement:
         got, eng = _serve(cfg, params, prompts, MAX_NEW, speculate=4,
                           eos_id=eos, cache_layout="paged", page_size=PS)
         assert got == want
-        assert eng.stats["mid_decode_admissions"] > 0
+        assert eng.counters["mid_decode_admissions"] > 0
 
 
 class TestDrafter:
