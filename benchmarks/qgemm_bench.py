@@ -16,6 +16,12 @@ the fp path and the fused-int8 path (ServeEngine path="fused-int8"): measured CP
 tokens/sec for both, plus the projected TPU step-time ratio from the model's
 decode-GEMM shapes. On CPU the fused path *loses* wall-clock (Pallas interpret
 overhead) — the projected column is the deployment-relevant number.
+
+The ``qgemm_sparse`` section times the §3.12 block-sparse kernel against the dense
+kernel at varying K-block occupancy (the regress gate pins sparse <= dense on the
+skipped-block rows), and ``e2e_sparse`` serves a 2:4-sparsified tree vs the dense
+int8 tree plus the deployment-capacity column (extra KV pages per device at fixed
+HBM, from ``quantized_bytes(deploy_sparse=True)``).
 """
 from __future__ import annotations
 
@@ -64,6 +70,86 @@ def _serve_tok_s(cfg, params, *, quant, path, kv_cache, n_req, max_new) -> float
     done = eng.run()
     dt = time.perf_counter() - t0
     return sum(len(r.out) for r in done) / dt
+
+
+def sparse(quick: bool = False):
+    """Block-sparse int8 GEMM (DESIGN.md §3.12) vs the dense kernel at varying
+    K-block occupancy, both through the ops dispatch in interpret mode.
+
+    The occupancy=1.00 row measures pure bookkeeping overhead (the wrapper's
+    runtime cond routes it to the dense kernel); the sub-full rows measure the
+    win from skipped MXU dots — interpret mode genuinely skips the gated work,
+    so the regress gate pins ``sparse <= dense`` wall-clock there. Projected
+    TPU columns scale the roofline terms by occupancy (compute and weight
+    bytes shrink together; activations and output do not)."""
+    from repro.kernels import ops
+
+    M, K, N = (256, 1024, 256) if quick else (256, 2048, 256)
+    bk = 256
+    key = jax.random.PRNGKey(0)
+    qx = jax.random.randint(key, (M, K), -127, 128, jnp.int8)
+    qw = jax.random.randint(key, (K, N), -127, 128, jnp.int8)
+    a = jnp.ones((M, 1), jnp.float32)
+    sw = jnp.ones((N,), jnp.float32)
+
+    def t_us(f):
+        f().block_until_ready()
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f().block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    lines = ["qgemm_sparse,occupancy,cpu_dense_us,cpu_sparse_us,ratio,"
+             "proj_tpu_us_dense,proj_tpu_us_sparse"]
+    n_k = K // bk
+    bytes_d, ops_d, _, t_dense_tpu, _ = derived(M, K, N)
+    for occ_frac in (1.0, 0.5, 0.25):
+        keep = jnp.repeat(jnp.arange(n_k) < round(occ_frac * n_k), bk)[:, None]
+        mask = keep & jnp.ones((K, N), bool)
+        qwm = jnp.where(mask, qw, 0)
+        cpu_s = t_us(lambda: ops.qgemm_w8a8_sparse(qx, qwm, a, sw, mask,
+                                                   bm=256, bn=256, bk=bk))
+        cpu_d = t_us(lambda: ops.qgemm_w8a8(qx, qwm, a, sw, bm=256, bn=256,
+                                            bk=bk))
+        sp_bytes = M * K + K * N * occ_frac + K * N / 8 + M * N * 4 + M * 4 + N * 4
+        t_sp_tpu = max(ops_d * occ_frac / PEAK_INT8, sp_bytes / HBM_BW)
+        lines.append(f"qgemm_sparse,{occ_frac:.2f},{cpu_d:.0f},{cpu_s:.0f},"
+                     f"{cpu_s / cpu_d:.2f},{t_dense_tpu * 1e6:.1f},"
+                     f"{t_sp_tpu * 1e6:.1f}")
+    return lines
+
+
+def e2e_sparse(quick: bool = False):
+    """Sparse-vs-dense fused-int8 serving on the smoke model: CPU tok/s for
+    both, plus the §3.12 capacity column — the HBM a 2:4 deployment format
+    hands back, expressed as extra KV pages per device at fixed HBM."""
+    from repro.configs import get
+    from repro.core import qlinear as ql
+    from repro.models import model as M2
+    from repro.models import quantize as MQ
+
+    cfg = get("starcoder2-7b", smoke=True)
+    params = M2.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = MQ.quantize_tree(params, ql.W8A8_INT8)
+    sparams = MQ.sparsify_tree(qparams, MQ.SparsityPlan(nm=(2, 4)))
+    n_req, max_new = (2, 4) if quick else (4, 8)
+    dense = _serve_tok_s(cfg, qparams, quant=ql.W8A8_INT8, path="fused-int8",
+                         kv_cache="int8", n_req=n_req, max_new=max_new)
+    sp = _serve_tok_s(cfg, sparams, quant=ql.W8A8_INT8, path="fused-int8",
+                      kv_cache="int8", n_req=n_req, max_new=max_new)
+    dense_b = MQ.quantized_bytes(qparams)
+    deploy_b = MQ.quantized_bytes(sparams, deploy_sparse=True)
+    # one int8-KV page: page_size tokens x (k + v) x kv heads x head_dim x
+    # n_layers bytes (scales are amortized per page row and negligible here)
+    page_b = 8 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+    extra_pages = (dense_b - deploy_b) / page_b
+    return [
+        "e2e_sparse,arch,cpu_dense_tok_s,cpu_sparse_tok_s,ratio,dense_bytes,"
+        "deploy_bytes,extra_pages_per_dev",
+        f"e2e_sparse,{cfg.name},{dense:.1f},{sp:.1f},{sp / dense:.2f},"
+        f"{dense_b},{deploy_b},{extra_pages:.0f}",
+    ]
 
 
 def e2e(quick: bool = False):
@@ -116,7 +202,9 @@ def run(quick: bool = False):
         cpu_us = (time.perf_counter() - t0) / reps * 1e6
         lines.append(f"qgemm,{tag},{b:.3g},{ops:.3g},{inten:.0f},"
                      f"{t8 * 1e6:.1f},{t16 * 1e6:.1f},{t16 / t8:.2f},{cpu_us:.0f}")
+    lines.extend(sparse(quick))
     lines.extend(e2e(quick))
+    lines.extend(e2e_sparse(quick))
     return lines
 
 

@@ -39,6 +39,16 @@ What gates, against what:
   seeded-random router's at steady load, steady runs must not reject, and the
   overload run must (``serving_bench_server`` rows, DESIGN.md §3.11).
   Baselines without server rows predate the schema bump.
+* Block-sparse kernel invariant (new snapshot only — same-run timing pair):
+  on every ``qgemm_sparse`` row with occupancy < 1, the §3.12 sparse kernel's
+  wall-clock must not exceed the dense kernel's — skipping all-zero K-blocks
+  is the kernel's whole claim. The occupancy=1.00 row (bookkeeping overhead)
+  is informational. Pre-sparsity snapshots have no rows and skip.
+* Sparse pruning ppl gate: in the first snapshot carrying ``table2_ppl`` rows
+  (the fresh one on a full pass, else the committed baseline — the CI quick
+  lane's ``--only`` pass doesn't re-run table2), the plan-gated
+  ``crossquant_w8a8_sparse24`` ppl must stay within ``SPARSE_PPL_CEILING`` of
+  the dense ``crossquant_w8a8`` row per regime.
 * A snapshot without usable ``serving_bench`` rows — module missing, its
   subprocess failed (``ok: false``), or no data lines — is an **error**, for
   baselines too: a partial ``--only`` run that dropped the serving module must
@@ -313,6 +323,93 @@ def server_invariant(rows: dict) -> tuple[list, list]:
     return report, failures
 
 
+def sparse_kernel_rows(snapshot: dict) -> dict:
+    """``occupancy -> {"dense_us", "sparse_us"}`` from the block-sparse kernel
+    section (``qgemm_sparse`` lines in the ``qgemm_bench`` module — DESIGN.md
+    §3.12). Empty for pre-sparsity snapshots (schema bump, like spec_rows)."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("qgemm_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 5 or parts[0] != "qgemm_sparse" or parts[1] == "occupancy":
+            continue
+        rows[float(parts[1])] = {
+            "dense_us": float(parts[2]),
+            "sparse_us": float(parts[3]),
+        }
+    return rows
+
+
+def sparse_kernel_invariant(rows: dict) -> tuple[list, list]:
+    """Same-snapshot block-sparse kernel gate (no baseline needed — both
+    timings come from the same run on the same machine): on every
+    skipped-block row (occupancy < 1) the sparse kernel must not lose to the
+    dense kernel — skipping all-zero K-blocks is the kernel's whole claim,
+    and in interpret mode the gated dots are genuinely not executed. The
+    occupancy=1.00 row reports the bookkeeping overhead informationally (the
+    ops wrapper routes full-occupancy inputs to the dense kernel at runtime,
+    so production never pays it on dense traffic)."""
+    report, failures = [], []
+    for occ in sorted(rows, reverse=True):
+        r = rows[occ]
+        line = (f"  sparse occ={occ:.2f}: sparse {r['sparse_us']:.0f}us vs "
+                f"dense {r['dense_us']:.0f}us")
+        if occ < 1.0 and r["sparse_us"] > r["dense_us"]:
+            line += "  REGRESSION (sparse slower on skipped-block workload)"
+            failures.append(line)
+        report.append(line)
+    return report, failures
+
+
+def table2_rows(snapshot: dict) -> dict:
+    """``(regime, method) -> ppl`` from the ``table2_ppl`` module. Empty when
+    the snapshot never ran table2 (e.g. the CI quick lane's ``--only`` pass)."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("table2_ppl", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 4 or parts[0] != "table2" or parts[1] == "regime":
+            continue
+        rows[(parts[1], parts[2])] = float(parts[3])
+    return rows
+
+
+# 2:4 pruning may cost at most this fraction of ppl over dense CrossQuant W8A8
+# per regime — measured headroom: the plan-gated bench rows sit ~1-2% over
+# dense, so 10% both absorbs eval noise and still catches a mis-scored mask
+# (unweighted or inverted scores blow ppl up by far more than this).
+SPARSE_PPL_CEILING = 0.10
+
+
+def sparse_ppl_gate(snapshots: list) -> tuple[list, list]:
+    """Plan-gated pruning quality gate: in the first snapshot that carries
+    table2 rows (the fresh one when a full pass ran; otherwise the committed
+    baseline — the CI quick lane's ``--only`` pass doesn't re-run table2),
+    the ``crossquant_w8a8_sparse24`` ppl must stay within
+    ``SPARSE_PPL_CEILING`` of the dense ``crossquant_w8a8`` row per regime.
+    No snapshot with table2 rows at all → informational skip (pre-sparsity
+    baselines)."""
+    for tag, snapshot in snapshots:
+        rows = table2_rows(snapshot)
+        pairs = [(regime, rows[(regime, "crossquant_w8a8")], ppl)
+                 for (regime, method), ppl in sorted(rows.items())
+                 if method == "crossquant_w8a8_sparse24"
+                 and (regime, "crossquant_w8a8") in rows]
+        if pairs:
+            report, failures = [], []
+            for regime, dense, sp in pairs:
+                delta = sp / dense - 1.0
+                line = (f"  {regime}: sparse24 ppl {sp:.3f} vs dense {dense:.3f} "
+                        f"({delta:+.1%}, ceiling {SPARSE_PPL_CEILING:.0%}, "
+                        f"from {tag})")
+                if delta > SPARSE_PPL_CEILING:
+                    line += "  REGRESSION (pruning ppl cost above ceiling)"
+                    failures.append(line)
+                report.append(line)
+            return report, failures
+    return ["  (no table2 sparse rows in any snapshot, skip)"], []
+
+
 def spec_rows(snapshot: dict) -> dict:
     """``(path, mode) -> {"tok_s", "accept_rate", "tokens_per_step"}`` from the
     speculative section (``serving_bench_spec`` lines — DESIGN.md §3.9).
@@ -488,9 +585,16 @@ def main() -> None:
     print("\n".join(sv_report) if sv_report else "  (no server rows)")
     all_failures += sv_failures
 
+    sk_report, sk_failures = sparse_kernel_invariant(
+        sparse_kernel_rows(new_snapshot))
+    print("block-sparse kernel invariant (sparse <= dense at occupancy < 1):")
+    print("\n".join(sk_report) if sk_report else "  (no qgemm_sparse rows)")
+    all_failures += sk_failures
+
     baselines = [(p, True) for p in args.baseline] + [
         (p, False) for p in args.occupancy_baseline
     ]
+    loaded = [(args.new, new_snapshot)]
     for path, wall_clock in baselines:
         try:
             with open(path) as fh:
@@ -508,6 +612,7 @@ def main() -> None:
             print("\n".join(incomplete))
             all_failures += incomplete
             continue
+        loaded.append((path, base_snapshot))
         base = serving_rows(base_snapshot)
         scope = (
             "tok/s + occupancy + prefix + spec"
@@ -528,6 +633,12 @@ def main() -> None:
         print(f"vs {path} (gating {scope}):")
         print("\n".join(report) if report else "  (no comparable rows)")
         all_failures += failures
+
+    pp_report, pp_failures = sparse_ppl_gate(loaded)
+    print(f"sparse pruning ppl gate (sparse24 within {SPARSE_PPL_CEILING:.0%} "
+          "of dense crossquant, first snapshot with table2 rows):")
+    print("\n".join(pp_report))
+    all_failures += pp_failures
 
     if all_failures:
         print(f"\nFAIL: {len(all_failures)} regression(s) beyond {args.max_drop:.0%}:")

@@ -5,12 +5,20 @@ llama-like and opt-like outlier regimes.
 Reproduced claims: (1) CrossQuant >= SmoothQuant >= per-token at W8A8; (2) per-token
 collapses at W4A4 while CrossQuant degrades gracefully; (3) group-wise W4 with
 CrossQuant activations tracks the fp baseline.
+
+One beyond-paper row per regime: ``crossquant_w8a8_sparse24`` — CrossQuant W8A8
+after plan-gated 2:4 weight pruning (DESIGN.md §3.12; only the linears whose §4.1
+quantization-kernel proportion stays under the plan threshold are pruned). The
+regress gate pins its ppl delta vs the dense ``crossquant_w8a8`` row.
 """
 from __future__ import annotations
 
 from benchmarks import common as C
 from benchmarks.regimes import REGIMES
 from repro.core import qlinear as ql
+from repro.models import quantize as MQ
+
+SPARSE_THRESHOLD = 0.10     # §4.1 kernel-proportion ceiling for pruning a layer
 
 GROUPS = [
     ("fp16", None),
@@ -38,6 +46,13 @@ def run(quick: bool = False):
         for name, qc in GROUPS:
             ppl = C.eval_ppl(cfg, planted, qc, n_batches=nb)
             lines.append(f"table2,{regime},{name},{ppl:.3f}")
+        plan = MQ.make_sparsity_plan(cfg, planted, C.eval_batches(1),
+                                     threshold=SPARSE_THRESHOLD)
+        sparams = MQ.sparsify_tree(planted, plan)
+        ppl = C.eval_ppl(cfg, sparams, ql.W8A8_CROSSQUANT, n_batches=nb)
+        lines.append(f"table2,{regime},crossquant_w8a8_sparse24,{ppl:.3f}")
+        lines.append(f"table2_sparse_plan,{regime},pruned_layers,"
+                     f"{len(plan.layers)}")
     return lines
 
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 from benchmarks import common as C
 from benchmarks.regimes import REGIMES
 from repro.core import qlinear as ql
+from repro.models import quantize as MQ
 
 
 def run(quick: bool = False):
@@ -40,6 +41,13 @@ def run(quick: bool = False):
         for name, qc in rows:
             acc = C.eval_acc(cfg, planted, qc, n_batches=nb)
             lines.append(f"table3,{regime},{name},{acc:.4f}")
+        # Beyond-paper: plan-gated 2:4 pruning under CrossQuant W8A8
+        # (DESIGN.md §3.12) — accuracy should track crossquant_w8a8.
+        plan = MQ.make_sparsity_plan(cfg, planted, C.eval_batches(1),
+                                     threshold=0.10)
+        sparams = MQ.sparsify_tree(planted, plan)
+        acc = C.eval_acc(cfg, sparams, ql.W8A8_CROSSQUANT, n_batches=nb)
+        lines.append(f"table3,{regime},crossquant_w8a8_sparse24,{acc:.4f}")
     return lines
 
 

@@ -36,6 +36,12 @@ CrossQuant kernel proportion (the §4.1 statistic computed over each
 token_budget-sized admission slice) and its token-weighted aggregate against
 the whole-prompt figure — chunked admission leaves the metric unchanged.
 
+``--sparsity 2:4`` prunes every eligible linear to N:M structured sparsity at
+engine build (DESIGN.md §3.12) — scales refit to the survivors, a bit-packed
+keep-mask rides the tree, and the fused path serves through the block-sparse
+int8 kernel. The report prints pruned-linear count, kept fraction, and the
+dense-layout vs N:M-deploy weight bytes.
+
 ``--mesh data,model`` serves TP-sharded on a host mesh (DESIGN.md §3.7) — set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 
@@ -48,7 +54,7 @@ serves on the jnp ref backend.
         [--path dequant-fp|fused-int8] [--kv-cache fp|int8] [--compare]
         [--prompt-lens 6,10,14] [--eos-id N] [--quant-kernel-stats]
         [--mesh 4,2] [--speculate 4] [--cache-layout paged]
-        [--chunked --token-budget 16] [--config engine.json]
+        [--chunked --token-budget 16] [--sparsity 2:4] [--config engine.json]
 """
 import argparse
 import dataclasses
@@ -262,6 +268,21 @@ def main() -> None:
                         quant=quant, tag=args.quant, mesh=mesh)
     else:
         qparams = calibrate_and_quantize(cfg, params, quant)
+        if config.sparsity != "none":
+            # Prune up front with the same default plan the engine would build,
+            # so the report below describes exactly the tree being served (the
+            # engine's own sparsify_tree pass is idempotent on a masked tree).
+            from repro.models import quantize as MQ
+            qparams = MQ.sparsify_tree(
+                qparams, MQ.SparsityPlan(nm=MQ.parse_nm(config.sparsity)))
+            summ = MQ.sparsity_summary(qparams)
+            kept = float(np.mean(list(summ.values()))) if summ else 1.0
+            dense_b = quantized_bytes(qparams)
+            deploy_b = quantized_bytes(qparams, deploy_sparse=True)
+            print(f"sparsity {config.sparsity}: {len(summ)} linears pruned, "
+                  f"kept fraction {kept:.2f}; weights "
+                  f"{dense_b / 2**20:.2f} MiB dense-layout -> "
+                  f"{deploy_b / 2**20:.2f} MiB in the N:M deploy format")
         serve_params = qparams
         done, int8_tps = serve(cfg, qparams, prompts, max_new, config=config,
                                quant=quant, mesh=mesh)

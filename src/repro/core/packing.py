@@ -1,4 +1,12 @@
-"""INT4 nibble packing: two signed 4-bit codes per int8 byte.
+"""Bit/nibble packing: N:M sparsity masks (1 bit/element) and int4 codes (2/byte).
+
+Mask packing (DESIGN.md §3.12): the structured-sparsity ``mask`` leaf stores the
+N:M keep-mask at one bit per weight element, packed along d_in so the d_out axis
+keeps its dense length (column-parallel sharding splits it untouched; a
+row-parallel split lands on the packed axis at byte granularity, mirroring the
+int4 contract below, and degrades to replication when tp does not divide it).
+
+INT4 nibble packing: two signed 4-bit codes per int8 byte.
 
 Layout: element 2k goes to the low nibble, element 2k+1 to the high nibble, packed
 along ``axis`` (default: the last axis, contiguous in HBM), halving weight bytes for
@@ -13,6 +21,21 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def pack_mask(mask: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack a {0,1} keep-mask to one bit per element along ``axis`` (default: the
+    weight's d_in axis), big-endian within each uint8 byte. The packed axis has
+    length ``ceil(d_in / 8)``; trailing pad bits are zero, so a popcount of the
+    packed array equals the survivor count exactly (models/quantize.py relies on
+    this for deployment-size accounting)."""
+    return jnp.packbits(mask.astype(jnp.uint8), axis=axis)
+
+
+def unpack_mask(packed: jax.Array, count: int, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`pack_mask`: uint8 {0,1} mask with ``count`` rows along
+    ``axis`` (the pad bits are dropped)."""
+    return jnp.unpackbits(packed, axis=axis, count=count)
 
 
 def pack_int4(codes: jax.Array, axis: int = -1) -> jax.Array:

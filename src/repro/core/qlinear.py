@@ -225,7 +225,15 @@ def _int8_pallas(params: dict, x: jax.Array, cfg: QuantConfig) -> jax.Array:
                                       jnp.asarray(alpha, jnp.float32),
                                       bits=cfg.a_bits)
     if "qw" in params:
-        y = kops.qgemm_w8a8(qx, params["qw"], a, params["sw"])
+        mask = params.get("mask")
+        if mask is not None and params["qw"].ndim == 2:
+            # N:M-pruned leaf (DESIGN.md §3.12): unpack the bit-packed keep-mask
+            # and let the sparse GEMM skip all-zero weight blocks. The dequant
+            # and ref backends need no branch — qw already carries the zeros.
+            mk = packing.unpack_mask(mask, count=params["qw"].shape[-2], axis=-2)
+            y = kops.qgemm_w8a8_sparse(qx, params["qw"], a, params["sw"], mk)
+        else:
+            y = kops.qgemm_w8a8(qx, params["qw"], a, params["sw"])
     else:
         y = kops.qgemm_w4a8(qx, params["qw4"], a, params["sw"], group=cfg.w_group)
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)

@@ -95,6 +95,55 @@ def qgemm_w8a8(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array,
                        mesh=hints.current_mesh())
 
 
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mesh", "exec_mode"))
+def _qgemm_w8a8_sparse(qx, qw, a, sw, mask, *, bm, bn, bk, mesh, exec_mode):
+    M, K = qx.shape
+    N = qw.shape[1]
+    bm = _pick_block(M, bm)
+    bn = _pick_block(N, bn)
+    bk = _pick_block(K, bk)
+
+    def body(qx, qw, a, sw, mask):
+        if exec_mode == "ref":
+            return _ref.qgemm_w8a8_sparse_ref(qx, qw, a, sw, mask)
+        qxp = _pad_to(_pad_to(qx, 0, bm), 1, bk)
+        qwp = _pad_to(_pad_to(qw, 0, bk), 1, bn)
+        ap = _pad_to(a.astype(jnp.float32), 0, bm)
+        swp = _pad_to(sw.reshape(1, -1).astype(jnp.float32), 1, bn)
+        mp = _pad_to(_pad_to(mask.astype(jnp.int32), 0, bk), 1, bn)
+        Kp, Np = qwp.shape
+        occ = mp.reshape(Kp // bk, bk, Np // bn, bn).sum(axis=(1, 3))
+        dense_args = (qxp, qwp, ap, swp)
+        # Dense fallback when occupancy is full: the sparse kernel is bitwise
+        # identical there but pays an SMEM gate per grid step for nothing. Both
+        # branches produce the same values (skipping all-zero int8 blocks is
+        # exact), so the runtime switch cannot perturb token parity.
+        out = jax.lax.cond(
+            jnp.all(occ > 0),
+            lambda ops: _qg.qgemm_w8a8_pallas(
+                *ops, bm=bm, bn=bn, bk=bk, interpret=_interpret()),
+            lambda ops: _qg.qgemm_w8a8_sparse_pallas(
+                *ops, occ, bm=bm, bn=bn, bk=bk, interpret=_interpret()),
+            dense_args)
+        return out[:M, :N]
+
+    return hints.manual_kernel(body, (qx, qw, a, sw, mask), mesh=mesh)
+
+
+def qgemm_w8a8_sparse(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array,
+                      mask: jax.Array, *, bm: int = 256, bn: int = 256,
+                      bk: int = 512) -> jax.Array:
+    """Block-sparse int8 GEMM over N:M-pruned weights (DESIGN.md §3.12).
+
+    mask (K, N) uint8 {0,1}: the *unpacked* keep-mask whose zeros already zero
+    ``qw`` (models/quantize.py sparsify_tree). The wrapper reduces it to per-
+    (bk, bn)-block occupancy for the kernel's scalar-prefetch gate; with every
+    block occupied it dispatches the plain dense kernel instead.
+    """
+    return _qgemm_w8a8_sparse(qx, qw, a, sw, mask, bm=bm, bn=bn, bk=bk,
+                              mesh=hints.current_mesh(), exec_mode=_exec_mode())
+
+
 @functools.partial(jax.jit, static_argnames=("group", "bm", "bn", "mesh"))
 def _qgemm_w4a8(qx, qw4, a, sw, *, group, bm, bn, mesh):
     M, K = qx.shape

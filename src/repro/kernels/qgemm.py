@@ -9,6 +9,9 @@ These are the compute hot-spots of CrossQuant deployment (DESIGN.md §3.2):
   unpacked *in VMEM* (halving the weight HBM traffic — the paper's W4A8-g128 setting);
   per-group scales are applied per K-block so the K grid axis walks one g128 group per
   step and accumulates in f32.
+* ``qgemm_w8a8_sparse`` — the int8 GEMM over N:M-pruned weights (DESIGN.md §3.12): a
+  block-occupancy table rides scalar prefetch into SMEM and k-steps over all-zero
+  weight blocks skip their MXU dot (skipping zeros is exact in integer arithmetic).
 
 Tiling: MXU-aligned (multiples of 128 on M/N; K blocks of 256–512). The int8 tiles are
 small (bm·bk + bk·bn bytes), so the working set stays well under the ~16 MB/core VMEM:
@@ -79,6 +82,76 @@ def qgemm_w8a8_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(qx, qw, a, sw)
+
+
+# --------------------------------------------------------------------------------------
+# W8A8, block-sparse (N:M-pruned weights — DESIGN.md §3.12)
+# --------------------------------------------------------------------------------------
+
+def _w8a8_sparse_kernel(occ_ref, qx_ref, qw_ref, a_ref, sw_ref, out_ref, acc_ref,
+                        *, n_k: int):
+    """Dense kernel + one scalar gate: the (K//bk, N//bn) block-occupancy table is
+    scalar-prefetched into SMEM, and a k-step whose weight block holds no surviving
+    values skips its MXU dot entirely. Skipping is exact (an all-zero int8 block
+    contributes 0 to the int32 accumulator), and with an all-ones table the step
+    sequence is identical to :func:`_w8a8_kernel` — the bitwise-parity contract the
+    tests pin. Init and dequant stay unconditional so fully-empty (m, n) tiles
+    still write their (zero) output."""
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[k, n] > 0)
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            qx_ref[...], qw_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _dequant():
+        out_ref[...] = acc_ref[...].astype(jnp.float32) * a_ref[...] * sw_ref[...]
+
+
+def qgemm_w8a8_sparse_pallas(
+    qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array, occ: jax.Array, *,
+    bm: int = 256, bn: int = 256, bk: int = 512, interpret: bool = False,
+) -> jax.Array:
+    """:func:`qgemm_w8a8_pallas` with a block-occupancy gate.
+
+    occ: (K//bk, N//bn) int32, nonzero ⇔ the corresponding qw block holds at least
+    one surviving weight. The caller (ops.py) derives it from the N:M mask leaf and
+    guarantees qw is zero wherever the mask is — an occupancy of 0 over a nonzero
+    block would silently drop its contribution.
+    """
+    M, K = qx.shape
+    K2, N = qw.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"unpadded shapes M={M} K={K} N={N} for blocks {(bm, bk, bn)}")
+    n_k = K // bk
+    assert occ.shape == (n_k, N // bn) and occ.dtype == jnp.int32, (
+        occ.shape, occ.dtype, (n_k, N // bn))
+    grid = (M // bm, N // bn, n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k, occ: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k, occ: (k, n)),
+            pl.BlockSpec((bm, 1), lambda m, n, k, occ: (m, 0)),
+            pl.BlockSpec((1, bn), lambda m, n, k, occ: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k, occ: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_w8a8_sparse_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(occ, qx, qw, a, sw)
 
 
 # --------------------------------------------------------------------------------------

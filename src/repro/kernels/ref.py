@@ -27,6 +27,20 @@ def qgemm_w8a8_ref(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array) ->
     return acc.astype(jnp.float32) * a * sw
 
 
+def qgemm_w8a8_sparse_ref(qx: jax.Array, qw: jax.Array, a: jax.Array, sw: jax.Array,
+                          mask: jax.Array) -> jax.Array:
+    """N:M block-sparse int8 GEMM oracle: the masked dense GEMM.
+
+    mask: (K, N) {0,1} keep-mask (unpacked). Semantic ground truth for the sparse
+    kernel at *any* block size: the kernel only ever skips weight blocks whose
+    mask is entirely zero, and a zero int8 block contributes exactly 0 to the
+    int32 accumulator — so masking the operand is the whole contract. ``qw`` is
+    already zero where the mask is (prepare-time pruning); the multiply here
+    makes the oracle robust to deliberately inconsistent test inputs.
+    """
+    return qgemm_w8a8_ref(qx, qw * mask.astype(qw.dtype), a, sw)
+
+
 def qgemm_w4a8_ref(qx: jax.Array, qw4: jax.Array, a: jax.Array, sw: jax.Array,
                    group: int = 128) -> jax.Array:
     """W4A8 grouped GEMM.

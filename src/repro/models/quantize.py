@@ -6,13 +6,16 @@ quantized tree, serve from it. Embeddings, lm_head, router, norms, convs and the
 recurrence parameters stay fp (paper scope: activations *entering linear layers*)."""
 from __future__ import annotations
 
-from typing import Dict, Optional
+import dataclasses
+from typing import Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
 from repro.core import qlinear as ql
+from repro.core import quantizers as Q
 
 QUANTIZABLE_PARENTS = ("wq", "wk", "wv", "wo", "up", "gate", "down",
                        "in_proj", "out_proj")
@@ -109,8 +112,224 @@ def fake_quantize_weights(params, cfg: ql.QuantConfig):
     return convert(params, "")
 
 
-def quantized_bytes(params) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+# --------------------------------------------------------------------------------------
+# N:M structured sparsity (DESIGN.md §3.12)
+# --------------------------------------------------------------------------------------
+
+def parse_nm(spec: str) -> Tuple[int, int]:
+    """``"2:4"`` -> ``(2, 4)`` (keep n of every m consecutive input channels)."""
+    try:
+        n, m = (int(p) for p in spec.split(":"))
+    except ValueError:
+        raise ValueError(f"sparsity spec {spec!r} is not 'N:M'") from None
+    if not 0 < n < m:
+        raise ValueError(f"sparsity spec {spec!r} needs 0 < N < M")
+    return n, m
+
+
+@dataclasses.dataclass
+class SparsityPlan:
+    """Which linears to prune, at what N:M, and the §4.1 evidence for the choice.
+
+    ``layers=None`` prunes every eligible leaf (the serving default when no
+    calibration traffic is available); :func:`make_sparsity_plan` instead measures
+    each linear's CrossQuant quantization-kernel proportion and lists only the
+    layers where it stays under ``threshold`` — small kernel ⇒ the activation grid
+    already preserves the layer's information, so the extra weight compression is
+    where it is safest (paper §4.1; ZeroQuant-V2's per-layer sensitivity)."""
+
+    nm: Tuple[int, int] = (2, 4)
+    layers: Optional[Tuple[str, ...]] = None   # leaf paths, e.g. "blocks/0/attn/wq"
+    fractions: Dict[str, float] = dataclasses.field(default_factory=dict)
+    threshold: float = 0.0
+
+    def wants(self, prefix: str) -> bool:
+        return self.layers is None or prefix in self.layers
+
+
+def nm_keep_mask(score: jax.Array, n: int, m: int) -> jax.Array:
+    """Boolean keep-mask holding the top-``n`` scores of every ``m`` consecutive
+    input channels (axis -2), independently per output channel. Ties break toward
+    the lower channel index (argsort is stable), so exactly ``n`` survive per
+    group. A trailing remainder when ``d_in % m != 0`` stays dense."""
+    *lead, K, N = score.shape
+    kg = (K // m) * m
+    head = score[..., :kg, :].reshape(*lead, kg // m, m, N)
+    order = jnp.argsort(-head, axis=-2)            # descending within the group
+    rank = jnp.argsort(order, axis=-2)             # each element's rank
+    keep = (rank < n).reshape(*lead, kg, N)
+    if kg < K:
+        tail = jnp.ones((*lead, K - kg, N), bool)
+        keep = jnp.concatenate([keep, tail], axis=-2)
+    return keep
+
+
+def _activation_weight(cm, alpha, d_in: int):
+    """Residual activation factor that turns |wb| into the full |w|·c score.
+
+    The prepared weight already carries ``c^(1-α)`` (the folded ``b`` column), so
+    multiplying by ``c^α`` recovers magnitude × activation-absmax — the
+    Wanda-style score — without unfolding. Uncalibrated leaves (α=1, b=1) get the
+    whole ``c`` here."""
+    cm = jnp.maximum(jnp.asarray(cm, jnp.float32), Q.EPS)
+    cm = jnp.broadcast_to(cm, cm.shape[:-1] + (d_in,))
+    return cm ** jnp.asarray(alpha, jnp.float32)[..., None]
+
+
+def sparsify_tree(qparams, plan: SparsityPlan,
+                  tables: Optional[Dict[str, np.ndarray]] = None):
+    """Prune the linears named by ``plan`` to N:M structured sparsity.
+
+    Works on either tree form:
+
+    * **prepared int8** (post :func:`quantize_tree`): scores ``|qw·sw|`` — the
+      b-folded weight, i.e. magnitude already weighted by ``c^(1-α)`` — times the
+      residual ``c^α`` when calibration tables are available, zeroes the losers,
+      then *refits* ``sw`` to the survivors before requantizing. Refitting is the
+      point of pruning before per-channel scaling: the pruned weights no longer
+      claim dynamic range, so every int8 code lands on a surviving value.
+    * **fp** (pre-quantization, fake/fp serving): scores ``|w|·cmax`` (or plain
+      magnitude without calibration) and zeroes the pruned fp weights in place.
+
+    Either way each pruned leaf gains a bit-packed ``mask`` leaf
+    (:func:`repro.core.packing.pack_mask`). Packed-int4 leaves and leaves already
+    carrying a mask pass through untouched.
+    """
+    tables = tables or {}
+    n, m = plan.nm
+
+    def table_cmax(node, prefix):
+        cm = node.get("cmax")
+        if cm is None and prefix in tables:
+            cm = jnp.asarray(tables[prefix])
+        return cm
+
+    def prune_prepared(node, prefix):
+        qw, sw = node["qw"], node["sw"]
+        wb = qw.astype(jnp.float32) * sw[..., None, :]
+        score = jnp.abs(wb)
+        cm = table_cmax(node, prefix)
+        if cm is not None:
+            score = score * _activation_weight(cm, node["qalpha"], qw.shape[-2])[..., :, None]
+        mask = nm_keep_mask(score, n, m)
+        wbp = jnp.where(mask, wb, 0.0)
+        sw2 = jnp.maximum(jnp.max(jnp.abs(wbp), axis=-2), Q.EPS) / Q.qmax(8)
+        qw2 = jnp.clip(jnp.round(wbp / sw2[..., None, :]),
+                       -Q.qmax(8), Q.qmax(8)).astype(jnp.int8)
+        return {**node, "qw": qw2, "sw": sw2.astype(jnp.float32),
+                "mask": packing.pack_mask(mask)}
+
+    def prune_fp(node, prefix):
+        w = node["w"]
+        score = jnp.abs(w).astype(jnp.float32)
+        cm = table_cmax(node, prefix)
+        if cm is not None:
+            cm = jnp.maximum(jnp.asarray(cm, jnp.float32), Q.EPS)
+            score = score * cm[..., :, None]
+        mask = nm_keep_mask(score, n, m)
+        return {**node, "w": jnp.where(mask, w, 0.0).astype(w.dtype),
+                "mask": packing.pack_mask(mask)}
+
+    def convert(node, prefix):
+        if isinstance(node, dict):
+            leaf = prefix.split("/")[-1] if prefix else ""
+            if leaf in QUANTIZABLE_PARENTS and "mask" not in node and plan.wants(prefix):
+                if "qw" in node:
+                    return prune_prepared(node, prefix)
+                if "w" in node and node["w"].ndim >= 2:
+                    return prune_fp(node, prefix)
+            return {k: convert(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [convert(v, f"{prefix}/{i}") for i, v in enumerate(node)]
+        return node
+
+    return convert(qparams, "")
+
+
+def make_sparsity_plan(cfg, params, batches: Iterable, *, nm: Tuple[int, int] = (2, 4),
+                       threshold: float = 0.05, bits: int = 8, alpha: float = 0.15,
+                       ) -> SparsityPlan:
+    """Measure each linear's §4.1 quantization-kernel proportion on calibration
+    traffic and plan N:M pruning for the layers where it stays under ``threshold``.
+
+    The proportion is ``|K(Q)| / |Q|`` under the CrossQuant grid (eager observer
+    pass, like :mod:`repro.core.calibration`); a *stacked* leaf (one param array
+    per sublayer across the scanned blocks) is gated on its **worst** layer, so a
+    single outlier-heavy layer keeps the whole leaf dense."""
+    from repro.core import kernel_analysis as KA
+    from repro.core.calibration import stack_tables
+    from repro.models import model as M
+    from repro.models.layers import QuantContext
+
+    per_name: Dict[str, list] = {}
+
+    class _Shim:
+        def observe(self, name, x):
+            x2 = jnp.asarray(x).reshape(-1, x.shape[-1]).astype(jnp.float32)
+            frac = float(KA.crossquant_kernel_fraction(x2, bits=bits, alpha=alpha))
+            per_name.setdefault(name, []).append(frac)
+
+    ctx = QuantContext(ql.W8A8_CROSSQUANT, observer=_Shim())
+    for batch in batches:
+        M.apply(params, batch, cfg, ctx=ctx, mode="train", unroll=True)
+
+    stacked = stack_tables({k: np.float32(np.mean(v)) for k, v in per_name.items()})
+    fractions = {path: float(np.max(v)) for path, v in stacked.items()}
+    layers = tuple(sorted(p for p, f in fractions.items()
+                          if f <= threshold and p.split("/")[-1] in QUANTIZABLE_PARENTS))
+    return SparsityPlan(nm=nm, layers=layers, fractions=fractions,
+                        threshold=threshold)
+
+
+def sparsity_summary(qparams) -> Dict[str, float]:
+    """``{leaf path: kept fraction}`` for every masked leaf (popcount / elements)."""
+    out: Dict[str, float] = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            if "mask" in node:
+                ref = node["qw"] if "qw" in node else node["w"]
+                kept = int(np.unpackbits(np.asarray(node["mask"])).sum())
+                out[prefix] = kept / ref.size
+                return
+            for k, v in node.items():
+                walk(v, f"{prefix}/{k}" if prefix else k)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(v, f"{prefix}/{i}")
+
+    walk(qparams, "")
+    return out
+
+
+def quantized_bytes(params, *, deploy_sparse: bool = False) -> int:
+    """Total bytes of **every** leaf — integer codes, scale/aux vectors (``sw``,
+    ``bcol``, ``qalpha``, the int8-KV ``k_scale``/``v_scale``) and packed ``mask``
+    leaves alike. Nothing is exempt: serving capacity math (README, serving_bench
+    ``capacity_x``) divides HBM by this number, so auxiliary leaves must be paid
+    for where they live.
+
+    ``deploy_sparse=True`` costs each masked int8 leaf at its N:M *deployment*
+    size — surviving codes (mask popcount) plus the packed mask — instead of the
+    dense zero-carrying layout this repo stores; the difference is the HBM a 2:4
+    hardware format hands back as extra KV pages."""
+    if not deploy_sparse:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(params))
+
+    def walk(node) -> int:
+        if isinstance(node, dict):
+            if "qw" in node and "mask" in node:
+                aux = sum(walk(v) for k, v in node.items() if k != "qw")
+                kept = int(np.unpackbits(np.asarray(node["mask"])).sum())
+                return aux + kept * node["qw"].dtype.itemsize
+            return sum(walk(v) for v in node.values())
+        if isinstance(node, list):
+            return sum(walk(v) for v in node)
+        return node.size * node.dtype.itemsize
+
+    return walk(params)
 
 
 def pad_head_params(params, cfg_from, cfg_to):

@@ -27,13 +27,21 @@ class FinishReason(enum.Enum):
 
 
 class AdmissionError(RuntimeError):
-    """Raised by ``AsyncServer.submit`` when the bounded admission queue stays
-    full past the admission deadline: the request is *rejected*, not queued —
-    see DESIGN.md §3.11 (rejecting beats LRU-thrashing the radix cache)."""
+    """Raised by ``AsyncServer.submit`` when admission backpressure holds past
+    the deadline: the request is *rejected*, not queued — see DESIGN.md §3.11
+    (rejecting beats LRU-thrashing the radix cache).
 
-    def __init__(self, msg: str, queue_wait_s: float = 0.0):
+    ``reason`` types the rejection: ``"queue_full"`` (in-flight count at the
+    bound) or ``"pool_pressure"`` (paged layouts: no alive replica's page pool
+    can cover the request's worst-case page reservation — including requests
+    whose reservation exceeds the pool outright, which no amount of waiting
+    could ever serve)."""
+
+    def __init__(self, msg: str, queue_wait_s: float = 0.0,
+                 reason: str = "queue_full"):
         super().__init__(msg)
         self.queue_wait_s = queue_wait_s
+        self.reason = reason
 
 
 @dataclasses.dataclass

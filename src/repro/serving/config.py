@@ -69,6 +69,7 @@ class EngineConfig:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    sparsity: str = "none"
 
     def __post_init__(self):
         # normalize before validating: JSON hands lists/np dtypes through the
@@ -111,6 +112,9 @@ class EngineConfig:
                     f"token_budget {self.token_budget} < batch_size*speculate "
                     f"{self.batch_size * self.speculate}: every generating "
                     f"slot's decode row (or draft window) must fit each step")
+        if self.sparsity != "none":
+            from repro.models.quantize import parse_nm
+            parse_nm(self.sparsity)          # raises on malformed N:M
         if self.speculate > 1:
             if self.temperature > 0.0:
                 raise ValueError("speculate > 1 requires greedy sampling "
@@ -195,6 +199,7 @@ _FIELD_HELP = {
     "temperature": "sampling temperature; 0 = greedy",
     "top_k": "top-k sampling cutoff; 0 = disabled",
     "seed": "sampling PRNG seed",
+    "sparsity": "N:M structured weight sparsity applied at engine build (§3.12)",
 }
 
 _FIELD_CHOICES = {
@@ -202,6 +207,7 @@ _FIELD_CHOICES = {
     "kv_cache": ["fp", "int8"],
     "cache_layout": ["dense", "paged"],
     "scheduler": ["continuous", "grouped"],
+    "sparsity": ["none", "2:4", "4:8"],
 }
 
 

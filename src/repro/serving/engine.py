@@ -433,6 +433,7 @@ class ServeEngine:
                  quant: Optional[ql.QuantConfig] = None,
                  mesh: Optional[Mesh] = None,
                  plan: Optional["planner.Plan"] = None,
+                 sparsity_plan=None,
                  **legacy):
         if config is not None and legacy:
             raise TypeError("pass either config= or legacy engine kwargs, "
@@ -468,6 +469,21 @@ class ServeEngine:
         self.spec = speculate
         if speculate > 1:
             self.drafter = drafter.NGramDrafter(max_ngram=drafter_ngram)
+        self.sparsity_plan = sparsity_plan
+        if config.sparsity != "none":
+            # N:M structured sparsity at engine build (DESIGN.md §3.12): prune the
+            # tree the engine will serve — prepared int8 leaves are rescaled to
+            # their survivors and gain packed ``mask`` leaves the fused path's
+            # sparse GEMM reads; fp trees are magnitude-pruned in place so every
+            # path sees the same masked weights. A ``sparsity_plan``
+            # (models.quantize.make_sparsity_plan) restricts pruning to the layers
+            # whose §4.1 kernel proportion says it is safe; without one, every
+            # quantizable leaf is pruned. Leaves already carrying a mask pass
+            # through untouched, so pre-sparsified checkpoints serve as-is.
+            from repro.models import quantize as MQ
+            if sparsity_plan is None:
+                self.sparsity_plan = MQ.SparsityPlan(nm=MQ.parse_nm(config.sparsity))
+            params = MQ.sparsify_tree(params, self.sparsity_plan)
         self.cfg, self.params = cfg, params
         self.B, self.T = batch_size, max_len
         self.eos = eos_id

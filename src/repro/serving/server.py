@@ -12,8 +12,11 @@ enough), and exposes one async streaming call::
 Three policies hold the SLO story together:
 
 * **Bounded admission with backpressure** — at most ``max_queue`` requests are
-  in flight server-wide; a submit past that waits up to ``admission_timeout``
-  seconds for capacity, then fails with a typed :class:`AdmissionError`.
+  in flight server-wide, and on paged layouts a request must also fit some
+  alive replica's page pool (worst-case reservation vs free + reclaimable
+  pages); a submit past either bound waits up to ``admission_timeout`` seconds
+  for capacity, then fails with a typed :class:`AdmissionError` whose
+  ``reason`` says which bound held (``queue_full`` / ``pool_pressure``).
   Rejecting at the door beats admitting into a full page pool, where the
   overflow request would LRU-thrash the radix cache every admission round.
 * **Prefix-affinity routing** — the router hashes the leading page-aligned
@@ -428,27 +431,74 @@ class AsyncServer:
 
     # -------------------------------------------------------------- admission
 
+    def _worst_case_pages(self, request: Request) -> int:
+        """The page reservation ``engine._plan_paged`` will commit for this
+        request: every prompt token plus all-but-one generated token, capped at
+        ``max_len``, rounded up to whole pages."""
+        cfg = self.config
+        toks = min(len(request.prompt) + max(request.max_new - 1, 0), cfg.max_len)
+        return -(-toks // cfg.page_size)
+
+    def _pool_blocked(self, request: Request) -> bool:
+        """Paged layouts: True when no alive replica could cover the request's
+        worst-case page reservation right now — counting free pages plus the
+        radix-retained pages the engine's LRU eviction could reclaim (pages
+        whose only reference is the cache itself; anything a live sequence
+        holds is not reclaimable by waiting)."""
+        if self.config.cache_layout != "paged":
+            return False
+        need = self._worst_case_pages(request)
+        seen = False
+        for r in self.replicas:
+            eng = r.engine
+            if not r.alive or eng is None or getattr(eng, "pool", None) is None:
+                continue
+            seen = True
+            avail = eng.pool.free_count
+            if eng.radix is not None:
+                avail += sum(1 for p in eng.radix.held_pages()
+                             if eng.pool.refs[p] == 1)
+            if avail >= need:
+                return False
+        return seen
+
     async def submit(self, request: Request) -> AsyncIterator[StreamEvent]:
         """Stream one request: yields per-token ``StreamEvent`` frames and
         terminates after the ``finished`` (or ``error``) frame. Raises
-        :class:`AdmissionError` when the server stays at ``max_queue``
-        in-flight requests past ``admission_timeout`` seconds."""
+        :class:`AdmissionError` when admission backpressure — ``max_queue``
+        in-flight requests, or (paged layouts) no replica page pool able to
+        cover the request's worst-case reservation — holds past
+        ``admission_timeout`` seconds; ``AdmissionError.reason`` says which."""
         assert self._started, "call start() / use 'async with' first"
         rid = request.rid or f"req-{self._next_rid}"
         self._next_rid += 1
         t0 = time.monotonic()
+        deadline = t0 + self.admission_timeout
         async with self._cond:
-            try:
-                await asyncio.wait_for(
-                    self._cond.wait_for(lambda: self._inflight < self.max_queue),
-                    timeout=self.admission_timeout)
-            except asyncio.TimeoutError:
-                with self._stats_lock:
-                    self.counters["rejected"] += 1
-                raise AdmissionError(
-                    f"admission queue full ({self.max_queue} in flight) past "
-                    f"{self.admission_timeout:.3g}s deadline",
-                    queue_wait_s=time.monotonic() - t0) from None
+            while True:
+                queue_ok = self._inflight < self.max_queue
+                if queue_ok and not self._pool_blocked(request):
+                    break
+                reason = "queue_full" if not queue_ok else "pool_pressure"
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    with self._stats_lock:
+                        self.counters["rejected"] += 1
+                    what = (f"admission queue full ({self.max_queue} in flight)"
+                            if reason == "queue_full" else
+                            f"page-pool pressure ({self._worst_case_pages(request)}"
+                            f" pages needed, no alive replica can cover it)")
+                    raise AdmissionError(
+                        f"{what} past {self.admission_timeout:.3g}s deadline",
+                        queue_wait_s=time.monotonic() - t0, reason=reason)
+                try:
+                    # In-flight count changes notify this condition; page-pool
+                    # occupancy changes on the replica threads, which do not —
+                    # so wait on a short tick and re-poll the pools.
+                    await asyncio.wait_for(self._cond.wait(),
+                                           timeout=min(remaining, 0.05))
+                except asyncio.TimeoutError:
+                    pass
             self._inflight += 1
         with self._stats_lock:
             self.counters["submitted"] += 1

@@ -54,9 +54,9 @@ def make_serve_plan(cfg: ModelConfig, mesh: Mesh,
                     force_tier: Optional[str] = None) -> Plan:
     """Serving-mode plan for ``ServeEngine`` (DESIGN.md §3.7): a decode-kind plan
     whose specs also cover *prepared integer* trees — int8/packed-int4 weights and
-    their scale leaves (``sw``, ``bcol``, ``qalpha``) follow the same model-axis
-    split as the weight they dequantize — and slot-table KV caches including the
-    int8-KV per-token scale leaves."""
+    their scale leaves (``sw``, ``bcol``, ``qalpha``) and packed sparsity ``mask``
+    leaves follow the same model-axis split as the weight they dequantize — and
+    slot-table KV caches including the int8-KV per-token scale leaves."""
     shape = ShapeConfig(name="serve", seq_len=0, global_batch=0, kind="decode")
     return make_plan(cfg, shape, mesh, force_tier=force_tier)
 
@@ -244,6 +244,19 @@ def _param_spec(pathstr: str, shape: Tuple[int, ...], cfg: ModelConfig,
         ax, ok, _ = table[parent]
         if ok and ax == -2 and _maybe(tp, shape[-1], mesh):
             return P(*([None] * (nd - 1) + [tp]))
+        return P(*([None] * nd))
+    if parent in table and leaf == "mask":
+        # Bit-packed N:M keep-mask (packed along d_in — §3.12): rides its weight's
+        # model-axis split. Column-parallel: shard d_out (last axis, unpacked).
+        # Row-parallel: the shard would land on the *packed* axis — allowed only at
+        # byte granularity (same contract as packed int4 qw4), so tp must divide
+        # d_in//8; otherwise replicate — the mask is metadata the kernel wrapper
+        # gathers anyway, so replication costs capacity, never correctness.
+        ax, ok, _ = table[parent]
+        if ok and ax == -1 and _maybe(tp, shape[-1], mesh):
+            return P(*([None] * (nd - 1) + [tp]))
+        if ok and ax == -2 and _maybe(tp, shape[-2], mesh):
+            return P(*([None] * (nd - 2) + [tp, None]))
         return P(*([None] * nd))
     # qalpha (effective-alpha scalar, leading stack dims only) and anything else
     # unrecognized: replicate

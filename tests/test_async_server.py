@@ -176,14 +176,69 @@ class TestAdmission:
                     for p in prompts[:2]]
                 await asyncio.sleep(0.02)         # both hold admission slots
                 t0 = asyncio.get_running_loop().time()
-                with pytest.raises(AdmissionError):
+                with pytest.raises(AdmissionError) as ei:
                     await _collect(srv, Request(prompt=prompts[2].tolist(),
                                                 max_new=3))
+                assert ei.value.reason == "queue_full"
                 assert asyncio.get_running_loop().time() - t0 >= 0.05
                 assert srv.counters["rejected"] == 1
                 srv.resume()
                 for (toks, fin) in await asyncio.gather(*tasks):
                     assert len(toks) == 3 and fin.kind == "finished"
+
+        asyncio.run(main())
+
+    def test_pool_pressure_rejects_oversized_reservation(self, small):
+        """Paged layout: a request whose worst-case page reservation exceeds
+        the whole pool rejects with reason="pool_pressure" — no amount of
+        waiting could ever serve it — while a right-sized request on the same
+        server admits and finishes; the in-flight queue never fills."""
+        cfg, params, _ = small
+        config = EngineConfig(batch_size=1, max_len=T, cache_layout="paged",
+                              page_size=8, n_pages=3)
+        big = _prompts(cfg, lens=[20], seed=13)[0]   # 20+8-1 toks -> 4 pages
+        ok = _prompts(cfg, lens=[6], seed=14)[0]     # 6+3-1 toks  -> 1 page
+
+        async def main():
+            async with AsyncServer(cfg, params, config=config, replicas=1,
+                                   admission_timeout=0.05) as srv:
+                with pytest.raises(AdmissionError) as ei:
+                    await _collect(srv, Request(prompt=big.tolist(),
+                                                max_new=8))
+                assert ei.value.reason == "pool_pressure"
+                assert srv.counters["rejected"] == 1
+                toks, fin = await _collect(srv, Request(prompt=ok.tolist(),
+                                                        max_new=3))
+                assert len(toks) == 3 and fin.kind == "finished"
+
+        asyncio.run(main())
+
+    def test_pool_pressure_transient_admits_after_release(self, small):
+        """Pinning every free page (as live sequences would) makes submits
+        reject with reason="pool_pressure"; releasing the pages lets the same
+        request admit and finish."""
+        cfg, params, _ = small
+        config = EngineConfig(batch_size=1, max_len=T, cache_layout="paged",
+                              page_size=8)
+        prompt = _prompts(cfg, lens=[6], seed=15)[0]
+
+        async def main():
+            async with AsyncServer(cfg, params, config=config, replicas=1,
+                                   max_queue=4,
+                                   admission_timeout=0.05) as srv:
+                while srv.replicas[0].engine is None:     # replica warms up
+                    await asyncio.sleep(0.01)
+                pool = srv.replicas[0].engine.pool
+                held = pool.alloc(pool.free_count)
+                assert held is not None
+                with pytest.raises(AdmissionError) as ei:
+                    await _collect(srv, Request(prompt=prompt.tolist(),
+                                                max_new=3))
+                assert ei.value.reason == "pool_pressure"
+                pool.decref(held)
+                toks, fin = await _collect(srv, Request(prompt=prompt.tolist(),
+                                                        max_new=3))
+                assert len(toks) == 3 and fin.kind == "finished"
 
         asyncio.run(main())
 

@@ -5,7 +5,9 @@ continuous-batching workload through ``ServeEngine(mesh=...)`` at tp=2 (tier
 tp_full for the smoke config) and tp=4 (tier tp_kv_rep: 4 q heads divide, 2 kv
 heads degrade to replication) across the full path × KV-cache matrix —
 fake / dequant-fp / fused-int8 × fp / int8 — and asserts the emitted tokens are
-identical to the single-device engine, per request. The same matrix then runs
+identical to the single-device engine, per request. A 2:4-sparsified tree
+(DESIGN.md §3.12) then serves fused-int8 at tp=2: the packed mask leaves shard
+alongside their qw and the sparse tokens must equal single-device sparse. The same matrix then runs
 the paged cache layout (DESIGN.md §3.8) at tp=2 on a shared-prefix workload:
 paged@tp2 with radix prefix hits must equal dense single-device, token-exact.
 One speculative case (DESIGN.md §3.9) then serves speculate=4 draft windows
@@ -79,6 +81,28 @@ CODE = textwrap.dedent("""
                   flush=True)
             if not ok:
                 fails.append((tp, c))
+
+    # N:M structured sparsity (DESIGN.md §3.12) at tp=2: the packed mask leaves
+    # shard like their qw (column-parallel masks split d_out; row-parallel masks
+    # split the packed axis at byte granularity), and the sparse fused-int8
+    # engine must emit exactly the single-device sparse tokens.
+    from repro.models import quantize as MQ
+    sparams = MQ.sparsify_tree(qparams, MQ.SparsityPlan(nm=(2, 4)))
+
+    def serve_sparse(mesh):
+        eng = E.ServeEngine(cfg, sparams, batch_size=2, max_len=32,
+                            quant=ql.W8A8_INT8, path="fused-int8",
+                            kv_cache="int8", mesh=mesh)
+        eng.submit([x.copy() for x in prompts], max_new=list(MAX_NEW))
+        return {r.rid: r.out for r in eng.run()}
+
+    sp_base = serve_sparse(None)
+    sp_got = serve_sparse(make_debug_mesh(4, 2))
+    ok = sp_got == sp_base
+    print(f"sparse 2:4 tp=2 fused-int8/int8: "
+          f"{'OK' if ok else 'MISMATCH ' + repr((sp_got, sp_base))}", flush=True)
+    if not ok:
+        fails.append(("sparse-tp2",))
 
     # Paged layout (DESIGN.md §3.8) at tp=2: the page pool + radix prefix reuse
     # must emit exactly the single-device *dense* tokens on a workload with

@@ -1,0 +1,320 @@
+"""N:M structured sparsity (DESIGN.md §3.12): mask construction, prepare-time
+pruning with scale refit, the block-sparse kernel vs the ref.py oracle, the
+§4.1-gated sparsity plan, deployment byte accounting, and token parity of
+sparse serving across the path matrix. No hypothesis dependency: this module
+must run on minimal installs (the sparse kernel sweeps live here, not in
+test_kernels.py, for that reason)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import packing, qlinear as ql
+from repro.core import quantizers as Q
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.models import quantize as MQ
+from repro.serving.config import EngineConfig
+from repro.serving.engine import ServeEngine
+
+
+class TestParseNM:
+    def test_valid(self):
+        assert MQ.parse_nm("2:4") == (2, 4)
+        assert MQ.parse_nm("4:8") == (4, 8)
+
+    @pytest.mark.parametrize("bad", ["", "4", "2:4:8", "a:b", "4:2", "0:4", "4:4"])
+    def test_invalid(self, bad):
+        with pytest.raises(ValueError):
+            MQ.parse_nm(bad)
+
+
+class TestNmKeepMask:
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (1, 2)])
+    def test_exact_survivors_per_group(self, n, m):
+        score = jnp.abs(jax.random.normal(jax.random.PRNGKey(n * m), (8 * m, 16)))
+        keep = MQ.nm_keep_mask(score, n, m)
+        per_group = np.asarray(keep).reshape(-1, m, 16).sum(axis=1)
+        np.testing.assert_array_equal(per_group, n)
+
+    def test_keeps_the_top_scores(self):
+        score = jnp.asarray([[4.0], [1.0], [3.0], [2.0],
+                             [0.5], [9.0], [0.1], [8.0]])
+        keep = np.asarray(MQ.nm_keep_mask(score, 2, 4))[:, 0]
+        np.testing.assert_array_equal(
+            keep, [True, False, True, False, False, True, False, True])
+
+    def test_tail_remainder_stays_dense(self):
+        score = jnp.ones((10, 3))          # 10 % 4 == 2: last two rows dense
+        keep = np.asarray(MQ.nm_keep_mask(score, 2, 4))
+        assert keep[8:].all()
+        np.testing.assert_array_equal(keep[:8].reshape(2, 4, 3).sum(axis=1), 2)
+
+    def test_stable_ties_prefer_lower_channel(self):
+        keep = np.asarray(MQ.nm_keep_mask(jnp.ones((4, 2)), 2, 4))
+        np.testing.assert_array_equal(keep[:, 0], [True, True, False, False])
+
+    def test_batched_leading_dims(self):
+        score = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (3, 8, 4)))
+        keep = MQ.nm_keep_mask(score, 2, 4)
+        assert keep.shape == (3, 8, 4)
+        np.testing.assert_array_equal(
+            np.asarray(keep).reshape(3, 2, 4, 4).sum(axis=2), 2)
+
+
+class TestPackMask:
+    def test_roundtrip(self):
+        mask = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (3, 20, 6))
+        packed = packing.pack_mask(mask)
+        assert packed.dtype == jnp.uint8 and packed.shape == (3, 3, 6)
+        got = packing.unpack_mask(packed, count=20)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(mask).astype(np.uint8))
+
+    def test_pad_bits_zero_so_popcount_is_survivor_count(self):
+        mask = jnp.ones((20, 4), bool)     # 20 rows -> 3 bytes, 4 pad bits
+        packed = packing.pack_mask(mask)
+        assert int(np.unpackbits(np.asarray(packed)).sum()) == 20 * 4
+
+
+class TestSparsifyTree:
+    @pytest.fixture(scope="class")
+    def prepared(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        w = jax.random.normal(k1, (32, 16)) * 0.1
+        cmax = jnp.abs(jax.random.normal(k2, (32,))) + 0.1
+        return {"wq": ql.prepare_int8({"w": w}, ql.W8A8_INT8, cmax=cmax)}
+
+    def test_prepared_node_pruned_and_rescaled(self, prepared):
+        sp = MQ.sparsify_tree(prepared, MQ.SparsityPlan(nm=(2, 4)))["wq"]
+        mask = np.asarray(packing.unpack_mask(sp["mask"], count=32)).astype(bool)
+        np.testing.assert_array_equal(mask.reshape(8, 4, 16).sum(axis=1), 2)
+        qw = np.asarray(sp["qw"])
+        assert (qw[~mask] == 0).all()
+        # scale refit: sw spans exactly the surviving b-folded weights
+        wb = np.asarray(prepared["wq"]["qw"], np.float32) * np.asarray(
+            prepared["wq"]["sw"])
+        want_sw = np.maximum(np.abs(wb * mask).max(axis=0), float(Q.EPS)) / 127.0
+        np.testing.assert_allclose(np.asarray(sp["sw"]), want_sw, rtol=1e-6)
+        # survivors requantize on the refit grid
+        np.testing.assert_array_equal(
+            qw, np.clip(np.round(wb * mask / want_sw), -127, 127))
+
+    def test_idempotent(self, prepared):
+        plan = MQ.SparsityPlan(nm=(2, 4))
+        once = MQ.sparsify_tree(prepared, plan)
+        twice = MQ.sparsify_tree(once, plan)
+        for k in ("qw", "sw", "mask"):
+            np.testing.assert_array_equal(np.asarray(once["wq"][k]),
+                                          np.asarray(twice["wq"][k]))
+
+    def test_fp_node_pruned(self):
+        tree = {"up": {"w": jax.random.normal(jax.random.PRNGKey(2), (16, 8))}}
+        sp = MQ.sparsify_tree(tree, MQ.SparsityPlan(nm=(2, 4)))["up"]
+        mask = np.asarray(packing.unpack_mask(sp["mask"], count=16)).astype(bool)
+        w = np.asarray(sp["w"])
+        assert (w[~mask] == 0).all() and (w[mask] != 0).all()
+        np.testing.assert_array_equal(
+            w[mask], np.asarray(tree["up"]["w"])[mask])
+
+    def test_plan_layers_gate_which_leaves_prune(self, prepared):
+        tree = {"wq": prepared["wq"], "wk": dict(prepared["wq"])}
+        plan = MQ.SparsityPlan(nm=(2, 4), layers=("wk",))
+        sp = MQ.sparsify_tree(tree, plan)
+        assert "mask" not in sp["wq"] and "mask" in sp["wk"]
+
+    def test_non_quantizable_leaves_untouched(self):
+        tree = {"ln": {"w": jnp.ones((8, 4))}, "emb": jnp.ones((8, 4))}
+        sp = MQ.sparsify_tree(tree, MQ.SparsityPlan(nm=(2, 4)))
+        assert "mask" not in sp["ln"]
+        np.testing.assert_array_equal(np.asarray(sp["ln"]["w"]), 1.0)
+
+    def test_sparsity_summary_reports_kept_fraction(self, prepared):
+        sp = MQ.sparsify_tree(prepared, MQ.SparsityPlan(nm=(2, 4)))
+        assert MQ.sparsity_summary(sp) == {"wq": 0.5}
+
+
+class TestQgemmW8A8Sparse:
+    """N:M block-sparse int8 GEMM (DESIGN.md §3.12) vs the ref.py oracle,
+    interpret mode on CPU.
+
+    The ops-level contract: ``qw`` already carries zeros at pruned positions
+    (``sparsify_tree`` guarantees this); ``mask`` only steers which K-blocks
+    the kernel may skip. Tests therefore always pass ``qw * mask``.
+    """
+
+    @staticmethod
+    def _operands(M, K, N, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        qx = jax.random.randint(k1, (M, K), -127, 128, jnp.int8)
+        qw = jax.random.randint(k2, (K, N), -127, 128, jnp.int8)
+        a = jax.random.uniform(k3, (M, 1), jnp.float32, 0.01, 1.0)
+        sw = jax.random.uniform(k3, (N,), jnp.float32, 0.01, 1.0)
+        return qx, qw, a, sw
+
+    @pytest.mark.parametrize("nm", [(2, 4), (4, 8)])
+    @pytest.mark.parametrize("M,K,N", [(128, 256, 128), (100, 300, 70)])
+    def test_nm_masks_match_oracle(self, nm, M, K, N):
+        qx, qw, a, sw = self._operands(M, K, N, M + K + N + nm[1])
+        score = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (K, N)))
+        mask = MQ.nm_keep_mask(score, *nm)
+        qwm = jnp.where(mask, qw, 0)
+        got = ops.qgemm_w8a8_sparse(qx, qwm, a, sw, mask)
+        want = ref.qgemm_w8a8_sparse_ref(qx, qw, a, sw, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_all_ones_mask_bitwise_vs_dense_op(self):
+        """Occupancy-full inputs route through the dense kernel (the wrapper's
+        runtime cond) and must be bitwise identical to qgemm_w8a8."""
+        qx, qw, a, sw = self._operands(128, 512, 128, 0)
+        mask = jnp.ones((512, 128), bool)
+        got = ops.qgemm_w8a8_sparse(qx, qw, a, sw, mask)
+        want = ops.qgemm_w8a8(qx, qw, a, sw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_full_occupancy_sparse_kernel_bitwise_vs_dense_kernel(self):
+        """The sparse kernel itself (not the wrapper's dense fallback) with an
+        all-positive occupancy table runs the exact dense step sequence."""
+        from repro.kernels import qgemm as qg
+        M, K, N, b = 128, 256, 128, 128
+        qx, qw, a, sw = self._operands(M, K, N, 1)
+        sw2 = sw.reshape(1, -1)
+        occ = jnp.full((K // b, N // b), b * b, jnp.int32)
+        got = qg.qgemm_w8a8_sparse_pallas(qx, qw, a, sw2, occ,
+                                          bm=b, bn=b, bk=b, interpret=True)
+        want = qg.qgemm_w8a8_pallas(qx, qw, a, sw2, bm=b, bn=b, bk=b,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("zero_frac", [0.25, 0.5, 1.0])
+    def test_zero_kblocks_skipped_exact(self, zero_frac):
+        """Channel-block sparsity: whole (bk, bn) weight blocks zeroed. The
+        kernel skips their dots; the output must still match the oracle
+        exactly — including the all-zero column case (zero_frac=1)."""
+        M, K, N, bk, bn = 64, 512, 128, 128, 128
+        qx, qw, a, sw = self._operands(M, K, N, int(zero_frac * 100))
+        n_k = K // bk
+        kill = jnp.arange(n_k) < int(round(zero_frac * n_k))
+        mask = jnp.repeat(~kill, bk)[:, None] & jnp.ones((K, N), bool)
+        qwm = jnp.where(mask, qw, 0)
+        got = ops.qgemm_w8a8_sparse(qx, qwm, a, sw, mask, bm=64, bn=bn, bk=bk)
+        want = ref.qgemm_w8a8_sparse_ref(qx, qw, a, sw, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_ref_exec_mode_matches_pallas(self, monkeypatch):
+        qx, qw, a, sw = self._operands(64, 256, 64, 7)
+        mask = MQ.nm_keep_mask(jnp.abs(qw.astype(jnp.float32)) + 1e-3, 2, 4)
+        qwm = jnp.where(mask, qw, 0)
+        got_pl = ops.qgemm_w8a8_sparse(qx, qwm, a, sw, mask)
+        monkeypatch.setenv("REPRO_KERNEL_EXEC", "ref")
+        got_ref = ops.qgemm_w8a8_sparse(qx, qwm, a, sw, mask)
+        np.testing.assert_allclose(np.asarray(got_ref), np.asarray(got_pl),
+                                   rtol=1e-5)
+
+
+class TestMakeSparsityPlan:
+    @pytest.fixture(scope="class")
+    def smoke(self):
+        cfg = dataclasses.replace(get("starcoder2-7b", smoke=True),
+                                  dtype="float32")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+        return cfg, params, [{"tokens": toks}]
+
+    def test_threshold_one_prunes_every_eligible_leaf(self, smoke):
+        cfg, params, batches = smoke
+        plan = MQ.make_sparsity_plan(cfg, params, batches, threshold=1.0)
+        assert plan.nm == (2, 4)
+        assert any(p.endswith("attn/wq") for p in plan.layers)
+        assert any(p.endswith("mlp/up") for p in plan.layers)
+        assert all(0.0 <= f <= 1.0 for f in plan.fractions.values())
+        assert set(plan.layers) <= set(plan.fractions)
+
+    def test_negative_threshold_prunes_nothing(self, smoke):
+        cfg, params, batches = smoke
+        plan = MQ.make_sparsity_plan(cfg, params, batches, threshold=-1.0)
+        assert plan.layers == ()
+        sp = MQ.sparsify_tree(MQ.quantize_tree(params, ql.W8A8_INT8), plan)
+        assert MQ.sparsity_summary(sp) == {}
+
+
+class TestQuantizedBytes:
+    def _tree(self):
+        score = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (8, 4))) + 0.1
+        return {
+            "wq": {
+                "qw": jnp.ones((8, 4), jnp.int8),
+                "sw": jnp.ones((4,), jnp.float32),
+                "bcol": jnp.ones((8,), jnp.float32),
+                "qalpha": jnp.float32(0.15),
+                "mask": packing.pack_mask(MQ.nm_keep_mask(score, 2, 4)),
+            },
+            "kv": {"k_scale": jnp.ones((2, 1), jnp.float32),
+                   "v_scale": jnp.ones((2, 1), jnp.float32)},
+        }
+
+    def test_dense_accounting_counts_every_leaf(self):
+        # qw 32 + sw 16 + bcol 32 + qalpha 4 + mask 4 + k/v scales 16 = 104
+        assert MQ.quantized_bytes(self._tree()) == 104
+
+    def test_deploy_sparse_costs_survivors_plus_mask(self):
+        # 2:4 survivors: 16 int8 codes replace the 32-byte dense qw
+        assert MQ.quantized_bytes(self._tree(), deploy_sparse=True) == 88
+
+    def test_unmasked_tree_identical_both_ways(self):
+        tree = {"wq": {"qw": jnp.ones((8, 4), jnp.int8),
+                       "sw": jnp.ones((4,), jnp.float32)}}
+        assert (MQ.quantized_bytes(tree)
+                == MQ.quantized_bytes(tree, deploy_sparse=True) == 48)
+
+
+class TestSparseServeParity:
+    """Sparse trees serve token-exact across execution paths, and the engine's
+    config-driven sparsification equals external sparsify_tree."""
+
+    @pytest.fixture(scope="class")
+    def served(self):
+        cfg = get("starcoder2-7b", smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        qparams = MQ.quantize_tree(params, ql.W8A8_INT8)
+        sq = MQ.sparsify_tree(qparams, MQ.SparsityPlan(nm=(2, 4)))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab, size=6).astype(np.int32)
+                   for _ in range(2)]
+        return cfg, qparams, sq, prompts
+
+    @staticmethod
+    def _serve(cfg, p, prompts, path, quant, sparsity="none"):
+        config = EngineConfig(batch_size=2, max_len=24, eos_id=-1, path=path,
+                              kv_cache="int8", sparsity=sparsity)
+        eng = ServeEngine(cfg, p, config=config, quant=quant)
+        eng.submit([x.copy() for x in prompts], max_new=4)
+        return [list(map(int, r.out))
+                for r in sorted(eng.run(), key=lambda r: r.rid)]
+
+    def test_fused_matches_fake_quant_twin(self, served):
+        cfg, _, sq, prompts = served
+        fused = self._serve(cfg, sq, prompts, "fused-int8", ql.W8A8_INT8)
+        # uncalibrated tree: b = 1, so the fused path's activation grid is
+        # plain per-token — the fake twin must quantize the same way
+        fake_cfg = dataclasses.replace(ql.W8A8_CROSSQUANT,
+                                       act_quant="per_token", static_c=True,
+                                       w_prequantized=True)
+        fake = self._serve(cfg, MQ.dequantize_tree(sq, ql.W8A8_INT8), prompts,
+                           "fake", fake_cfg)
+        assert fused == fake
+
+    def test_engine_config_sparsity_equals_external_sparsify(self, served):
+        cfg, qparams, sq, prompts = served
+        internal = self._serve(cfg, qparams, prompts, "fused-int8",
+                               ql.W8A8_INT8, sparsity="2:4")
+        external = self._serve(cfg, sq, prompts, "fused-int8", ql.W8A8_INT8)
+        assert internal == external
+
+    def test_dequant_fp_serves_pruned_tree(self, served):
+        cfg, _, sq, prompts = served
+        out = self._serve(cfg, sq, prompts, "dequant-fp", ql.W8A8_INT8)
+        assert all(len(t) == 4 for t in out)
