@@ -39,6 +39,12 @@ What gates, against what:
   seeded-random router's at steady load, steady runs must not reject, and the
   overload run must (``serving_bench_server`` rows, DESIGN.md §3.11).
   Baselines without server rows predate the schema bump.
+* Config-zoo invariant (new snapshot only — same-run scheduler pair): the
+  mamba2 ``serving_bench_zoo`` rows must hold continuous ≥ grouped tok/s —
+  the §3.13 state-page scheduler replaced exact-length grouping for SSM
+  families and must not cost throughput doing it. The granite-moe
+  (``@ep2``) rows are informational, like the ``@tpN`` twins. Baselines
+  without zoo rows predate the schema bump.
 * Block-sparse kernel invariant (new snapshot only — same-run timing pair):
   on every ``qgemm_sparse`` row with occupancy < 1, the §3.12 sparse kernel's
   wall-clock must not exceed the dense kernel's — skipping all-zero K-blocks
@@ -323,6 +329,52 @@ def server_invariant(rows: dict) -> tuple[list, list]:
     return report, failures
 
 
+def zoo_rows(snapshot: dict) -> dict:
+    """``(config, mode) -> {"tok_s", "occupancy"}`` from the config-zoo
+    section (``serving_bench_zoo`` lines — DESIGN.md §3.13). Empty for
+    pre-zoo snapshots (schema bump, like ``spec_rows``)."""
+    rows = {}
+    lines = snapshot.get("modules", {}).get("serving_bench", {}).get("lines", [])
+    for line in lines:
+        parts = line.split(",")
+        if len(parts) < 5 or parts[0] != "serving_bench_zoo" or parts[1] == "config":
+            continue
+        rows[(parts[1], parts[2])] = {
+            "tok_s": float(parts[3]),
+            "occupancy": float(parts[4]),
+        }
+    return rows
+
+
+def zoo_invariant(rows: dict) -> tuple[list, list]:
+    """Same-snapshot config-zoo gate (no baseline needed — the two schedulers'
+    interleaved passes sample the same machine): per non-meshed zoo config with
+    both scheduler rows, continuous tok/s must be ≥ grouped — the slot-table
+    scheduler with state pages and masked-dt padded prefill replaced the
+    exact-length grouping that was the only way to serve SSM families, and it
+    must not cost throughput against what it replaced. MoE/``@ep2`` rows (no
+    grouped twin) report informationally."""
+    report, failures = [], []
+    for config in sorted({c for c, _ in rows}):
+        g = rows.get((config, "grouped"))
+        c = rows.get((config, "continuous"))
+        if not g or not c:
+            r = c or g
+            if r:
+                mode = "continuous" if c else "grouped"
+                report.append(f"  zoo {config}/{mode}: {r['tok_s']:.1f} tok/s "
+                              f"(occupancy {r['occupancy']:.2f}, informational)")
+            continue
+        line = (f"  zoo {config}: continuous {c['tok_s']:.1f} vs "
+                f"grouped {g['tok_s']:.1f} tok/s "
+                f"(occupancy {c['occupancy']:.2f} vs {g['occupancy']:.2f})")
+        if c["tok_s"] < g["tok_s"]:
+            line += "  REGRESSION (continuous < grouped)"
+            failures.append(line)
+        report.append(line)
+    return report, failures
+
+
 def sparse_kernel_rows(snapshot: dict) -> dict:
     """``occupancy -> {"dense_us", "sparse_us"}`` from the block-sparse kernel
     section (``qgemm_sparse`` lines in the ``qgemm_bench`` module — DESIGN.md
@@ -584,6 +636,11 @@ def main() -> None:
     print("async-server invariant (affinity >= random hit rate, overload rejects):")
     print("\n".join(sv_report) if sv_report else "  (no server rows)")
     all_failures += sv_failures
+
+    z_report, z_failures = zoo_invariant(zoo_rows(new_snapshot))
+    print("config-zoo invariant (SSM continuous >= grouped tok/s):")
+    print("\n".join(z_report) if z_report else "  (no zoo rows)")
+    all_failures += z_failures
 
     sk_report, sk_failures = sparse_kernel_invariant(
         sparse_kernel_rows(new_snapshot))

@@ -77,12 +77,24 @@ bounded admission queue rejects the excess past its deadline instead of
 queueing it. The affinity ≥ random hit-rate comparison gates snapshot-locally
 in ``regress.py``; TTFT/TPOT percentiles are informational on CPU hosts.
 
+A sixth section serves the **config zoo** (DESIGN.md §3.13): mamba2 — an SSM
+family the pre-§3.13 engine could only serve through exact-length grouping —
+through both schedulers (the continuous ≥ grouped tok/s comparison gates
+snapshot-locally in ``regress.py``: slot-table admission with masked-dt padded
+prefill must not cost throughput against the grouped baseline it replaced,
+and the occupancy column shows the win it exists for), and granite-moe
+fused-int8 single-device vs expert-parallel on a ``(data, 1, expert=2)`` mesh
+(informational wall-clock, like the ``@tp2`` rows: host-mesh collective
+emulation dominates; the row measures *that* EP serves, parity is pinned by
+tests/test_sharded_serving.py).
+
 CSV (after the header rows):
 ``serving_bench,<path>[@tpN],<scheduler>,<tok_s>,<occupancy>,<refills_mid_decode>``
 ``serving_bench_prefix,<path>,<layout>,<tok_s>,<hit_rate>,<prefill_tokens>,<prefill_saved>,<peak_pages>,<capacity_x>``
 ``serving_bench_spec,<path>,<spec|nospec>,<tok_s>,<accept_rate>,<tokens_per_step>``
 ``serving_bench_latency,<path>,<chunked|unchunked>,<steady|burst>,<p50_step_ms>,<p95_step_ms>,<ttft_ms>``
 ``serving_bench_server,<path>,<router>,<steady|overload>,<ttft_p50_ms>,<ttft_p95_ms>,<tpot_p50_ms>,<tpot_p95_ms>,<reject_rate>,<hit_rate>``
+``serving_bench_zoo,<config>,<mode>,<tok_s>,<occupancy>,<refills_mid_decode>``
 """
 from __future__ import annotations
 
@@ -517,6 +529,79 @@ def _server_lines(cfg, params, steps):
     return lines
 
 
+def _zoo_lines(quick: bool, steps):
+    """The config-zoo section (DESIGN.md §3.13): serving families the engine
+    learned through the layer-polymorphic ``StateSpec`` registry.
+
+    mamba2 (SSM: recurrent-state + conv-buffer pages, no KV) serves the main
+    mixed-length workload through both schedulers — the continuous ≥ grouped
+    tok/s comparison gates snapshot-locally in ``regress.py`` (slot-table
+    admission with masked-dt padded prefill must not cost throughput against
+    the exact-length grouping it replaced, while the occupancy column shows
+    the structural win). Passes interleave like the main section's: the gate
+    is a same-snapshot ratio.
+
+    granite-moe serves fused-int8 through the continuous scheduler
+    single-device and — when the host exposes ≥ 2 devices — expert-parallel on
+    a ``(n_dev/2, 1, expert=2)`` mesh (``@ep2``). Like the ``@tp2`` rows these
+    are informational wall-clock (host-mesh collective emulation dominates);
+    bitwise parity vs single-device is pinned by tests/test_sharded_serving.py.
+    Skipped in quick mode with the other quantized variants (quantize_tree
+    dominates the quick-CI budget); the gated mamba2 pair runs in both modes.
+    """
+    from repro.configs import get
+    from repro.core import qlinear as ql
+    from repro.models import model as M
+    from repro.models.quantize import quantize_tree
+
+    lines = ["serving_bench_zoo,config,mode,tok_s,occupancy,refills_mid_decode"]
+
+    zcfg = get("mamba2-130m", smoke=True)
+    zparams = M.init_params(jax.random.PRNGKey(0), zcfg)
+    prompts, max_new = _workload(zcfg, 10)
+    passes = {
+        scheduler: _prep(zcfg, zparams, prompts, max_new, quant=ql.FP,
+                         path=None, kv_cache="fp", scheduler=scheduler,
+                         steps=steps, key=("zoo-mamba2", "", "dense"))
+        for scheduler in ("grouped", "continuous")}
+    best = dict.fromkeys(passes, 0.0)
+    engs = {}
+    for _ in range(TIMED_PASSES):
+        for scheduler, one_pass in passes.items():
+            tok_s, engs[scheduler] = one_pass()
+            best[scheduler] = max(best[scheduler], tok_s)
+    for scheduler, eng in engs.items():
+        lines.append(f"serving_bench_zoo,mamba2,{scheduler},"
+                     f"{best[scheduler]:.1f},{eng.occupancy():.2f},"
+                     f"{eng.counters['mid_decode_admissions']}")
+
+    if quick:
+        return lines
+
+    mcfg = get("granite-moe-3b-a800m", smoke=True)
+    mparams = quantize_tree(M.init_params(jax.random.PRNGKey(0), mcfg),
+                            ql.W8A8_INT8)
+    mprompts, mmax_new = _workload(mcfg, 10)
+    mmeshes = [("", None)]
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_debug_mesh
+        mmeshes.append(("@ep2",
+                        make_debug_mesh(len(jax.devices()) // 2, 1, 2)))
+    for mesh_tag, mesh in mmeshes:
+        one_pass = _prep(mcfg, mparams, mprompts, mmax_new,
+                         quant=ql.W8A8_INT8, path="fused-int8", kv_cache="fp",
+                         scheduler="continuous", mesh=mesh, steps=steps,
+                         key=("zoo-granite-moe", mesh_tag, "dense"))
+        best_m, eng = 0.0, None
+        for _ in range(TIMED_PASSES):
+            tok_s, eng = one_pass()
+            best_m = max(best_m, tok_s)
+        lines.append(f"serving_bench_zoo,granite-moe{mesh_tag},continuous,"
+                     f"{best_m:.1f},{eng.occupancy():.2f},"
+                     f"{eng.counters['mid_decode_admissions']}")
+    return lines
+
+
 def run(quick: bool = False):
     # Off-TPU, serve through the pure-jnp reference execution of the paged
     # kernels (kernels/ops.py _exec_mode): interpret emulation is a
@@ -620,4 +705,9 @@ def _run(quick: bool = False):
     # hit-rate comparison (affinity ≥ random) gates snapshot-locally. fp
     # only — routing moves prefix reuse, which is layout, not quantization.
     lines += _server_lines(cfg, params, steps)
+
+    # config zoo (§3.13): mamba2 through both schedulers (continuous ≥ grouped
+    # gates snapshot-locally) and granite-moe fused-int8 single-device vs
+    # expert-parallel — the zoo configs' own step caches key under "zoo-*".
+    lines += _zoo_lines(quick, steps)
     return lines

@@ -12,7 +12,11 @@ tokens/sec plus slot occupancy. ``--quant-kernel-stats`` replays the served
 traffic (prompt + generated tokens) through the model eagerly and reports the
 paper's per-layer quantization-kernel proportion (core/kernel_analysis.py) for
 per-token quantization vs CrossQuant — the §4.1 statistic, measured on what the
-engine actually served rather than a calibration set.
+engine actually served rather than a calibration set. For MoE configs
+(``--arch granite-moe-3b-a800m`` / ``llama4-scout-17b-a16e``) the report adds
+per-expert rows: each expert quantizes its own routed-token block of the
+stacked (E, C, d) dispatch buffer, so the kernel proportion is a per-expert
+property (padding rows excluded).
 
 ``--cache-layout paged`` serves through the paged KV pool with radix prefix
 reuse (DESIGN.md §3.8); with ``--shared-prefix N`` every prompt carries an
@@ -147,7 +151,29 @@ class _KernelStatsObserver:
 
     def observe(self, name, x):
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        rec = self.stats.setdefault(name, {"pt": [], "cq": [], "chunks": []})
+        rec = self.stats.setdefault(name, {"pt": [], "cq": [], "chunks": [],
+                                           "experts": {}})
+        if x.ndim == 3 and "/moe/" in name:
+            # Stacked (E, C, d) expert dispatch buffer (moe_apply serves the
+            # observer replay with one global dispatch): row e of the leading
+            # axis is expert e's routed tokens, zero rows are capacity padding.
+            # The §4.1 proportion is computed per expert over its *routed* rows
+            # only — each expert quantizes its own (C, d) activation block, so
+            # the kernel statistic is a per-expert property (DESIGN.md §4).
+            for e in range(x.shape[0]):
+                rows = jnp.asarray(x[e], jnp.float32)
+                rows = rows[jnp.any(rows != 0.0, axis=-1)]
+                er = rec["experts"].setdefault(e, {"pt": [], "cq": [], "n": 0})
+                er["n"] += int(rows.shape[0])
+                if rows.shape[0]:
+                    er["pt"].append(
+                        float(KA.per_token_kernel_fraction(rows, self.bits)))
+                    er["cq"].append(
+                        float(KA.crossquant_kernel_fraction(rows, self.bits,
+                                                            self.alpha)))
+            x2 = x2[jnp.any(x2 != 0.0, axis=-1)]   # layer row: routed rows only
+            if x2.shape[0] == 0:
+                return
         rec["pt"].append(float(KA.per_token_kernel_fraction(x2, self.bits)))
         rec["cq"].append(float(KA.crossquant_kernel_fraction(x2, self.bits,
                                                              self.alpha)))
@@ -198,6 +224,23 @@ def report_kernel_stats(cfg, params, quant, done, chunk: int = 0):
         cq = float(np.mean(rec["cq"]))
         shrink = (1 - cq / pt) if pt > 0 else 0.0
         print(f"  {name:<28} {pt:>9.2%} {cq:>10.2%} {shrink:>6.1%}")
+    moe_layers = {n: r for n, r in obs.stats.items() if r["experts"]}
+    if moe_layers:
+        print("per-expert crossquant proportion (routed tokens only; the "
+              "kernel statistic is per-expert for MoE layers, DESIGN.md §4):")
+        print(f"  {'layer[expert]':<28} {'tokens':>6} {'per-token':>10} "
+              f"{'crossquant':>11} {'shrink':>7}")
+        for name, rec in sorted(moe_layers.items()):
+            for e, er in sorted(rec["experts"].items()):
+                if not er["pt"]:
+                    print(f"  {name + f'[e{e}]':<28} {er['n']:>6d} "
+                          f"{'-':>10} {'-':>11} {'-':>7}")
+                    continue
+                pt = float(np.mean(er["pt"]))
+                cq = float(np.mean(er["cq"]))
+                shrink = (1 - cq / pt) if pt > 0 else 0.0
+                print(f"  {name + f'[e{e}]':<28} {er['n']:>6d} "
+                      f"{pt:>9.2%} {cq:>10.2%} {shrink:>6.1%}")
     if chunk:
         print(f"per-chunk crossquant proportion (token_budget={chunk} "
               f"admission slices, dynamic c_j per chunk):")
@@ -232,10 +275,11 @@ def main() -> None:
     ap.add_argument("--quant-kernel-stats", action="store_true",
                     help="replay served traffic and report per-layer "
                          "quantization-kernel proportion (paper §4.1)")
-    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
-                    help="serve TP-sharded on a (data, model) host mesh "
-                         "(DESIGN.md §3.7), e.g. --mesh 4,2; needs XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=data*model")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL[,EXPERT]",
+                    help="serve sharded on a (data, model[, expert]) host mesh "
+                         "(TP §3.7, expert-parallel MoE §3.13), e.g. "
+                         "--mesh 4,2 or --mesh 2,2,2; needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=<product>")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=True)

@@ -149,7 +149,12 @@ def prepare_int8(params: dict, cfg: QuantConfig, cmax: Optional[jax.Array] = Non
         cm = jnp.ones(w.shape[-2], w.dtype)
     b = jnp.maximum(cm, Q.EPS) ** (1.0 - alpha_eff)
     # Stacked weights (L/E leading dims): bcol must carry the same leading dims so
-    # scan-over-layers can slice it per layer.
+    # scan-over-layers can slice it per layer. A calibrated table arrives as
+    # (lead..., d_in) without the expert-stack dim — the dispatch buffer's column
+    # stat is shared across experts — so align it by inserting singleton axes
+    # before d_in ((L, d_in) -> (L, 1, d_in) against (L, E, d_in, d_out)).
+    while b.ndim < w.ndim - 1:
+        b = b[..., None, :]
     b = jnp.broadcast_to(b, w.shape[:-1])
     wb = w * b[..., :, None]
     sw = jnp.maximum(jnp.max(jnp.abs(wb), axis=-2, keepdims=True), Q.EPS) / Q.qmax(cfg.w_bits)
@@ -169,6 +174,8 @@ def prepare_int4(params: dict, cfg: QuantConfig, cmax: Optional[jax.Array] = Non
     if cm is None:
         cm = jnp.ones(w.shape[-2], w.dtype)
     b = jnp.maximum(cm, Q.EPS) ** (1.0 - alpha_eff)
+    while b.ndim < w.ndim - 1:          # see prepare_int8: expert-stacked weights
+        b = b[..., None, :]
     b = jnp.broadcast_to(b, w.shape[:-1])
     wb = w * b[..., :, None]
     *lead, d_in, d_out = wb.shape

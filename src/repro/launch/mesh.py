@@ -26,31 +26,41 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev_array, axes)
 
 
-def make_debug_mesh(data: int = 1, model: int = 1):
-    """Small (data, model) mesh for tests and host-mesh sharded serving (§3.7).
+def make_debug_mesh(data: int = 1, model: int = 1, expert: int = 1):
+    """Small (data, model[, expert]) mesh for tests and host-mesh sharded serving
+    (§3.7). ``expert > 1`` appends a dedicated expert-parallel axis (§3.13) —
+    stacked MoE expert trees shard on it, orthogonal to the model axis.
 
     Raises — with the same ``--xla_force_host_platform_device_count`` hint as
-    :func:`make_production_mesh` — when the host is short of ``data*model``
+    :func:`make_production_mesh` — when the host is short of ``data*model*expert``
     devices, instead of dying in a cryptic reshape (or, for a short prefix that
     happens to reshape, silently building a wrong-shaped mesh)."""
     import numpy as np
-    n = data * model
+    n = data * model * expert
     devices = jax.devices()
     if len(devices) < n:
         raise RuntimeError(
-            f"need {n} devices for a (data={data}, model={model}) debug mesh, have "
+            f"need {n} devices for a (data={data}, model={model}, expert={expert}) "
+            f"debug mesh, have "
             f"{len(devices)} — set XLA_FLAGS=--xla_force_host_platform_device_count="
             f"{n} before any jax import (see launch/dryrun.py), or shrink the mesh")
+    if expert > 1:
+        return jax.sharding.Mesh(
+            np.asarray(devices[:n]).reshape(data, model, expert),
+            ("data", "model", "expert"))
     return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(data, model),
                              ("data", "model"))
 
 
 def parse_mesh_arg(spec: str):
-    """``"data,model"`` CLI string (e.g. ``"4,2"``) → debug mesh. Shared by the
-    serving launchers' ``--mesh`` flags."""
+    """``"data,model"`` or ``"data,model,expert"`` CLI string (e.g. ``"4,2"`` or
+    ``"2,2,2"``) → debug mesh. Shared by the serving launchers' ``--mesh`` flags."""
     try:
-        data, model = (int(x) for x in spec.split(","))
+        dims = [int(x) for x in spec.split(",")]
+        if len(dims) not in (2, 3):
+            raise ValueError(spec)
     except ValueError:
         raise SystemExit(
-            f"--mesh expects DATA,MODEL (e.g. --mesh 4,2), got {spec!r}")
-    return make_debug_mesh(data, model)
+            f"--mesh expects DATA,MODEL[,EXPERT] (e.g. --mesh 4,2 or "
+            f"--mesh 2,2,2), got {spec!r}")
+    return make_debug_mesh(*dims)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import qlinear as ql
-from repro.models import frontends, moe as moe_lib, ssm as ssm_lib
+from repro.models import frontends, moe as moe_lib, ssm as ssm_lib, state as state_lib
 from repro.sharding import hints
 from repro.models.layers import (
     QuantContext, attention_apply, init_attention, init_mlp, init_norm, mlp_apply,
@@ -119,12 +119,13 @@ def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
 
 def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
                     cache=None, cur_len=None, decode=False, page_table=None,
-                    prefix_len=None, q_len=None, chunk=None):
+                    prefix_len=None, q_len=None, chunk=None, state_table=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
         h, new_cache = ssm_lib.mamba_apply(p["ssm"], norm_apply(p["norm"], x, cfg), cfg,
-                                           ctx.sub("ssm"), cache=cache, decode=decode)
+                                           ctx.sub("ssm"), cache=cache, decode=decode,
+                                           cur_len=cur_len, state_table=state_table)
         return x + h, new_cache, aux
     local = kind == "attn_local"
     h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
@@ -141,9 +142,10 @@ def _apply_sublayer(kind: str, p: dict, x, cfg: ModelConfig, ctx: QuantContext, 
 
 
 def _shared_block(p: dict, x, cfg: ModelConfig, ctx: QuantContext, *,
-                  cache=None, cur_len=None):
+                  cache=None, cur_len=None, page_table=None, prefix_len=None):
     h, new_cache = attention_apply(p["attn"], norm_apply(p["norm1"], x, cfg), cfg,
-                                   ctx.sub("shared_attn"), cache=cache, cur_len=cur_len)
+                                   ctx.sub("shared_attn"), cache=cache, cur_len=cur_len,
+                                   page_table=page_table, prefix_len=prefix_len)
     x = x + h
     x = x + mlp_apply(p["mlp"], norm_apply(p["norm2"], x, cfg), cfg, ctx.sub("shared_mlp"))
     return x, new_cache
@@ -164,84 +166,62 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=jnp.bfloat
     refill individual slots without touching the others
     (serving/engine.py::_slot_scatter does the per-slot cache writes).
 
-    ``layout="paged"`` (DESIGN.md §3.8): instead of a dense ``(B, max_len)`` row
-    per slot, every layer holds one physical page pool
-    ``(n_pages, page_size, kv_heads, head_dim)`` and slots address it through a
-    top-level ``page_table`` of shape ``(batch_size, max_len // page_size)``
-    int32 — entry value ``n_pages`` is the *invalid* sentinel (reads clamp, the
-    flat-index scatter drops). ``n_pages`` defaults to the dense-equivalent
-    capacity ``batch_size * max_len / page_size``; serving engines pass less and
-    rely on prefix sharing. Attention-only families — the SSM recurrence has no
-    sequence axis to page.
+    ``layout="paged"`` (DESIGN.md §3.8/§3.13): instead of a dense
+    ``(B, max_len)`` row per slot, every layer holds a physical pool built by
+    its :mod:`repro.models.state` StateSpec and slots address it through
+    top-level routing tables — ``page_table`` (batch_size, max_len//page_size)
+    int32 for token-paged attention KV, ``state_table`` (batch_size,) int32 for
+    fixed-size SSM state checkpoints (recurrent-state slab + pre-conv window,
+    one page per slot regardless of length). Entry value ``n_pages`` is the
+    *invalid* sentinel in both tables (reads clamp, the scatter drops).
+    ``n_pages`` defaults to the dense-equivalent capacity
+    ``batch_size * max_len / page_size``; serving engines pass less and rely
+    on prefix sharing. Both table kinds draw ids from the same ref-counted
+    pool (serving/paging.py), so a hybrid slot's KV pages and state page
+    retire together.
 
     ``kv_int8=True`` stores attention K/V as int8 codes plus per-token f32 scales
     (layers.kv_quantize) — ~2×/4× less decode HBM traffic vs bf16/f32 caches
     (DESIGN.md §3.3). SSM recurrence state always stays f32.
     """
     spec = block_spec(cfg)
+    has_kv, has_state = state_lib.family_flags(spec)
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape), tree)
     if layout == "paged":
-        if cfg.family in ("ssm", "hybrid"):
-            raise ValueError(f"paged KV cache needs attention-only caches; "
-                             f"family {cfg.family!r} carries SSM state")
         if max_len % page_size:
             raise ValueError(f"page_size {page_size} must divide "
                              f"max_len {max_len}")
         n_pages = n_pages or batch_size * (max_len // page_size)
 
         def one_paged(kind):
-            pool = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
-            if kv_int8:
-                return {
-                    "k_pages": jnp.zeros(pool, jnp.int8),
-                    "v_pages": jnp.zeros(pool, jnp.int8),
-                    "k_scale_pages": jnp.zeros(pool[:3] + (1,), jnp.float32),
-                    "v_scale_pages": jnp.zeros(pool[:3] + (1,), jnp.float32),
-                }
-            return {"k_pages": jnp.zeros(pool, dtype),
-                    "v_pages": jnp.zeros(pool, dtype)}
+            return state_lib.spec_for(kind).paged_leaves(
+                cfg, n_pages, page_size, dtype, kv_int8)
 
-        return {
-            "blocks": [jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape),
-                one_paged(kind)) for kind in spec.sublayers],
-            "page_table": jnp.full((batch_size, max_len // page_size), n_pages,
-                                   jnp.int32),
-        }
+        cache: Dict[str, Any] = {
+            "blocks": [stack(one_paged(kind)) for kind in spec.sublayers]}
+        if spec.tail:
+            cache["tail"] = [one_paged(k) for k in spec.tail]
+        if spec.shared_attn:
+            cache["shared"] = stack(one_paged("attn"))
+        if has_kv:
+            cache["page_table"] = jnp.full(
+                (batch_size, max_len // page_size), n_pages, jnp.int32)
+        if has_state:
+            cache["state_table"] = jnp.full((batch_size,), n_pages, jnp.int32)
+        return cache
     if layout != "dense":
         raise ValueError(f"unknown cache layout {layout!r}")
 
     def one(kind):
-        if kind == "ssm":
-            return {
-                "state": jnp.zeros((batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
-                                    cfg.ssm_state), jnp.float32),
-                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1,
-                                   cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
-                                  jnp.float32),
-            }
-        kv_shape = (batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
-        if kv_int8:
-            return {
-                "k": jnp.zeros(kv_shape, jnp.int8),
-                "v": jnp.zeros(kv_shape, jnp.int8),
-                "k_scale": jnp.zeros(kv_shape[:3] + (1,), jnp.float32),
-                "v_scale": jnp.zeros(kv_shape[:3] + (1,), jnp.float32),
-            }
-        return {
-            "k": jnp.zeros(kv_shape, dtype),
-            "v": jnp.zeros(kv_shape, dtype),
-        }
+        return state_lib.spec_for(kind).dense_leaves(
+            cfg, batch_size, max_len, dtype, kv_int8)
 
-    cache: Dict[str, Any] = {
-        "blocks": [jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape), one(kind))
-            for kind in spec.sublayers],
-    }
+    cache = {"blocks": [stack(one(kind)) for kind in spec.sublayers]}
     if spec.tail:
         cache["tail"] = [one(k) for k in spec.tail]
     if spec.shared_attn:
-        cache["shared"] = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (spec.n_blocks,) + x.shape), one("attn"))
+        cache["shared"] = stack(one("attn"))
     return cache
 
 
@@ -355,6 +335,7 @@ def apply(
     if use_cache and caches is None:
         raise ValueError("prefill/decode/verify need caches (init_cache)")
     page_table = caches.get("page_table") if use_cache else None
+    state_table = caches.get("state_table") if use_cache else None
     if prefix_len is not None and page_table is None:
         raise ValueError("prefix_len needs a paged cache (its page_table routes "
                          "the shared prefix)")
@@ -371,13 +352,15 @@ def apply(
                                          cache=c, cur_len=cur_len, decode=decode,
                                          page_table=page_table,
                                          prefix_len=prefix_len, q_len=q_len,
-                                         chunk=chunk)
+                                         chunk=chunk, state_table=state_table)
             aux_sum += aux
             new_caches.append(nc if nc is not None else c)
         new_shared = shared_cache
         if spec.shared_attn:
             x, new_shared = _shared_block(params["shared_attn"], x, cfg, ctx,
-                                          cache=shared_cache, cur_len=cur_len)
+                                          cache=shared_cache, cur_len=cur_len,
+                                          page_table=page_table,
+                                          prefix_len=prefix_len)
         return x, new_caches, new_shared, aux_sum
 
     if unroll:
@@ -425,7 +408,8 @@ def apply(
             c = caches["tail"][i] if use_cache else None
             x, nc, aux = _apply_sublayer(kind, params["tail"][i], x, cfg,
                                          ctx.sub(f"T{i}"),
-                                         cache=c, cur_len=cur_len, decode=decode)
+                                         cache=c, cur_len=cur_len, decode=decode,
+                                         state_table=state_table)
             aux_total += aux
             new_tail.append(nc if nc is not None else c)
         if use_cache:

@@ -126,8 +126,11 @@ def moe_apply(
     a leading sharded batch dim, which SPMD partitions cleanly — an ungrouped global
     dispatch replicates the (N·K, d) expansion on every device (48 GiB/device on
     granite prefill_32k, EXPERIMENTS.md §Perf). G == data-axis size under the
-    launcher's hints; 1 (global dispatch) in tests/eager mode and during calibration
-    (observers cannot run under vmap).
+    launcher's hints; 1 (global dispatch) in tests/eager mode, during calibration
+    (observers cannot run under vmap), and in serving steps
+    (``sharding_hints(token_groups=False)`` — per-group capacity admits a different
+    token-drop set than global dispatch, and the EP serving parity contract is
+    bitwise vs single-device, DESIGN.md §3.13).
     """
     B, S, d = x.shape
     N = B * S

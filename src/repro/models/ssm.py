@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import qlinear as ql
 from repro.configs.base import ModelConfig
 from repro.models.layers import QuantContext
+from repro.sharding import hints
 
 
 def _conv_channels(cfg: ModelConfig) -> int:
@@ -156,11 +157,35 @@ def ssd_decode_step(
 def mamba_apply(
     params: dict, x: jax.Array, cfg: ModelConfig, ctx: QuantContext, *,
     cache: Optional[dict] = None, decode: bool = False,
+    cur_len: Optional[jax.Array] = None, state_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
-    """Full Mamba2 block. x: (B,S,d). cache = {"state": (B,H,P,N), "conv": (B,K-1,C)}."""
+    """Full Mamba2 block. x: (B,S,d). cache = {"state": (B,H,P,N), "conv": (B,K-1,C)}
+    for the dense layout, or {"state_pages": (nP,H,P,N), "conv_pages": (nP,K-1,C)}
+    pools routed through ``state_table`` (B,) int32 for the paged layout (the
+    sentinel id ``nP`` gathers a clamped page and drops the scatter — retired
+    slots neither read nor write state).
+
+    ``cur_len`` (B,) marks each row's valid prompt length on a right-padded
+    prefill: dt is masked to 0 at padded positions, so (per the ssd_scan pad
+    note) they neither decay nor update the carried state — the final state is
+    exactly the exact-length state, which is what lets the continuous batcher
+    admit SSM rows through the same length-bucketed padded prefill as attention.
+    """
     Bsz, S, d = x.shape
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     A = -jnp.exp(params["A_log"])
+
+    paged = cache is not None and "state_pages" in cache
+    pools = None
+    if paged:
+        if state_table is None:
+            raise ValueError("paged SSM cache needs a state_table")
+        pools = cache
+        nP = pools["state_pages"].shape[0]
+        tbl = jnp.reshape(state_table, (-1,)).astype(jnp.int32)
+        safe = jnp.clip(tbl, 0, nP - 1)
+        cache = {"state": pools["state_pages"][safe],
+                 "conv": pools["conv_pages"][safe]}
 
     proj = ctx.linear(params["in_proj"], x, "in_proj")
     z, xbc, dt_raw = _split_proj(proj, cfg)
@@ -178,11 +203,25 @@ def mamba_apply(
         y = y.reshape(Bsz, 1, cfg.d_inner)
         new_cache = {"state": state, "conv": conv_buf}
     else:
+        cur = None
+        if cur_len is not None:
+            cur = jnp.broadcast_to(
+                jnp.reshape(cur_len, (-1,)).astype(jnp.int32), (Bsz,))
+            # Padded positions must not touch the carried state: dt = 0 there
+            # makes them decay-1 / update-0 no-ops (see ssd_scan's pad note),
+            # and the causal conv never reads rightward, so every valid
+            # position's output and the final state match exact-length prefill.
+            dt = jnp.where(jnp.arange(S)[None, :, None] < cur[:, None, None],
+                           dt, 0.0)
         xbc_raw = xbc.astype(jnp.float32)          # cache keeps PRE-conv inputs
         xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
         xi, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + N], axis=-1)
         xh = xi.reshape(Bsz, S, H, P)
-        init_state = cache["state"] if cache is not None else None
+        # Paged prefill is always a fresh admission (prefix reuse is rejected for
+        # SSM state): start from zero state — the gathered page may still hold a
+        # retired sequence's checkpoint.
+        init_state = (None if paged
+                      else (cache["state"] if cache is not None else None))
         y, final_state = ssd_scan(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S),
                                   init_state=init_state)
         y = y + params["D"][None, None, :, None] * xh
@@ -190,9 +229,30 @@ def mamba_apply(
         new_cache = None
         if cache is not None:
             K = cfg.ssm_conv
-            conv_buf = xbc_raw[:, -(K - 1):] if S >= K - 1 else jnp.pad(
-                xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            if cur is None:
+                conv_buf = xbc_raw[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+                    xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            else:
+                # Last K-1 *valid* pre-conv inputs per row (left-padded with
+                # zeros for prompts shorter than the window, matching the
+                # dense branch's jnp.pad semantics).
+                idx = cur[:, None] - (K - 1) + jnp.arange(K - 1)[None, :]
+                gathered = jnp.take_along_axis(
+                    xbc_raw, jnp.clip(idx, 0, S - 1)[:, :, None], axis=1)
+                conv_buf = jnp.where((idx >= 0)[:, :, None], gathered, 0.0)
             new_cache = {"state": final_state, "conv": conv_buf}
+
+    if paged and new_cache is not None:
+        # Scatter each row's refreshed state back into its pool page; rows whose
+        # table entry is the sentinel nP index out of range and are dropped.
+        new_cache = {
+            "state_pages": hints.constrain_state_pages(
+                pools["state_pages"].at[tbl].set(
+                    new_cache["state"], mode="drop")),
+            "conv_pages": hints.constrain_state_pages(
+                pools["conv_pages"].at[tbl].set(
+                    new_cache["conv"], mode="drop")),
+        }
 
     # gated RMSNorm (mamba2) then output projection
     g = y * jax.nn.silu(z.astype(y.dtype))

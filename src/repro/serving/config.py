@@ -7,9 +7,13 @@ token-budget/speculate checks), so an invalid combination fails the same way
 whether it arrives through ``ServeEngine(cfg, params, config=...)``, the legacy
 kwarg shim, a JSON file (``from_json``), or a CLI (``add_config_args`` derives
 the flag set from the dataclass fields — new fields appear in every CLI
-automatically). Model-dependent checks (SSM/hybrid families cannot serve
-chunked or speculative) live in :meth:`EngineConfig.check_model`, called by the
-engine once it knows the ``ModelConfig``.
+automatically). Model-dependent checks live in
+:meth:`EngineConfig.check_model`, called by the engine once it knows the
+``ModelConfig``: SSM/hybrid families serve through the continuous slot-table
+scheduler like everyone else (DESIGN.md §3.13), and only the combinations that
+genuinely cannot work on recurrent state are rejected — each with its own
+:class:`UnsupportedModelError` subclass so callers (and the async server's
+error mapping) can branch on the reason instead of parsing messages.
 
 ``EngineStats`` unifies the engine's scattered stats accessors (``occupancy()``,
 ``prefix_hit_rate()``, ``accept_rate()``, ``tokens_per_step()``) behind one
@@ -36,6 +40,36 @@ SERVE_PATHS: Dict[Optional[str], Dict[str, Any]] = {
     "dequant-fp": {"int_exec": "dequant"},
     "fused-int8": {"int_exec": "pallas", "use_pallas": True},
 }
+
+
+# ==========================================================================
+# Typed model-compatibility rejections (DESIGN.md §3.13)
+# ==========================================================================
+
+class UnsupportedModelError(ValueError):
+    """An :class:`EngineConfig` combination this model family cannot serve.
+
+    Subclasses carry the *reason*; all are ``ValueError`` so pre-§3.13
+    callers that caught that keep working."""
+
+
+class SpeculativeStateError(UnsupportedModelError):
+    """``speculate > 1`` on an SSM/hybrid family: the recurrence advances
+    destructively per scattered token, so rejected draft tokens cannot be
+    rewound (DESIGN.md §3.9)."""
+
+
+class PrefixReuseStateError(UnsupportedModelError):
+    """``prefix_reuse`` on a paged SSM/hybrid family: radix reuse restarts a
+    prompt from a mid-sequence page boundary, which position-indexed KV pages
+    support but a single end-of-prefix state checkpoint does not (DESIGN.md
+    §3.8/§3.13)."""
+
+
+class ChunkedStateError(UnsupportedModelError):
+    """``chunked=True`` on an SSM/hybrid family: the packed ragged step
+    scatters interleaved chunks of many slots, which needs position-indexed
+    cache writes the recurrent state does not have (DESIGN.md §3.10)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,15 +161,29 @@ class EngineConfig:
     # ----------------------------------------------------------- model checks
 
     def check_model(self, cfg) -> None:
-        """Model-dependent validation the pure config cannot do: SSM / hybrid
-        families carry recurrent state that can neither be chunk-scattered nor
-        rewound past rejected draft tokens (DESIGN.md §3.9/§3.10)."""
-        if self.chunked and cfg.family in ("ssm", "hybrid"):
-            raise ValueError(f"chunked serving needs attention-only caches; "
-                             f"family {cfg.family!r} carries SSM state")
-        if self.speculate > 1 and cfg.family in ("ssm", "hybrid"):
-            raise ValueError(f"speculate > 1 needs attention-only caches; "
-                             f"family {cfg.family!r} carries SSM state")
+        """Model-dependent validation the pure config cannot do (§3.13).
+
+        SSM / hybrid families serve continuous, paged, sharded and grouped
+        exactly like attention families — only the combinations their
+        recurrent state genuinely cannot support are rejected, each with a
+        typed :class:`UnsupportedModelError` subclass per reason."""
+        stateful = cfg.family in ("ssm", "hybrid")
+        if not stateful:
+            return
+        if self.speculate > 1:
+            raise SpeculativeStateError(
+                f"speculate > 1 cannot serve family {cfg.family!r}: the SSM "
+                f"recurrence cannot rewind rejected draft tokens (§3.9)")
+        if self.cache_layout == "paged" and self.prefix_reuse:
+            raise PrefixReuseStateError(
+                f"radix prefix reuse cannot serve family {cfg.family!r}: a "
+                f"state checkpoint cannot restart a prompt from a mid-"
+                f"sequence page boundary — pass prefix_reuse=False (§3.13)")
+        if self.chunked:
+            raise ChunkedStateError(
+                f"chunked serving cannot serve family {cfg.family!r}: packed "
+                f"ragged chunks need position-indexed cache writes, which "
+                f"the recurrent state does not have (§3.10)")
 
     # ------------------------------------------------------------------- JSON
 

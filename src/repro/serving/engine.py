@@ -47,7 +47,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import qlinear as ql
-from repro.models import model as M
+from repro.models import model as M, state as state_lib
 from repro.models.layers import QuantContext
 from repro.serving import drafter, paging
 from repro.serving.api import FinishReason
@@ -211,19 +211,27 @@ def make_paged_admit_step(cfg: ModelConfig, quant: Optional[ql.QuantConfig] = No
     ctx = _make_ctx(cfg, quant, path)
     sample = _make_sampler(temperature, top_k)
 
-    def admit_step(params, tokens, lens, prefix, row_tables, caches, key):
+    def admit_step(params, tokens, lens, prefix, row_tables, row_states, caches,
+                   key):
         """tokens (Bp, S) right-padded suffixes; lens (Bp,) suffix lengths;
         prefix (Bp,) shared-prefix lengths (ignored on the cold lowering);
-        row_tables (Bp, maxP) per-row page tables (sentinel-filled padding rows
-        write nowhere). Returns (first sampled token (Bp,), updated caches with
-        the live page table restored)."""
+        row_tables (Bp, maxP) per-row page tables and row_states (Bp,) per-row
+        state-page ids (sentinel-filled padding rows write nowhere; each is
+        consumed only when the cache carries its routing table — §3.13).
+        Returns (first sampled token (Bp,), updated caches with the live
+        tables restored)."""
         c = dict(caches)
-        c["page_table"] = row_tables
+        if "page_table" in c:
+            c["page_table"] = row_tables
+        if "state_table" in c:
+            c["state_table"] = row_states
         logits, ex = M.apply(params, {"tokens": tokens}, cfg, ctx=ctx,
                              mode="prefill", caches=c, cur_len=lens,
                              prefix_len=prefix if warm else None)
         out = dict(ex["caches"])
-        out["page_table"] = caches["page_table"]
+        for table in ("page_table", "state_table"):
+            if table in caches:
+                out[table] = caches[table]
         return sample(logits[:, -1], key), out
 
     return admit_step
@@ -329,9 +337,14 @@ def _hinted(fn, plan: "planner.Plan", mesh: Mesh):
     (qlinear) all read these contextvars at trace time."""
 
     def wrapped(*args):
+        # token_groups=False: grouped MoE dispatch uses *per-group* capacity, which
+        # admits a different token-drop set than the single-device global dispatch
+        # whenever an expert overflows — serving's EP parity contract is bitwise vs
+        # single-device (§3.13), so serving steps always trace global dispatch.
         with hints.sharding_hints(
                 dp_axes=plan.dp_axes, tp_axis=plan.tp_axis, mesh=mesh,
-                kv_seq_axis=plan.tp_axis if plan.seq_shard_kv else None):
+                kv_seq_axis=plan.tp_axis if plan.seq_shard_kv else None,
+                ep_axis=plan.ep_axis, token_groups=False):
             return fn(*args)
 
     return wrapped
@@ -423,9 +436,25 @@ class ServeEngine:
     shardings. Token-exact vs single-device serving on every path × KV mode
     (tests/test_sharded_serving.py).
 
-    SSM / hybrid families use exact-length buckets: their recurrent state is built
-    by a scan over the whole prefill window, so right-padding would fold garbage
-    tokens into the state (attention caches mask padded positions instead).
+    SSM / hybrid families serve through the same continuous slot-table scheduler
+    as attention (DESIGN.md §3.13): right-padded admission prefill masks dt to
+    zero at padded positions, which makes them decay-1/update-0 no-ops on the
+    recurrence (ssm.mamba_apply) — the carried state is exactly the exact-length
+    state, so mamba2/zamba2 get length-bucketed admission, mid-decode
+    retire+refill and donated-cache decode identically to attention families.
+    Under ``cache_layout="paged"`` their per-layer state checkpoints live in
+    fixed-size pools (one ``state_table``-routed page per slot, allocated from
+    the same ref-counted pool as attention KV pages; a hybrid slot holds both
+    kinds and retires them together). Speculation and radix prefix reuse stay
+    attention-only — the recurrence can neither rewind rejected draft tokens
+    nor restart from a mid-prompt page boundary (serving/config.py raises
+    typed errors for those combinations).
+
+    Expert-parallel MoE serving: a mesh with an ``"expert"`` axis shards the
+    stacked ``(E, ...)`` expert trees over it (planner moe_mode
+    ``"expert_axis"``) — each ep shard holds whole experts with their scale
+    leaves, the router stays replicated, and the int32 expert GEMMs never
+    cross shards, so fused-int8 EP serving is bitwise vs single-device.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -451,7 +480,7 @@ class ServeEngine:
                     "(DESIGN.md §3.11)", DeprecationWarning, stacklevel=2)
                 _LEGACY_KWARGS_WARNED = True
             config = EngineConfig.from_kwargs(**legacy)
-        config.check_model(cfg)   # SSM/hybrid cannot serve chunked/speculative
+        config.check_model(cfg)   # typed rejections: spec/prefix-reuse/chunked on state
         self.config = config
         batch_size, max_len = config.batch_size, config.max_len
         path, eos_id = config.path, config.eos_id
@@ -489,7 +518,10 @@ class ServeEngine:
         self.eos = eos_id
         self.kv_int8 = kv_cache == "int8"
         self.scheduler = scheduler
-        self.pad_prefill = cfg.family not in ("ssm", "hybrid")
+        # Which state kinds this family's cache carries (models/state.py §3.13):
+        # has_kv → token-paged attention KV (page need grows with length);
+        # has_state → fixed-size SSM checkpoints (one state page per slot).
+        self.has_kv, self.has_state = state_lib.family_flags(M.block_spec(cfg))
         self.buckets = sorted(b for b in (prefill_buckets or default_buckets(max_len))
                               if b <= max_len)
         if cache_dtype is None:
@@ -515,8 +547,18 @@ class ServeEngine:
             self.maxP = max_len // page_size
             self.n_pages = n_pages or batch_size * self.maxP
             self.pool = paging.PagePool(self.n_pages)
-            self.radix = paging.RadixIndex(page_size) if prefix_reuse else None
-            self._table = np.full((batch_size, self.maxP), self.n_pages, np.int32)
+            # Radix prefix reuse needs position-indexed KV pages to restart a
+            # prompt mid-way; a state checkpoint cannot (check_model rejects
+            # prefix_reuse on stateful families — this guard is the backstop).
+            self.radix = (paging.RadixIndex(page_size)
+                          if prefix_reuse and not self.has_state else None)
+            if self.has_kv:
+                self._table = np.full((batch_size, self.maxP), self.n_pages,
+                                      np.int32)
+            if self.has_state:
+                self._state_table = np.full((batch_size,), self.n_pages,
+                                            np.int32)
+            self._state_pages_held = 0
             self._table_dirty = False
             self._seq_pages: List[List[int]] = [[] for _ in range(batch_size)]
             self.caches = M.init_cache(cfg, batch_size, max_len,
@@ -551,8 +593,8 @@ class ServeEngine:
             if chunk_step is not None:
                 self._chunk_step = jax.jit(chunk_step, donate_argnums=7)
             if self.paged:
-                self._admit_cold = jax.jit(admit_cold, donate_argnums=5)
-                self._admit_warm = jax.jit(admit_warm, donate_argnums=5)
+                self._admit_cold = jax.jit(admit_cold, donate_argnums=6)
+                self._admit_warm = jax.jit(admit_warm, donate_argnums=6)
                 self._copy_step = jax.jit(_page_copy, donate_argnums=0)
             else:
                 self._admit_step = jax.jit(admit, donate_argnums=4)
@@ -591,12 +633,12 @@ class ServeEngine:
                     out_shardings=(repl, repl, cache_sh), donate_argnums=7)
             if self.paged:
                 admit_sh = dict(in_shardings=(param_sh, repl, repl, repl, repl,
-                                              cache_sh, repl),
+                                              repl, cache_sh, repl),
                                 out_shardings=(repl, cache_sh))
                 self._admit_cold = jax.jit(_hinted(admit_cold, self.plan, mesh),
-                                           donate_argnums=5, **admit_sh)
+                                           donate_argnums=6, **admit_sh)
                 self._admit_warm = jax.jit(_hinted(admit_warm, self.plan, mesh),
-                                           donate_argnums=5, **admit_sh)
+                                           donate_argnums=6, **admit_sh)
                 self._copy_step = jax.jit(
                     _page_copy, in_shardings=(cache_sh, repl, repl, repl),
                     out_shardings=cache_sh, donate_argnums=0)
@@ -631,6 +673,11 @@ class ServeEngine:
             "prompt_tokens": 0, "prefill_tokens": 0,
             "cow_copies": 0, "pages_evicted": 0,
             "peak_pages_in_use": 0,
+            # state-pool occupancy split (DESIGN.md §3.13): how many pool pages
+            # currently hold attention KV tokens vs fixed-size SSM state
+            # checkpoints, plus their peaks; zero on dense engines
+            "kv_pages_in_use": 0, "state_pages_in_use": 0,
+            "peak_kv_pages_in_use": 0, "peak_state_pages_in_use": 0,
             # speculative decoding (DESIGN.md §3.9); zero if spec==1
             "spec_steps": 0, "spec_slot_steps": 0, "spec_drafted": 0,
             "spec_accepted": 0, "spec_emitted": 0,
@@ -657,8 +704,6 @@ class ServeEngine:
     # ---------------------------------------------------------------- scheduling
 
     def _bucket(self, plen: int) -> int:
-        if not self.pad_prefill:
-            return plen
         for b in self.buckets:
             if b >= plen:
                 return b
@@ -732,8 +777,16 @@ class ServeEngine:
                 # reference), everything else returns to the free list
                 self.pool.decref(self._seq_pages[slot])
                 self._seq_pages[slot] = []
-                self._table[slot, :] = self.n_pages
+                if self.has_kv:
+                    self._table[slot, :] = self.n_pages
+                if self.has_state:
+                    # sentinel the state route too: the freed checkpoint page
+                    # may be handed to the next admission, whose prefill starts
+                    # from a zero init_state rather than reading it (§3.13)
+                    self._state_table[slot] = self.n_pages
+                    self._state_pages_held -= 1
                 self._table_dirty = True
+                self._note_pool()
         else:
             self._pending[slot] = tok
         if self.on_token is not None:
@@ -780,9 +833,12 @@ class ServeEngine:
         prefix = matched + j
         # worst-case cache footprint: the prompt plus every *appended* decode
         # token — the final sampled token retires the request without ever
-        # being scattered (see _emit), so the budget contributes max_new - 1
-        need = -(-min(plen + max(r.max_new - 1, 0), self.T) // ps)
-        own_n = need - len(shared)
+        # being scattered (see _emit), so the budget contributes max_new - 1.
+        # Token-paged KV need grows with length; a state checkpoint (§3.13) is
+        # one extra fixed-size page regardless of length.
+        need = (-(-min(plen + max(r.max_new - 1, 0), self.T) // ps)
+                if self.has_kv else 0)
+        own_n = need - len(shared) + (1 if self.has_state else 0)
         own = self.pool.alloc(own_n)
         if own is None and self.radix is not None:
             self.counters["pages_evicted"] += self.radix.evict(self.pool, own_n)
@@ -793,8 +849,11 @@ class ServeEngine:
             self.pool.decref(shared)
             return None
         cow = (cow_src, own[0], j) if cow_src is not None else None
+        state_page = own[-1] if self.has_state else None
+        kv_own = own[:-1] if self.has_state else own
         return {"prefix": prefix, "suffix": plen - prefix,
-                "pages": shared + own, "n_shared": len(shared), "cow": cow}
+                "pages": shared + kv_own, "n_shared": len(shared), "cow": cow,
+                "state_page": state_page}
 
     def _suffix_estimate(self, r: Request) -> int:
         """Prefill-window estimate for bucketing (continuous, paged): prompt
@@ -831,6 +890,7 @@ class ServeEngine:
         lens = np.ones(rows, np.int32)
         prefixes = np.zeros(rows, np.int32)
         row_tables = np.full((rows, self.maxP), self.n_pages, np.int32)
+        row_states = np.full(rows, self.n_pages, np.int32)
         mid_decode = any(s is not None for s in self._slots)
         warm = False
         for j, (slot, (r, plan)) in enumerate(zip(free, plans)):
@@ -846,9 +906,17 @@ class ServeEngine:
                     jnp.asarray(dst, jnp.int32), jnp.asarray(ncopy, jnp.int32))
                 self.counters["cow_copies"] += 1
             self._slots[slot] = r
-            self._seq_pages[slot] = plan["pages"]
-            self._table[slot, :] = self.n_pages
-            self._table[slot, : len(plan["pages"])] = plan["pages"]
+            # the slot's reference list covers both page kinds: retirement
+            # decrefs KV pages and the state checkpoint page together (§3.13)
+            self._seq_pages[slot] = plan["pages"] + (
+                [plan["state_page"]] if self.has_state else [])
+            if self.has_kv:
+                self._table[slot, :] = self.n_pages
+                self._table[slot, : len(plan["pages"])] = plan["pages"]
+            if self.has_state:
+                row_states[j] = plan["state_page"]
+                self._state_table[slot] = plan["state_page"]
+                self._state_pages_held += 1
             warm = warm or plan["prefix"] > 0
             r.prefix_reused = plan["prefix"]
             self.counters["prompt_tokens"] += len(r.prompt)
@@ -859,14 +927,13 @@ class ServeEngine:
         step = self._admit_warm if warm else self._admit_cold
         tok, self.caches = step(
             self.params, jnp.asarray(tokens), jnp.asarray(lens),
-            jnp.asarray(prefixes), jnp.asarray(row_tables), self.caches,
-            self._next_key())
+            jnp.asarray(prefixes), jnp.asarray(row_tables),
+            jnp.asarray(row_states), self.caches, self._next_key())
         tok = np.asarray(tok)
         self.counters["prefill_calls"] += 1
         if mid_decode:
             self.counters["mid_decode_admissions"] += 1
-        self.counters["peak_pages_in_use"] = max(self.counters["peak_pages_in_use"],
-                                              self.pool.used_count)
+        self._note_pool()
         for j, (slot, (r, plan)) in enumerate(zip(free, plans)):
             if self.radix is not None:
                 # register the full prompt pages as a cached prefix (content is
@@ -952,16 +1019,41 @@ class ServeEngine:
     # ---------------------------------------------------------------- main loop
 
     def _push_table(self) -> None:
-        """Sync the host page table to the device cache pytree. Retired slots'
-        rows are sentinel-cleared *before* the next decode step: a free slot
-        still decodes (lock-step shapes) and its garbage token must scatter
-        nowhere — a stale table row would corrupt a page the allocator may have
-        already handed to another sequence or the prefix index."""
-        table = jnp.asarray(self._table)
-        if self.mesh is not None:
-            table = jax.device_put(table, self._repl_sh)
-        self.caches = {**self.caches, "page_table": table}
+        """Sync the host routing tables to the device cache pytree. Retired
+        slots' rows are sentinel-cleared *before* the next decode step: a free
+        slot still decodes (lock-step shapes) and its garbage token must
+        scatter nowhere — a stale table row would corrupt a page the allocator
+        may have already handed to another sequence or the prefix index. The
+        same applies to the (B,) state table of checkpoint-paged families
+        (§3.13); a hybrid engine pushes both."""
+        out = dict(self.caches)
+        if self.has_kv:
+            table = jnp.asarray(self._table)
+            if self.mesh is not None:
+                table = jax.device_put(table, self._repl_sh)
+            out["page_table"] = table
+        if self.has_state:
+            stable = jnp.asarray(self._state_table)
+            if self.mesh is not None:
+                stable = jax.device_put(stable, self._repl_sh)
+            out["state_table"] = stable
+        self.caches = out
         self._table_dirty = False
+
+    def _note_pool(self) -> None:
+        """Refresh the §3.13 pool-occupancy counters after any alloc/decref:
+        the one ref-counted pool backs both page kinds, so KV occupancy is
+        whatever the engine's own state checkpoints don't account for (radix-
+        held cached prefixes count as KV — they are token pages)."""
+        held = self._state_pages_held
+        kv = self.pool.used_count - held
+        c = self.counters
+        c["state_pages_in_use"] = held
+        c["kv_pages_in_use"] = kv
+        c["peak_state_pages_in_use"] = max(c["peak_state_pages_in_use"], held)
+        c["peak_kv_pages_in_use"] = max(c["peak_kv_pages_in_use"], kv)
+        c["peak_pages_in_use"] = max(c["peak_pages_in_use"],
+                                     self.pool.used_count)
 
     def _spec_step(self, active: List[int], finished: List[Request]) -> None:
         """One speculative verify step (DESIGN.md §3.9): draft ≤ spec-1 tokens
@@ -1060,8 +1152,7 @@ class ServeEngine:
             self.counters["prefill_tokens"] += plan["suffix"]
             self.counters["prefix_tokens_reused"] += plan["prefix"]
             self.counters["prefix_hits"] += 1 if plan["prefix"] > 0 else 0
-            self.counters["peak_pages_in_use"] = max(
-                self.counters["peak_pages_in_use"], self.pool.used_count)
+            self._note_pool()
 
     def _chunked_step(self, finished: List[Request]) -> None:
         """One mixed-budget engine step (DESIGN.md §3.10): admit, pack decode

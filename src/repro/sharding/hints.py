@@ -31,6 +31,8 @@ _AXIS_SIZES: contextvars.ContextVar[Dict[str, int]] = contextvars.ContextVar(
 _MESH: contextvars.ContextVar = contextvars.ContextVar("hint_mesh", default=None)
 _KV_SEQ_AXIS: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
     "kv_seq_axis", default=None)
+_TOKEN_GROUPS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "token_groups", default=True)
 
 
 @contextlib.contextmanager
@@ -38,7 +40,8 @@ def sharding_hints(ep_axis: Optional[str] = None,
                    dp_axes: Optional[Tuple[str, ...]] = None,
                    tp_axis: Optional[str] = None,
                    mesh=None,
-                   kv_seq_axis: Optional[str] = None):
+                   kv_seq_axis: Optional[str] = None,
+                   token_groups: bool = True):
     sizes = dict(mesh.shape) if mesh is not None else {}
     t1 = _EP_AXIS.set(ep_axis)
     t2 = _DP_AXES.set(dp_axes)
@@ -46,6 +49,7 @@ def sharding_hints(ep_axis: Optional[str] = None,
     t4 = _AXIS_SIZES.set(sizes)
     t5 = _MESH.set(mesh)
     t6 = _KV_SEQ_AXIS.set(kv_seq_axis)
+    t7 = _TOKEN_GROUPS.set(token_groups)
     try:
         yield
     finally:
@@ -55,6 +59,7 @@ def sharding_hints(ep_axis: Optional[str] = None,
         _AXIS_SIZES.reset(t4)
         _MESH.reset(t5)
         _KV_SEQ_AXIS.reset(t6)
+        _TOKEN_GROUPS.reset(t7)
 
 
 def _constrain(x: jax.Array, spec: P) -> jax.Array:
@@ -128,7 +133,16 @@ def constrain_tokens(x: jax.Array) -> jax.Array:
 def token_group_count(n_tokens: int) -> int:
     """Number of dp-aligned token groups for grouped MoE dispatch (GShard-style
     per-group capacity). Equals the data-axis size when it divides the token count,
-    else 1 (single global dispatch — tests, eager mode)."""
+    else 1 (single global dispatch — tests, eager mode).
+
+    Grouping changes the *capacity arithmetic*: per-group capacity admits a
+    different set of (token, k) assignments than one global dispatch whenever an
+    expert overflows, so grouped and global dispatch are not token-exact. Callers
+    that need mesh-invariant numerics — the serving engine, whose EP parity
+    contract is bitwise vs single-device (§3.13) — trace under
+    ``sharding_hints(..., token_groups=False)``, which forces global dispatch."""
+    if not _TOKEN_GROUPS.get():
+        return 1
     axes = _DP_AXES.get()
     if axes is None:
         return 1
@@ -251,6 +265,27 @@ def constrain_kv_pages(x: jax.Array) -> jax.Array:
         spec[0] = dp
     if tp is not None and x.shape[2] % _axis_size(tp) == 0:
         spec[2] = tp
+    if all(s is None for s in spec):
+        return x
+    return _constrain(x, P(*spec))
+
+
+def constrain_state_pages(x: jax.Array) -> jax.Array:
+    """Paged SSM state pools (DESIGN.md §3.13): ``state_pages`` (P, H, Pd, N) or
+    ``conv_pages`` (P, K-1, C) — pin the physical page axis to the data axes and,
+    for the 4-d recurrent-state pool, the head axis to the model axis, mirroring
+    planner.cache_shardings. Deliberately NOT routed through constrain_kv_pages:
+    that helper pins dim 2 of any 4-d leaf (the kv-head axis of a KV pool), which
+    on a state pool would land on the head-*dim* axis instead of the head axis."""
+    dp = _DP_AXES.get()
+    tp = _TP_AXIS.get()
+    if (dp is None and tp is None) or x.ndim < 3:
+        return x
+    spec = [None] * x.ndim
+    if dp is not None and x.shape[0] % _axis_size(dp) == 0:
+        spec[0] = dp
+    if tp is not None and x.ndim >= 4 and x.shape[1] % _axis_size(tp) == 0:
+        spec[1] = tp
     if all(s is None for s in spec):
         return x
     return _constrain(x, P(*spec))

@@ -32,13 +32,20 @@ from repro.configs.base import ModelConfig, ShapeConfig
 @dataclasses.dataclass(frozen=True)
 class Plan:
     tier: str                  # tp_full | tp_kv_rep | tp_ffn
-    moe_mode: str              # none | ep | expert_tp
+    moe_mode: str              # none | ep | expert_tp | expert_axis
     dp_axes: Tuple[str, ...]   # batch axes, e.g. ("pod", "data")
     tp_axis: str               # "model"
     dp: int
     tp: int
     fsdp: bool                 # shard weight free dims over dp axes (training)
     seq_shard_kv: bool         # decode caches: T over model
+    # Dedicated expert-parallel mesh axis (DESIGN.md §3.13): when the mesh carries
+    # an "expert" axis that divides n_experts, stacked (E, ...) expert trees shard
+    # on E over it (moe_mode == "expert_axis") — orthogonal to the model axis, so
+    # tp×ep meshes compose. None on 2-axis meshes (legacy "ep" then shards experts
+    # over the model axis as before).
+    ep_axis: Optional[str] = None
+    ep: int = 1
 
     def describe(self) -> dict:
         return dataclasses.asdict(self)
@@ -83,8 +90,16 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         dp_axes = dp_axes + ("model",)
         dp = _axis_size(mesh, dp_axes)
 
+    ep_axis = None
+    ep = 1
     moe_mode = "none"
-    if cfg.n_experts and tier != "dp_only":
+    if cfg.n_experts and "expert" in mesh.shape and tier != "dp_only" \
+            and cfg.n_experts % mesh.shape["expert"] == 0:
+        # Dedicated expert axis: experts shard over it, expert-internal dims stay
+        # whole (each expert GEMM runs entirely on one ep shard — its int32
+        # contraction is shard-local, hence bitwise vs single-device).
+        ep_axis, ep, moe_mode = "expert", mesh.shape["expert"], "expert_axis"
+    elif cfg.n_experts and tier != "dp_only":
         if cfg.n_experts % tp == 0:
             moe_mode = "ep"
         elif (cfg.d_ff_expert or cfg.d_ff) % tp == 0:
@@ -92,7 +107,7 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
     return Plan(
         tier=tier, moe_mode=moe_mode, dp_axes=dp_axes, tp_axis="model",
-        dp=dp, tp=tp, fsdp=(shape.kind == "train"),
+        dp=dp, tp=tp, fsdp=(shape.kind == "train"), ep_axis=ep_axis, ep=ep,
         # KV caches are the dominant serving bytes at 32k context; sequence-shard them
         # over the model axis for decode (flash-decoding partial softmax) AND prefill
         # (the cache write pays one reshard; holding 32 × 32k × Hkv caches replicated
@@ -190,6 +205,18 @@ def _param_spec(pathstr: str, shape: Tuple[int, ...], cfg: ModelConfig,
     # llama4 decode, EXPERIMENTS.md §Perf.)
     moe = "moe" in names and parent in ("up", "gate", "down") and "shared" not in names
     if moe:
+        if plan.ep_axis is not None:
+            # Dedicated expert axis (§3.13): EVERY stacked expert leaf — weights
+            # AND their quantization metadata (sw/bcol/qalpha) and packed sparsity
+            # masks — shards its E dim over the expert axis, so each ep shard holds
+            # whole experts with their scales co-located (no per-step reshard, and
+            # the int32 expert GEMM never crosses shards → bitwise). Expert-internal
+            # dims stay whole in this mode; the router was replicated above.
+            e_dim = 1 if names[0] == "blocks" else 0
+            spec = [None] * nd
+            if nd > e_dim and _maybe(plan.ep_axis, shape[e_dim], mesh):
+                spec[e_dim] = plan.ep_axis
+            return P(*spec)
         if nd < 3 or leaf not in ("w", "qw", "qw4"):
             # prepared-tree scale vectors ((L, E, d_out) sw etc.): replicate — tiny
             return P(*([None] * nd))
@@ -317,6 +344,14 @@ def cache_shardings(cache_tree, cfg: ModelConfig, plan: Plan, mesh: Mesh):
                 spec[off + 0] = plan.dp_axes
             if plan.seq_shard_kv and _maybe(plan.tp_axis, leaf.shape[off + 1], mesh):
                 spec[off + 1] = plan.tp_axis
+        elif last == "state_pages":                  # (P, H, Pd, N) — §3.13
+            if _maybe(plan.dp_axes, leaf.shape[off + 0], mesh):
+                spec[off + 0] = plan.dp_axes
+            if _maybe(plan.tp_axis, leaf.shape[off + 1], mesh):
+                spec[off + 1] = plan.tp_axis
+        elif last == "conv_pages":                   # (P, K-1, C)
+            if _maybe(plan.dp_axes, leaf.shape[off + 0], mesh):
+                spec[off + 0] = plan.dp_axes
         elif last == "state":                        # (B, H, P, N)
             if _maybe(plan.dp_axes, leaf.shape[off + 0], mesh):
                 spec[off + 0] = plan.dp_axes

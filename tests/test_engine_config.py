@@ -14,7 +14,9 @@ import pytest
 from repro.configs import get
 from repro.models import model as M
 from repro.serving import engine as E
-from repro.serving.config import (EngineConfig, EngineStats, add_config_args,
+from repro.serving.config import (ChunkedStateError, EngineConfig, EngineStats,
+                                  PrefixReuseStateError, SpeculativeStateError,
+                                  UnsupportedModelError, add_config_args,
                                   config_from_args)
 
 
@@ -63,25 +65,54 @@ def test_invalid_combo_same_error_both_surfaces(small, kw, msg):
     assert str(via_config.value) == str(via_legacy.value)
 
 
-@pytest.mark.parametrize("kw,msg", [
-    (dict(batch_size=4, max_len=32, cache_layout="paged", chunked=True,
-          token_budget=16), "SSM state"),
-    (dict(batch_size=2, max_len=32, speculate=2), "SSM state"),
-])
-def test_family_checks_need_the_model(kw, msg):
+# One entry per typed rejection reason (DESIGN.md §3.13): speculative decoding
+# cannot rewind the recurrence, radix prefix reuse cannot restart it mid-prompt,
+# and chunked serving cannot scatter it positionally. Everything else —
+# continuous, paged (without reuse), grouped, sharded — serves SSM/hybrid.
+STATE_REJECTIONS = [
+    (dict(batch_size=2, max_len=32, speculate=2), SpeculativeStateError,
+     "rewind"),
+    (dict(batch_size=2, max_len=32, cache_layout="paged"),
+     PrefixReuseStateError, "prefix_reuse=False"),
+    (dict(batch_size=4, max_len=32, cache_layout="paged", prefix_reuse=False,
+          chunked=True, token_budget=16), ChunkedStateError, "ragged chunks"),
+]
+
+
+@pytest.mark.parametrize("family", ["mamba2-130m", "zamba2-1.2b"])
+@pytest.mark.parametrize("kw,err,msg", STATE_REJECTIONS,
+                         ids=[e.__name__ for _, e, _ in STATE_REJECTIONS])
+def test_family_checks_need_the_model(kw, err, msg, family):
     """SSM/hybrid restrictions live in check_model (the pure config cannot see
-    the family) and still raise through both engine surfaces."""
-    ssm = dataclasses.replace(get("mamba2-130m", smoke=True), dtype="float32")
+    the family), raise one typed UnsupportedModelError subclass per reason,
+    and fire identically through both engine surfaces."""
+    ssm = dataclasses.replace(get(family, smoke=True), dtype="float32")
     params = M.init_params(jax.random.PRNGKey(0), ssm)
     config = EngineConfig(**kw)           # pure-config validation passes
-    with pytest.raises(ValueError, match=msg):
+    with pytest.raises(err, match=msg):
         config.check_model(ssm)
-    with pytest.raises(ValueError, match=msg):
+    with pytest.raises(err, match=msg):
         E.ServeEngine(ssm, params, config=config)
-    with pytest.raises(ValueError, match=msg):
+    with pytest.raises(err, match=msg):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
             E.ServeEngine(ssm, params, **kw)
+    # typed errors stay catchable as plain ValueError (pre-§3.13 callers)
+    assert issubclass(err, UnsupportedModelError)
+    assert issubclass(err, ValueError)
+
+
+def test_state_families_pass_relaxed_check():
+    """Continuous + paged-without-reuse + grouped all pass check_model for
+    SSM/hybrid now (§3.13) — the pre-§3.13 blanket chunked/speculate rejection
+    must not have left collateral rejections behind."""
+    for family in ("mamba2-130m", "zamba2-1.2b"):
+        cfg = get(family, smoke=True)
+        for kw in (dict(batch_size=2, max_len=32),
+                   dict(batch_size=2, max_len=32, cache_layout="paged",
+                        prefix_reuse=False),
+                   dict(batch_size=2, max_len=32, scheduler="grouped")):
+            EngineConfig(**kw).check_model(cfg)   # must not raise
 
 
 def test_unknown_field_typeerror(small):

@@ -1,5 +1,7 @@
 """Serving engine: continuous batcher correctness against step-by-step greedy
-decoding, plus quantized-tree serving."""
+decoding, quantized-tree serving, and the §3.13 state-pool occupancy split."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,7 @@ from repro.configs import get
 from repro.core import qlinear as ql
 from repro.models import model as M
 from repro.models.quantize import quantize_tree
+from repro.serving.config import EngineConfig
 from repro.serving.engine import ServeEngine
 
 
@@ -79,3 +82,46 @@ class TestServeEngine:
         engine.submit(prompts, max_new=100)
         done = engine.run()
         assert len(done[0].out) <= 12 - 8 + 1
+
+
+class TestStatePoolOccupancy:
+    """§3.13: the shared page pool's occupancy splits into attention-KV pages
+    vs SSM state-checkpoint pages, exposed through ``stats().to_dict()``."""
+
+    def _serve(self, name, **kw):
+        cfg = dataclasses.replace(get(name, smoke=True), dtype="float32")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, config=EngineConfig(
+            batch_size=2, max_len=32, cache_layout="paged", **kw))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+                   for n in (5, 9, 6)]
+        eng.submit(prompts, max_new=3)
+        eng.run()
+        return eng
+
+    def test_attention_family_is_all_kv(self, small):
+        eng = self._serve("starcoder2-7b")
+        d = eng.stats().to_dict()
+        assert d["peak_kv_pages_in_use"] > 0
+        assert d["state_pages_in_use"] == d["peak_state_pages_in_use"] == 0
+        # drained engine: only radix-cached prefixes may still hold pages
+        assert d["kv_pages_in_use"] == eng.pool.used_count
+
+    def test_ssm_family_is_all_state(self):
+        eng = self._serve("mamba2-130m", prefix_reuse=False)
+        d = eng.stats().to_dict()
+        # one checkpoint page per concurrently resident slot, zero KV
+        assert d["peak_state_pages_in_use"] == 2
+        assert d["peak_kv_pages_in_use"] == 0
+        # every retirement returned its checkpoint page to the pool
+        assert d["state_pages_in_use"] == 0 and eng.pool.used_count == 0
+
+    def test_hybrid_family_holds_both_kinds(self):
+        eng = self._serve("zamba2-1.2b", prefix_reuse=False)
+        d = eng.stats().to_dict()
+        assert d["peak_state_pages_in_use"] == 2
+        assert d["peak_kv_pages_in_use"] > 0
+        assert d["peak_pages_in_use"] >= max(d["peak_kv_pages_in_use"],
+                                             d["peak_state_pages_in_use"])
+        assert d["state_pages_in_use"] == 0 and eng.pool.used_count == 0

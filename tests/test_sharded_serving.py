@@ -12,7 +12,11 @@ the paged cache layout (DESIGN.md §3.8) at tp=2 on a shared-prefix workload:
 paged@tp2 with radix prefix hits must equal dense single-device, token-exact.
 One speculative case (DESIGN.md §3.9) then serves speculate=4 draft windows
 through the sharded paged fused-int8 path and must equal single-device
-non-speculative decode. The same subprocess pins the row-parallel
+non-speculative decode. Expert-parallel MoE serving (DESIGN.md §3.13) then
+serves granite-moe / llama4-scout fused-int8 under an ``expert`` mesh axis —
+pure ep=2 and composed tp2×ep2 — where the stacked ``(E, ...)`` expert trees
+shard over whole experts, the router stays replicated, and the emitted tokens
+must equal single-device. The same subprocess pins the row-parallel
 int32-accumulator ordering (qlinear ref path bitwise vs single-device: the
 cross-shard reduction must happen on integer values before the f32 dequant
 multiply — hints.constrain_gemm_acc).
@@ -190,6 +194,41 @@ CODE = textwrap.dedent("""
           flush=True)
     if not ok:
         fails.append(("chunked-tp2",))
+
+    # Expert-parallel MoE serving (DESIGN.md §3.13): a mesh with an "expert"
+    # axis shards the stacked (E, ...) int8 expert trees over whole experts
+    # (planner moe_mode "expert_axis") with the router replicated, so every
+    # expert's int32 GEMM stays shard-local and EP fused-int8 serving is
+    # token-exact vs single-device — at pure ep=2 and composed tp=2 x ep=2.
+    for moe_name in ("granite-moe-3b-a800m", "llama4-scout-17b-a16e"):
+        mcfg = dataclasses.replace(get(moe_name, smoke=True), dtype="float32")
+        mparams = M.init_params(jax.random.PRNGKey(1), mcfg)
+        mq = quantize_tree(mparams, ql.W8A8_INT8)
+        mprompts = [rng.integers(1, mcfg.vocab, size=n).astype(np.int32)
+                    for n in LENS]
+
+        def serve_moe(mesh):
+            eng = E.ServeEngine(mcfg, mq, batch_size=2, max_len=32,
+                                quant=ql.W8A8_INT8, path="fused-int8",
+                                kv_cache="int8", mesh=mesh)
+            if mesh is not None:
+                assert eng.plan.moe_mode == "expert_axis", eng.plan
+                assert eng.plan.ep == 2
+            eng.submit([x.copy() for x in mprompts], max_new=list(MAX_NEW))
+            done = eng.run()
+            assert eng.counters["mid_decode_admissions"] > 0
+            return {r.rid: r.out for r in done}
+
+        moe_base = serve_moe(None)
+        for tag, mesh in (("ep2", make_debug_mesh(4, 1, 2)),
+                          ("tp2xep2", make_debug_mesh(2, 2, 2))):
+            got = serve_moe(mesh)
+            ok = got == moe_base
+            print(f"moe {moe_name} {tag} fused-int8/int8: "
+                  f"{'OK' if ok else 'MISMATCH ' + repr((got, moe_base))}",
+                  flush=True)
+            if not ok:
+                fails.append(("moe", moe_name, tag))
 
     # row-parallel int32-accumulator ordering (ref backend, bitwise)
     mesh = make_debug_mesh(4, 2)
